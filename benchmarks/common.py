@@ -1,0 +1,105 @@
+"""Shared benchmark machinery: graph loading, closed-loop drivers,
+latency stats.  All numbers are *simulated* seconds (deterministic)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def save_result(name: str, payload: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def load_weaver_graph(w, edges: List[Tuple[str, str]], chunk: int = 128):
+    vertices = sorted({v for e in edges for v in e})
+    for i in range(0, len(vertices), chunk):
+        tx = w.begin_tx()
+        for v in vertices[i:i + chunk]:
+            tx.create_vertex(v)
+        r = w.run_tx(tx)
+        assert r.ok, r.error
+    for i in range(0, len(edges), chunk):
+        tx = w.begin_tx()
+        for s, d in edges[i:i + chunk]:
+            tx.create_edge(s, d)
+        r = w.run_tx(tx)
+        assert r.ok, r.error
+    return vertices
+
+
+def stats(latencies: List[float]) -> Dict[str, float]:
+    if not latencies:
+        return {"n": 0}
+    a = np.asarray(latencies)
+    return {
+        "n": int(a.size),
+        "mean_ms": float(a.mean() * 1e3),
+        "p50_ms": float(np.percentile(a, 50) * 1e3),
+        "p90_ms": float(np.percentile(a, 90) * 1e3),
+        "p99_ms": float(np.percentile(a, 99) * 1e3),
+        "max_ms": float(a.max() * 1e3),
+    }
+
+
+class ClosedLoopDriver:
+    """N concurrent clients; each issues the next request on completion.
+
+    ``issue(client_id, req_index, on_done)`` must submit one request and
+    arrange for ``on_done(latency)`` to fire at completion.
+    """
+
+    def __init__(self, sim, n_clients: int, n_requests: int,
+                 issue: Callable[[int, int, Callable], None]):
+        self.sim = sim
+        self.n_clients = n_clients
+        self.n_requests = n_requests
+        self.issue = issue
+        self.completed = 0
+        self.issued = 0
+        self.latencies: List[float] = []
+        self.t_start: Optional[float] = None
+        self.t_end: Optional[float] = None
+
+    def run(self, timeout: float = 300.0) -> Dict:
+        self.t_start = self.sim.now
+
+        def next_req(cid: int) -> None:
+            if self.issued >= self.n_requests:
+                return
+            idx = self.issued
+            self.issued += 1
+
+            def done(latency: float) -> None:
+                self.completed += 1
+                self.latencies.append(latency)
+                if self.completed >= self.n_requests:
+                    self.t_end = self.sim.now
+                    return
+                next_req(cid)
+
+            self.issue(cid, idx, done)
+
+        for c in range(self.n_clients):
+            next_req(c)
+        deadline = self.sim.now + timeout
+        while (self.completed < self.n_requests and self.sim.pending()
+               and self.sim.now < deadline):
+            self.sim.run(until=min(deadline, self.sim.now + 50e-3))
+        if self.t_end is None:
+            self.t_end = self.sim.now
+        dt = max(self.t_end - self.t_start, 1e-9)
+        return {
+            "completed": self.completed,
+            "duration_s": dt,
+            "throughput_per_s": self.completed / dt,
+            **stats(self.latencies),
+        }

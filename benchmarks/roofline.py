@@ -1,0 +1,80 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-cell roofline
+table (compute / memory / collective terms, dominant bottleneck, useful-
+flops ratio).  Reads results/dryrun/*.json produced by
+``python -m repro.launch.dryrun``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Dict, List
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_cells(variant: str = "baseline") -> List[dict]:
+    cells = []
+    if not DRYRUN_DIR.is_dir():
+        return cells
+    for fn in sorted(DRYRUN_DIR.glob(f"*__{variant}.json")):
+        cells.append(json.loads(fn.read_text()))
+    return cells
+
+
+def table(cells: List[dict]) -> List[dict]:
+    rows = []
+    for c in cells:
+        if c.get("status") == "skipped":
+            rows.append({"cell": f"{c['arch']}/{c['shape']}/{c['mesh']}",
+                         "status": "SKIP", "why": c.get("skip_reason", "")})
+            continue
+        if c.get("status") != "ok":
+            rows.append({"cell": f"{c['arch']}/{c['shape']}/{c['mesh']}",
+                         "status": "FAIL", "why": c.get("error", "")})
+            continue
+        r = c["roofline"]
+        rows.append({
+            "cell": f"{c['arch']}/{c['shape']}/{c['mesh']}",
+            "status": "ok",
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "bound_s": r["step_s_lower_bound"],
+            "useful_frac": c.get("useful_flops_fraction", 0.0),
+            "mem_GiB": c["memory"]["peak_estimate_bytes"] / 2**30,
+        })
+    return rows
+
+
+def main() -> None:
+    cells = load_cells()
+    rows = table(cells)
+    ok = [r for r in rows if r["status"] == "ok"]
+    print("cell,dominant,compute_ms,memory_ms,collective_ms,bound_ms,"
+          "useful_frac,mem_GiB")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['cell']},{r['status']},,,,,,")
+            continue
+        print(f"{r['cell']},{r['dominant']},{r['compute_s']*1e3:.3f},"
+              f"{r['memory_s']*1e3:.3f},{r['collective_s']*1e3:.3f},"
+              f"{r['bound_s']*1e3:.3f},{r['useful_frac']:.3f},"
+              f"{r['mem_GiB']:.2f}")
+    if ok:
+        from collections import Counter
+        doms = Counter(r["dominant"] for r in ok)
+        print(f"roofline,cells_ok,{len(ok)}")
+        for d, n in sorted(doms.items()):
+            print(f"roofline,dominant_{d},{n}")
+        worst = min((r for r in ok if r["useful_frac"] > 0),
+                    key=lambda r: r["useful_frac"], default=None)
+        if worst:
+            print(f"roofline,worst_useful_frac,{worst['useful_frac']:.3f}"
+                  f" ({worst['cell']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+Prints ``name,metric,value`` CSV lines (simulated time; deterministic).
+
+  block_query    — Fig. 7 / Table 2 (CoinGraph vs relational explorer)
+  social         — Fig. 9 / Fig. 10 (TAO mix, Weaver vs 2PL)
+  traversal      — Fig. 11 (node programs vs BSP sync/async)
+  scalability    — Fig. 12 / Fig. 13 (gatekeeper & shard scaling)
+  coordination   — Fig. 14 (tau sweep: announce vs oracle)
+  roofline       — §Roofline summary from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (block_query, coordination, roofline, scalability,
+                   social, traversal)
+
+    modules = [("block_query", block_query), ("social", social),
+               ("traversal", traversal), ("scalability", scalability),
+               ("coordination", coordination), ("roofline", roofline)]
+    t00 = time.time()
+    for name, mod in modules:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness going
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            import traceback
+            traceback.print_exc(limit=3)
+        print(f"# {name} took {time.time()-t0:.1f}s wall", flush=True)
+    print(f"# total {time.time()-t00:.1f}s wall")
+
+
+if __name__ == "__main__":
+    main()

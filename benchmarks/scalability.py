@@ -1,0 +1,97 @@
+"""Fig. 12 + Fig. 13: throughput scaling with gatekeepers and shards.
+
+Fig. 12: vertex-local reads (get_node) bottleneck on gatekeepers ->
+throughput should scale ~linearly in #gatekeepers at fixed shards.
+Fig. 13: local-clustering-coefficient node programs bottleneck on shard
+work -> throughput should scale ~linearly in #shards at fixed
+gatekeepers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import PAPER_DEPLOYMENT
+from repro.core import Weaver
+from repro.data import synth
+
+from .common import ClosedLoopDriver, load_weaver_graph, save_result
+
+
+def _boot(n_gk: int, n_shards: int, n_users: int, seed: int,
+          avg_degree: int = 5, dense_users: int = 0):
+    cfg = dataclasses.replace(PAPER_DEPLOYMENT, n_gatekeepers=n_gk,
+                              n_shards=n_shards, seed=seed)
+    w = Weaver(cfg)
+    rng = np.random.default_rng(seed)
+    edges = synth.social_graph(rng, dense_users or n_users,
+                               avg_degree=avg_degree)
+    vertices = load_weaver_graph(w, edges)
+    return w, vertices, rng
+
+
+def _throughput(w, vertices, rng, prog: str, n_requests: int,
+                n_clients: int) -> float:
+    def issue(cid, idx, done):
+        v = vertices[int(rng.integers(len(vertices)))]
+        t0 = w.sim.now
+        w.submit_program(prog, [(v, {"phase": 0} if prog == "clustering"
+                                 else None)],
+                         lambda r, s, l: done(w.sim.now - t0))
+
+    drv = ClosedLoopDriver(w.sim, n_clients, n_requests, issue)
+    res = drv.run(timeout=600.0)
+    return res["throughput_per_s"]
+
+
+def run(n_users: int = 200, n_requests: int = 2500, n_clients: int = 256,
+        seed: int = 0) -> Dict:
+    # Fig. 12: vertex-local reads, gatekeeper-CPU-bound (many clients)
+    gk_scaling = []
+    for n_gk in (1, 2, 4, 6):
+        w, vertices, rng = _boot(n_gk, 4, n_users, seed)
+        tput = _throughput(w, vertices, rng, "get_node", n_requests,
+                           n_clients)
+        gk_scaling.append({"n_gatekeepers": n_gk, "throughput": tput})
+
+    # Fig. 13: 1-hop clustering coefficient, shard-CPU-bound (denser graph)
+    shard_scaling = []
+    for n_sh in (2, 4, 8):
+        w, vertices, rng = _boot(3, n_sh, n_users, seed,
+                                 avg_degree=20, dense_users=500)
+        tput = _throughput(w, vertices, rng, "clustering",
+                           n_requests // 3, n_clients)
+        shard_scaling.append({"n_shards": n_sh, "throughput": tput})
+
+    def ratio(rows, key):
+        return rows[-1]["throughput"] / max(rows[0]["throughput"], 1e-9)
+
+    out = {
+        "gatekeeper_scaling": gk_scaling,
+        "shard_scaling": shard_scaling,
+        "gk_speedup_1_to_6": ratio(gk_scaling, "n_gatekeepers"),
+        "shard_speedup_2_to_8": ratio(shard_scaling, "n_shards"),
+        "paper_claim": "linear scaling in both dimensions (Figs 12-13)",
+    }
+    save_result("scalability", out)
+    return out
+
+
+def main() -> None:
+    out = run()
+    for row in out["gatekeeper_scaling"]:
+        print(f"scalability,gk{row['n_gatekeepers']}_tput,"
+              f"{row['throughput']:.0f}")
+    for row in out["shard_scaling"]:
+        print(f"scalability,shard{row['n_shards']}_tput,"
+              f"{row['throughput']:.0f}")
+    print(f"scalability,gk_speedup_1to6,{out['gk_speedup_1_to_6']:.2f}")
+    print(f"scalability,shard_speedup_2to8,"
+          f"{out['shard_speedup_2_to_8']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

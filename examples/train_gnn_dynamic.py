@@ -1,0 +1,64 @@
+"""Train a GIN on a LIVE Weaver graph: writers mutate the graph while the
+trainer pulls snapshot-consistent minibatches at refinable timestamps —
+the paper's long-read/concurrent-write isolation as a training feature.
+
+    PYTHONPATH=src python examples/train_gnn_dynamic.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import Weaver, WeaverConfig
+from repro.data.pipeline import DynamicGraphPipeline
+from repro.models import gnn
+from repro.optim import AdamWConfig, adamw, make_train_step
+
+# boot a store and seed a graph
+w = Weaver(WeaverConfig(n_gatekeepers=2, n_shards=3, seed=3))
+tx = w.begin_tx()
+for i in range(24):
+    tx.create_vertex(f"v{i}")
+rng = np.random.default_rng(0)
+for _ in range(60):
+    a, b = rng.integers(0, 24, 2)
+    if a != b:
+        tx.create_edge(f"v{a}", f"v{b}")
+assert w.run_tx(tx).ok
+
+cfg = dataclasses.replace(get_arch("gin-tu").config, n_layers=2,
+                          d_hidden=16, d_feat=8, n_classes=3)
+pipe = DynamicGraphPipeline(w, d_feat=8, n_classes=3, pad_nodes=64,
+                            pad_edges=256)
+
+counter = {"i": 24}
+def writer(wv):
+    """Concurrent mutator: adds a vertex + edge between batches."""
+    tx = wv.begin_tx()
+    vid = tx.create_vertex(f"v{counter['i']}")
+    tx.create_edge(vid, f"v{counter['i'] % 24}")
+    counter["i"] += 1
+    assert wv.run_tx(tx).ok
+
+params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+step = jax.jit(make_train_step(lambda p, b: gnn.gnn_loss(p, b, cfg),
+                               AdamWConfig(lr=1e-2, warmup_steps=2,
+                                           total_steps=30)))
+opt = adamw.init(params)
+batches = pipe.batches(mutate_between=writer)
+for i in range(30):
+    b = next(batches)
+    ng = b.pop("n_graphs")
+    b = {k: np.asarray(v) for k, v in b.items()}
+    b["n_graphs"] = ng
+    params, opt, m = step(params, opt, b)
+    if (i + 1) % 10 == 0:
+        live = int(b["label_mask"].sum())
+        print(f"step {i+1:3d}  loss {float(m['loss']):.4f}  "
+              f"(snapshot had {live} live nodes)")
+print("done — every batch was a consistent snapshot while 30 writers "
+      "committed concurrently")

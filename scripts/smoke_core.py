@@ -1,0 +1,61 @@
+"""Quick manual smoke of the Weaver core (not a pytest test)."""
+import sys
+sys.path.insert(0, "src")
+
+from repro.core import Weaver, WeaverConfig
+
+w = Weaver(WeaverConfig(n_gatekeepers=2, n_shards=3, seed=1))
+
+# build a small graph transactionally
+tx = w.begin_tx()
+a = tx.create_vertex("a")
+b = tx.create_vertex("b")
+c = tx.create_vertex("c")
+e1 = tx.create_edge("a", "b")
+tx.set_edge_prop(e1, "color", "red")
+e2 = tx.create_edge("b", "c")
+r = w.run_tx(tx)
+print("tx1:", r)
+assert r.ok, r.error
+
+tx2 = w.begin_tx()
+tx2.create_edge("a", "c")
+r2 = w.run_tx(tx2)
+print("tx2:", r2)
+assert r2.ok
+
+# read
+print("read a:", w.read_vertex("a"))
+
+# node programs
+res, stamp, lat = w.run_program("traverse", [("a", {"depth": 0})])
+print("traverse from a:", res, "latency", lat)
+assert res == ["a", "b", "c"], res
+
+res, _, _ = w.run_program("reachable", [("c", {"target": "a"})])
+print("reachable c->a:", res)
+assert res is False
+
+res, _, _ = w.run_program("count_edges", [("a", None)])
+print("count_edges(a):", res)
+assert res == 2
+
+# delete both edges into c and re-check reachability
+tx3 = w.begin_tx()
+tx3.delete_edge("b", e2.eid)
+r3 = w.run_tx(tx3)
+assert r3.ok
+res, _, _ = w.run_program("traverse", [("a", {"depth": 0})])
+print("traverse after delete b->c:", res)
+assert res == ["a", "b", "c"], res   # still reachable via a->c (tx2)
+a_edges = w.read_vertex("a")["edges"]
+eid_ac = [eid for eid, dst in a_edges.items() if dst == "c"][0]
+tx4 = w.begin_tx()
+tx4.delete_edge("a", eid_ac)
+assert w.run_tx(tx4).ok
+res, _, _ = w.run_program("traverse", [("a", {"depth": 0})])
+print("traverse after delete a->c:", res)
+assert res == ["a", "b"], res
+
+print("counters:", {k: v for k, v in w.counters().items() if v})
+print("OK")

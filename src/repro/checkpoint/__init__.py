@@ -1,0 +1,3 @@
+from .mvckpt import CheckpointInfo, MVCheckpointStore
+
+__all__ = ["CheckpointInfo", "MVCheckpointStore"]

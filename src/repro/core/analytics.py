@@ -1,0 +1,275 @@
+"""JAX data-plane bridge: multi-version snapshots -> arrays -> traversals.
+
+This is the TPU-native adaptation of Weaver's node-program execution
+(DESIGN.md §3).  The control plane (shards) owns the multi-version graph;
+the data plane materializes a *snapshot at a refinable timestamp* as flat
+arrays and runs traversal node programs as frontier message-passing
+(`lax.while_loop` + segment reductions) — the same scatter-gather regime
+as the assigned GNN architectures, so the Pallas kernels
+(`repro.kernels.mv_visibility`, `repro.kernels.segment_mp`) serve both.
+
+Visibility follows :func:`repro.core.clock.visibility_mask`; stamps that
+are truly concurrent with the query stamp (rare: the query stamp is
+normally issued after the writes committed) are refined through the
+timeline oracle exactly like the shard path would.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import clock
+from .clock import Order, Stamp, compare
+from .oracle import KIND_PROG, KIND_TX
+
+INF = np.int32(2**31 - 1)
+
+
+@dataclass
+class GraphArrays:
+    """A timestamp-consistent snapshot in array form."""
+
+    vids: List[str]                  # index -> vertex id
+    index: dict                      # vertex id -> index
+    edge_src: np.ndarray             # (E,) int32
+    edge_dst: np.ndarray             # (E,) int32
+    n_nodes: int
+
+    # raw (pre-filter) stamp rows, for kernel-level visibility filtering
+    edge_create: Optional[np.ndarray] = None   # (E_raw, G+1) int32
+    edge_delete: Optional[np.ndarray] = None
+    raw_src: Optional[np.ndarray] = None
+    raw_dst: Optional[np.ndarray] = None
+
+
+def snapshot_arrays(weaver, at: Stamp, refine_concurrent: bool = True,
+                    keep_raw: bool = False) -> GraphArrays:
+    """Materialize the snapshot at ``at`` from every shard partition."""
+    n_gk = weaver.cfg.n_gatekeepers
+    oracle = weaver.oracle.oracle
+
+    def _refine(a: Stamp, b: Stamp) -> Order:
+        if not refine_concurrent:
+            # conservative defaults (see clock.visibility_mask_np)
+            return Order.AFTER
+        chain = oracle.order_events([a, b], [KIND_TX, KIND_PROG])
+        weaver.sim.counters.oracle_calls += 1
+        return Order.BEFORE if chain[0] == a.key() else Order.AFTER
+
+    def _vis(create_ts: Stamp, delete_ts: Optional[Stamp]) -> bool:
+        o = compare(create_ts, at)
+        if o is Order.CONCURRENT:
+            o = _refine(create_ts, at)
+        if o is not Order.BEFORE:
+            return False
+        if delete_ts is not None:
+            o = compare(delete_ts, at)
+            if o is Order.CONCURRENT:
+                o = _refine(delete_ts, at)
+            if o is Order.BEFORE:
+                return False
+        return True
+
+    vids: List[str] = []
+    index: dict = {}
+    edges: List[Tuple[str, str]] = []
+    raw: List[Tuple[str, str, Stamp, Optional[Stamp]]] = []
+    for sh in weaver.shards:
+        if not sh.alive:
+            continue
+        for vid, v in sh.partition.vertices.items():
+            if _vis(v.create_ts, v.delete_ts):
+                if vid not in index:
+                    index[vid] = len(vids)
+                    vids.append(vid)
+    for sh in weaver.shards:
+        if not sh.alive:
+            continue
+        for vid, v in sh.partition.vertices.items():
+            if vid not in index:
+                continue
+            for e in v.out_edges.values():
+                if keep_raw:
+                    raw.append((vid, e.dst, e.create_ts, e.delete_ts))
+                if e.dst in index and _vis(e.create_ts, e.delete_ts):
+                    edges.append((vid, e.dst))
+
+    src = np.asarray([index[s] for s, _ in edges], dtype=np.int32)
+    dst = np.asarray([index[d] for _, d in edges], dtype=np.int32)
+    ga = GraphArrays(vids=vids, index=index, edge_src=src, edge_dst=dst,
+                     n_nodes=len(vids))
+    if keep_raw:
+        keep = [(s, d, c, x) for (s, d, c, x) in raw
+                if s in index and d in index]
+        ga.raw_src = np.asarray([index[s] for s, _, _, _ in keep], np.int32)
+        ga.raw_dst = np.asarray([index[d] for _, d, _, _ in keep], np.int32)
+        ga.edge_create = clock.pack_many([c for _, _, c, _ in keep], n_gk)
+        ga.edge_delete = clock.pack_many([x for _, _, _, x in keep], n_gk)
+    return ga
+
+
+# ---------------------------------------------------------------------------
+# Frontier node programs as pure JAX (jit-able, shardable).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_nodes", "max_iters"))
+def bfs_levels(edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+               n_nodes: int, sources: jnp.ndarray,
+               max_iters: Optional[int] = None) -> jnp.ndarray:
+    """BFS level per node (INF = unreachable) via frontier relaxation."""
+    if max_iters is None:
+        max_iters = n_nodes
+    dist0 = jnp.full((n_nodes,), INF, dtype=jnp.int32)
+    dist0 = dist0.at[sources].set(0)
+
+    def cond(state):
+        _, i, changed = state
+        return jnp.logical_and(changed, i < max_iters)
+
+    def body(state):
+        dist, i, _ = state
+        d_src = dist[edge_src]
+        cand = jnp.where(d_src < INF, d_src + 1, INF)
+        relaxed = jax.ops.segment_min(cand, edge_dst,
+                                      num_segments=n_nodes,
+                                      indices_are_sorted=False)
+        nd = jnp.minimum(dist, relaxed)
+        return nd, i + 1, jnp.any(nd != dist)
+
+    dist, _, _ = jax.lax.while_loop(cond, body, (dist0, jnp.int32(0),
+                                                 jnp.bool_(True)))
+    return dist
+
+
+def reachable(edge_src, edge_dst, n_nodes: int, source: int,
+              target: int) -> bool:
+    lv = bfs_levels(jnp.asarray(edge_src), jnp.asarray(edge_dst), n_nodes,
+                    jnp.asarray([source]))
+    return bool(lv[target] < INF)
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "max_iters"))
+def connected_components(edge_src, edge_dst, n_nodes: int,
+                         max_iters: int = 64) -> jnp.ndarray:
+    """Undirected label propagation (min-label)."""
+    lab0 = jnp.arange(n_nodes, dtype=jnp.int32)
+
+    def cond(state):
+        _, i, changed = state
+        return jnp.logical_and(changed, i < max_iters)
+
+    def body(state):
+        lab, i, _ = state
+        fwd = jax.ops.segment_min(lab[edge_src], edge_dst, num_segments=n_nodes)
+        bwd = jax.ops.segment_min(lab[edge_dst], edge_src, num_segments=n_nodes)
+        nl = jnp.minimum(lab, jnp.minimum(fwd, bwd))
+        return nl, i + 1, jnp.any(nl != lab)
+
+    lab, _, _ = jax.lax.while_loop(cond, body, (lab0, jnp.int32(0),
+                                                jnp.bool_(True)))
+    return lab
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "n_iters"))
+def pagerank(edge_src, edge_dst, n_nodes: int, n_iters: int = 20,
+             damping: float = 0.85) -> jnp.ndarray:
+    deg = jax.ops.segment_sum(jnp.ones_like(edge_src, dtype=jnp.float32),
+                              edge_src, num_segments=n_nodes)
+    deg = jnp.maximum(deg, 1.0)
+    pr0 = jnp.full((n_nodes,), 1.0 / n_nodes, dtype=jnp.float32)
+
+    def body(_, pr):
+        contrib = pr[edge_src] / deg[edge_src]
+        agg = jax.ops.segment_sum(contrib, edge_dst, num_segments=n_nodes)
+        return (1.0 - damping) / n_nodes + damping * agg
+
+    return jax.lax.fori_loop(0, n_iters, body, pr0)
+
+
+@partial(jax.jit, static_argnames=("n_nodes",))
+def sssp_weighted(edge_src, edge_dst, weights, n_nodes: int,
+                  sources) -> jnp.ndarray:
+    """Bellman-Ford style label-correcting shortest path."""
+    big = jnp.float32(3.4e38)
+    dist0 = jnp.full((n_nodes,), big).at[sources].set(0.0)
+
+    def body(_, dist):
+        cand = dist[edge_src] + weights
+        relaxed = jax.ops.segment_min(cand, edge_dst, num_segments=n_nodes)
+        return jnp.minimum(dist, relaxed)
+
+    return jax.lax.fori_loop(0, n_nodes - 1 if n_nodes > 1 else 1, body, dist0)
+
+
+def clustering_coefficients_np(edge_src: np.ndarray, edge_dst: np.ndarray,
+                               n_nodes: int) -> np.ndarray:
+    """Exact local clustering coefficient over out-neighbourhoods (matches
+    the ``clustering`` node program).  numpy set-based; used for large
+    benchmark graphs where the padded-JAX version would blow memory."""
+    nbrs = [set() for _ in range(n_nodes)]
+    for s, d in zip(edge_src.tolist(), edge_dst.tolist()):
+        if s != d:
+            nbrs[s].add(d)
+    out = np.zeros(n_nodes, dtype=np.float64)
+    for u in range(n_nodes):
+        k = len(nbrs[u])
+        if k < 2:
+            continue
+        links = 0
+        for v in nbrs[u]:
+            links += len(nbrs[v] & nbrs[u])
+        out[u] = links / (k * (k - 1))
+    return out
+
+
+def clustering_coefficients_jax(edge_src, edge_dst, n_nodes: int,
+                                max_deg: int) -> jnp.ndarray:
+    """Padded-CSR local clustering coefficient (vectorized intersections).
+
+    Rows are the sorted out-neighbour lists padded with ``n_nodes``;
+    membership tests are `searchsorted` over the padded table.
+    """
+    src = np.asarray(edge_src)
+    dst = np.asarray(edge_dst)
+    table = np.full((n_nodes, max_deg), n_nodes, dtype=np.int32)
+    counts = np.zeros(n_nodes, dtype=np.int32)
+    order = np.argsort(src, kind="stable")
+    for e in order:
+        u, v = int(src[e]), int(dst[e])
+        if u == v or counts[u] >= max_deg:
+            continue
+        table[u, counts[u]] = v
+        counts[u] += 1
+    table.sort(axis=1)
+    tbl = jnp.asarray(table)
+    cnt = jnp.asarray(counts)
+
+    def per_vertex(u):
+        row = tbl[u]                      # (max_deg,) sorted, padded
+        k = cnt[u]
+        def per_nbr(v):
+            vrow = tbl[v]
+            pos = jnp.searchsorted(vrow, row)
+            pos = jnp.clip(pos, 0, max_deg - 1)
+            hit = (vrow[pos] == row) & (row < n_nodes) & (v < n_nodes)
+            return jnp.sum(hit.astype(jnp.int32))
+        links = jnp.sum(jax.vmap(per_nbr)(row))
+        denom = jnp.maximum(k * (k - 1), 1)
+        return jnp.where(k >= 2, links.astype(jnp.float32) / denom, 0.0)
+
+    return jax.vmap(per_vertex)(jnp.arange(n_nodes))
+
+
+def visible_edges_at(ga: GraphArrays, at: Stamp, n_gk: int):
+    """Batched snapshot filter over the raw edge set (kernel-checkable)."""
+    assert ga.edge_create is not None, "snapshot_arrays(keep_raw=True) needed"
+    q = clock.pack(at, n_gk)
+    mask = clock.visibility_mask_np(ga.edge_create, ga.edge_delete, q)
+    return ga.raw_src[mask], ga.raw_dst[mask], mask

@@ -1,0 +1,264 @@
+"""Gatekeeper servers (paper §3.3, §4.1).
+
+Responsibilities:
+* assign a refinable timestamp (vector clock + epoch) to every incoming
+  transaction and node program;
+* exchange clock *announce* messages with the other gatekeepers every
+  ``tau`` seconds (the proactive ordering stage);
+* commit read-write transactions to the backing store *before* forwarding
+  them to shard servers, enforcing ``T_upd ≺ T_tx`` with per-vertex
+  last-update stamps — retrying with a fresh stamp on ``T_tx ≺ T_upd`` and
+  refining through the timeline oracle on concurrency;
+* send NOP transactions to every shard every ``tau_nop`` seconds so shard
+  queues are never empty (progress under light load);
+* forward node programs (stamped, unexecuted) to the shards owning their
+  start vertices.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .clock import Order, Stamp, compare, merge
+from .oracle import KIND_TX, CycleError, OracleServer
+from .simulation import PeriodicTimer, Simulator
+from .store import BackingStore
+
+
+@dataclass
+class CostModel:
+    """Per-operation CPU service times (seconds) for the simulated servers.
+
+    Calibrated to the paper's hardware era (2.5 GHz Xeon, in-memory ops).
+    """
+
+    gk_stamp: float = 20.0e-6          # per-request gatekeeper CPU (parse,
+                                       # stamp, validate route, forward) —
+                                       # Fig. 12 implies ~40-50k req/s/GK
+    store_op: float = 4.0e-6           # one KV op inside a store tx
+    shard_op: float = 2.0e-6           # apply one write at a shard
+    prog_vertex: float = 1.5e-6        # node-program visit, per vertex
+    prog_revisit: float = 0.3e-6       # re-delivery to a visited vertex
+    prog_edge: float = 0.15e-6         # node-program visit, per edge scanned
+    bsp_update: float = 3.0e-6         # GraphLab engine overhead per vertex
+                                       # update (scheduler + state commit;
+                                       # OSDI'12 reports ~0.1-0.3M
+                                       # updates/s/machine on such graphs)
+    oracle_rtt: float = 350e-6         # shard->oracle->shard incl. Paxos
+    lock_op: float = 1.0e-6            # 2PL baseline: acquire/release
+
+
+MAX_RETRIES = 16
+
+
+class Gatekeeper:
+    def __init__(self, sim: Simulator, gid: int, n_gk: int,
+                 store: BackingStore, oracle: OracleServer,
+                 cost: CostModel, tau: float, tau_nop: float):
+        self.sim = sim
+        sim.register(self)
+        self.gid = gid
+        self.n_gk = n_gk
+        self.store = store
+        self.oracle = oracle
+        self.cost = cost
+        self.clock: List[int] = [0] * n_gk
+        self.epoch = 0
+        self.peers: List["Gatekeeper"] = []
+        self.shards: List[object] = []
+        self._seq: Dict[int, int] = {}
+        self.paused = False
+        self._pause_buffer: List[Tuple] = []
+        self.alive = True
+        self.tau = tau
+        self.tau_nop = tau_nop
+        self._timers: List[PeriodicTimer] = []
+        self._busy_until = 0.0
+
+    # -- wiring ---------------------------------------------------------------
+    def start(self, peers: List["Gatekeeper"], shards: List[object]) -> None:
+        self.peers = [p for p in peers if p is not self]
+        self.shards = shards
+        self._seq = {i: 0 for i in range(len(shards))}
+        stagger = 1e-6 * (self.gid + 1)
+        if self.tau > 0:
+            self._timers.append(PeriodicTimer(
+                self.sim, self.tau, self._announce, start_delay=self.tau + stagger))
+        if self.tau_nop > 0:
+            self._timers.append(PeriodicTimer(
+                self.sim, self.tau_nop, self._send_nops,
+                start_delay=self.tau_nop + stagger))
+
+    def stop(self) -> None:
+        self.alive = False
+        for t in self._timers:
+            t.cancel()
+
+    def _serve(self, service: float, fn, *args) -> None:
+        """Serialize request handling: the gatekeeper is a single-threaded
+        server with ``gk_stamp`` CPU per request (this is what makes
+        Fig. 12's gatekeeper-count scaling measurable)."""
+        start = max(self.sim.now, self._busy_until)
+        self._busy_until = start + service
+        self.sim.schedule(self._busy_until - self.sim.now, fn, *args)
+
+    # -- clocks ----------------------------------------------------------------
+    def _tick(self) -> Stamp:
+        self.clock[self.gid] += 1
+        return Stamp(self.epoch, tuple(self.clock), self.gid, self.clock[self.gid])
+
+    def _announce(self) -> None:
+        if not self.alive:
+            return
+        for p in self.peers:
+            self.sim.counters.announce_messages += 1
+            self.sim.send(self, p, p.on_announce, self.epoch, tuple(self.clock),
+                          nbytes=8 * self.n_gk)
+
+    def on_announce(self, epoch: int, clock: Tuple[int, ...]) -> None:
+        if not self.alive or epoch != self.epoch:
+            return
+        self.clock = list(merge(self.clock, clock))
+
+    def _send_nops(self) -> None:
+        if not self.alive or self.paused:
+            return
+        stamp = self._tick()
+        for sid, shard in enumerate(self.shards):
+            self._seq[sid] += 1
+            self.sim.counters.nop_messages += 1
+            self.sim.send(self, shard, shard.enqueue, self.gid, self._seq[sid],
+                          stamp, "nop", None, nbytes=8 * self.n_gk + 16)
+
+    # -- epoch barrier (cluster manager, §4.3) ----------------------------------
+    def pause_for_epoch(self) -> None:
+        self.paused = True
+
+    def enter_epoch(self, epoch: int) -> None:
+        self.epoch = epoch
+        self.clock = [0] * self.n_gk     # restart vector clock in new epoch
+        self._seq = {i: 0 for i in range(len(self.shards))}  # fresh channels
+        self.paused = False
+        buf, self._pause_buffer = self._pause_buffer, []
+        for fn, args in buf:
+            fn(*args)
+
+    # -- transactions (§4.1) -----------------------------------------------------
+    def submit_tx(self, client, ops: List[dict], reply: Callable,
+                  retries: int = 0, t_submit: Optional[float] = None) -> None:
+        if not self.alive:
+            return  # client will time out and resubmit to a backup
+        if self.paused:
+            self._pause_buffer.append((self.submit_tx,
+                                       (client, ops, reply, retries, t_submit)))
+            return
+        if t_submit is None:
+            t_submit = self.sim.now
+
+        def _go() -> None:
+            stamp = self._tick()
+            # one RPC to the backing store carrying the whole transaction
+            nbytes = 64 + 48 * len(ops)
+            self.sim.send(self, self.store,
+                          self._at_store, client, ops, stamp, reply,
+                          retries, t_submit, nbytes=nbytes)
+
+        self._serve(self.cost.gk_stamp, _go)
+
+    def _at_store(self, client, ops, stamp, reply, retries, t_submit) -> None:
+        """Runs at the backing store: validate last-update stamps, then
+        apply atomically.  Returns control to the gatekeeper."""
+        cnt = self.sim.counters
+        # last-update validation over the write set
+        needs_refine: List[Stamp] = []
+        for vid in BackingStore.write_set(ops):
+            upd = self.store.last_update_of(vid)
+            if upd is None:
+                continue
+            o = compare(upd, stamp)
+            if o is Order.AFTER:           # T_tx ≺ T_upd -> retry, fresh stamp
+                cnt.tx_retried += 1
+                if retries + 1 > MAX_RETRIES:
+                    cnt.tx_aborted += 1
+                    self.sim.send(self.store, client, reply, False,
+                                  "too many retries", stamp, nbytes=64)
+                    return
+                self.sim.send(self.store, self, self._resubmit, client, ops,
+                              reply, retries + 1, t_submit, nbytes=64)
+                return
+            if o is Order.CONCURRENT:      # T_upd ≈ T_tx -> refine via oracle
+                needs_refine.append(upd)
+
+        service = self.cost.store_op * max(1, len(ops))
+
+        def _commit() -> None:
+            try:
+                fwd = self.store.apply(ops, stamp)
+            except ValueError as e:        # logical error -> abort, not forwarded
+                cnt.tx_aborted += 1
+                self.sim.send(self.store, client, reply, False, str(e), stamp,
+                              nbytes=64)
+                return
+            cnt.tx_committed += 1
+            # response to client: commit point is the backing store (§4.4 part 2)
+            self.sim.send(self.store, client, reply, True, None, stamp, nbytes=64)
+            # forward per-shard slices
+            by_shard: Dict[int, List[dict]] = {}
+            for sid, op in fwd:
+                by_shard.setdefault(sid, []).append(op)
+            for sid, slice_ops in by_shard.items():
+                self._seq[sid] += 1
+                shard = self.shards[sid]
+                self.sim.send(self, shard, shard.enqueue, self.gid,
+                              self._seq[sid], stamp, "tx", slice_ops,
+                              nbytes=64 + 48 * len(slice_ops))
+
+        if needs_refine:
+            # gatekeeper orders T_upd ≺ T_tx at the timeline oracle
+            cnt.oracle_calls += 1
+            def _refined() -> None:
+                try:
+                    for upd in needs_refine:
+                        self.oracle.oracle.create_event(upd)
+                        self.oracle.oracle.create_event(stamp)
+                        self.oracle.oracle.assert_order(upd.key(), stamp.key())
+                except CycleError:
+                    cnt.tx_retried += 1
+                    self.sim.send(self.store, self, self._resubmit, client, ops,
+                                  reply, retries + 1, t_submit, nbytes=64)
+                    return
+                _commit()
+            self.sim.schedule(self.cost.oracle_rtt + service, _refined)
+        else:
+            self.sim.schedule(service, _commit)
+
+    def _resubmit(self, client, ops, reply, retries, t_submit) -> None:
+        self.submit_tx(client, ops, reply, retries, t_submit)
+
+    # -- node programs (§4.2) ------------------------------------------------------
+    def submit_program(self, coordinator, prog_name: str,
+                       entries: List[Tuple[str, object]], prog_id: int) -> None:
+        if not self.alive:
+            return
+        if self.paused:
+            self._pause_buffer.append((self.submit_program,
+                                       (coordinator, prog_name, entries, prog_id)))
+            return
+        def _go() -> None:
+            stamp = self._tick()
+            by_shard: Dict[int, List[Tuple[str, object]]] = {}
+            for vid, params in entries:
+                sid = self.store.shard_of(vid)
+                if sid is None:
+                    continue
+                by_shard.setdefault(sid, []).append((vid, params))
+            root_ids = [(f"g{self.gid}", i) for i in range(len(by_shard))]
+            coordinator.begin(prog_id, prog_name, stamp, root_ids)
+            for (sid, ent), rid in zip(by_shard.items(), root_ids):
+                shard = self.shards[sid]
+                self.sim.send(self, shard, shard.deliver_prog, prog_id, rid,
+                              prog_name, stamp, ent, coordinator,
+                              nbytes=64 + 48 * len(ent))
+
+        self._serve(self.cost.gk_stamp, _go)

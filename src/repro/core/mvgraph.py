@@ -1,0 +1,186 @@
+"""In-memory multi-version graph partition held by a shard server (§4.1).
+
+Every write marks the object with the refinable timestamp of its
+transaction instead of mutating in place:
+
+* a vertex/edge has ``create_ts`` and (optionally) ``delete_ts``;
+* a property is a list of timestamped versions per key; reads at stamp T
+  return the latest version visible at T.
+
+Visibility at stamp ``T`` (for snapshot reads by node programs, §4.2):
+``create_ts ≺ T  and  not (delete_ts ≺ T)``.  If a relevant stamp is
+*concurrent* with T, the caller (shard server) must refine through the
+timeline oracle — this module reports concurrency instead of guessing.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from .clock import Order, Stamp, compare
+
+
+@dataclass
+class Versioned:
+    value: object
+    ts: Stamp
+
+
+@dataclass
+class MVEdge:
+    eid: int
+    src: str
+    dst: str
+    create_ts: Stamp
+    delete_ts: Optional[Stamp] = None
+    props: Dict[str, List[Versioned]] = field(default_factory=dict)
+
+
+@dataclass
+class MVVertex:
+    vid: str
+    create_ts: Stamp
+    delete_ts: Optional[Stamp] = None
+    out_edges: Dict[int, MVEdge] = field(default_factory=dict)
+    props: Dict[str, List[Versioned]] = field(default_factory=dict)
+
+
+class ConcurrencyUnresolved(Exception):
+    """A visibility decision needs the timeline oracle."""
+
+    def __init__(self, a: Stamp, b: Stamp):
+        super().__init__(f"concurrent stamps {a} vs {b}")
+        self.pair = (a, b)
+
+
+def _before(a: Stamp, b: Stamp,
+            refine: Optional[Callable[[Stamp, Stamp], Order]] = None) -> bool:
+    o = compare(a, b)
+    if o is Order.CONCURRENT:
+        if refine is None:
+            raise ConcurrencyUnresolved(a, b)
+        o = refine(a, b)
+    return o is Order.BEFORE
+
+
+def visible(create_ts: Stamp, delete_ts: Optional[Stamp], at: Stamp,
+            refine: Optional[Callable[[Stamp, Stamp], Order]] = None) -> bool:
+    if not _before(create_ts, at, refine):
+        return False
+    if delete_ts is not None and _before(delete_ts, at, refine):
+        return False
+    return True
+
+
+class MVGraphPartition:
+    """One shard's partition of the multi-version graph."""
+
+    def __init__(self) -> None:
+        self.vertices: Dict[str, MVVertex] = {}
+        self._eid = 0
+
+    # ---- write path (called by shard at a transaction's stamp) ----------
+    def create_vertex(self, vid: str, ts: Stamp) -> MVVertex:
+        v = self.vertices.get(vid)
+        if v is not None and v.delete_ts is None:
+            # re-create of live vertex: id reuse is an application error
+            raise KeyError(f"vertex {vid} already exists")
+        v = MVVertex(vid, create_ts=ts)
+        self.vertices[vid] = v
+        return v
+
+    def delete_vertex(self, vid: str, ts: Stamp) -> None:
+        v = self.vertices[vid]
+        v.delete_ts = ts
+        for e in v.out_edges.values():
+            if e.delete_ts is None:
+                e.delete_ts = ts
+
+    def create_edge(self, src: str, dst: str, ts: Stamp,
+                    eid: Optional[int] = None) -> MVEdge:
+        v = self.vertices[src]
+        if eid is None:
+            self._eid += 1
+            eid = self._eid
+        e = MVEdge(eid, src, dst, create_ts=ts)
+        v.out_edges[eid] = e
+        return e
+
+    def delete_edge(self, src: str, eid: int, ts: Stamp) -> None:
+        self.vertices[src].out_edges[eid].delete_ts = ts
+
+    def set_vertex_prop(self, vid: str, key: str, value, ts: Stamp) -> None:
+        self.vertices[vid].props.setdefault(key, []).append(Versioned(value, ts))
+
+    def set_edge_prop(self, src: str, eid: int, key: str, value, ts: Stamp) -> None:
+        self.vertices[src].out_edges[eid].props.setdefault(key, []).append(
+            Versioned(value, ts))
+
+    # ---- snapshot read path (node programs at T_prog) --------------------
+    def vertex_at(self, vid: str, at: Stamp, refine=None) -> Optional[MVVertex]:
+        v = self.vertices.get(vid)
+        if v is None or not visible(v.create_ts, v.delete_ts, at, refine):
+            return None
+        return v
+
+    def out_edges_at(self, vid: str, at: Stamp, refine=None) -> List[MVEdge]:
+        v = self.vertex_at(vid, at, refine)
+        if v is None:
+            return []
+        return [e for e in v.out_edges.values()
+                if visible(e.create_ts, e.delete_ts, at, refine)]
+
+    def prop_at(self, versions: List[Versioned], at: Stamp, refine=None):
+        """Latest property version visible at ``at``."""
+        best: Optional[Versioned] = None
+        for ver in versions:
+            if _before(ver.ts, at, refine):
+                if best is None or _before(best.ts, ver.ts, refine):
+                    best = ver
+        return None if best is None else best.value
+
+    def vertex_prop_at(self, vid: str, key: str, at: Stamp, refine=None):
+        v = self.vertex_at(vid, at, refine)
+        if v is None or key not in v.props:
+            return None
+        return self.prop_at(v.props[key], at, refine)
+
+    def edge_prop_at(self, e: MVEdge, key: str, at: Stamp, refine=None):
+        if key not in e.props:
+            return None
+        return self.prop_at(e.props[key], at, refine)
+
+    # ---- GC (paper §4.5) --------------------------------------------------
+    def collect(self, horizon: Stamp) -> int:
+        """Drop versions deleted strictly before ``horizon``."""
+        n = 0
+        dead_v = []
+        for vid, v in self.vertices.items():
+            if v.delete_ts is not None and compare(v.delete_ts, horizon) is Order.BEFORE:
+                dead_v.append(vid)
+                n += 1
+                continue
+            dead_e = [eid for eid, e in v.out_edges.items()
+                      if e.delete_ts is not None
+                      and compare(e.delete_ts, horizon) is Order.BEFORE]
+            for eid in dead_e:
+                del v.out_edges[eid]
+                n += 1
+            for key, versions in list(v.props.items()):
+                if len(versions) > 1:
+                    keep = [ver for i, ver in enumerate(versions)
+                            if i == len(versions) - 1
+                            or not compare(versions[i + 1].ts, horizon) is Order.BEFORE]
+                    n += len(versions) - len(keep)
+                    v.props[key] = keep
+        for vid in dead_v:
+            del self.vertices[vid]
+        return n
+
+    # ---- stats ------------------------------------------------------------
+    def n_live(self) -> Tuple[int, int]:
+        nv = sum(1 for v in self.vertices.values() if v.delete_ts is None)
+        ne = sum(sum(1 for e in v.out_edges.values() if e.delete_ts is None)
+                 for v in self.vertices.values())
+        return nv, ne

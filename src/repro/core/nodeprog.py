@@ -1,0 +1,197 @@
+"""Node programs (paper §2.3, Fig. 3) — traversal-style read-only queries.
+
+A node program is a function ``prog(node, params, ctx)`` executed at a
+vertex against the snapshot at the program's stamp ``T_prog``:
+
+* ``node``   — :class:`NodeView` (vertex id, visible out-edges, visible
+  properties, and the per-query persistent ``prog_state`` dict);
+* ``params`` — the prog_params propagated from the previous hop;
+* ``ctx``    — :class:`ProgContext`: ``ctx.emit(dst_vid, params)`` to
+  scatter to the next hop and ``ctx.output(value)`` to contribute to the
+  query's final result (reduced by the program's ``reduce`` function at
+  the coordinator).
+
+Programs are registered in :data:`REGISTRY` so shards can execute by name
+(the C++ Weaver ships program code to servers; we ship a name).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclass
+class EdgeView:
+    eid: int
+    dst: str
+    _props: Dict[str, object]
+
+    def prop(self, key: str, default=None):
+        return self._props.get(key, default)
+
+
+class NodeView:
+    def __init__(self, vid: str, out_edges, props: Dict[str, object],
+                 prog_state: dict):
+        self.id = vid
+        # ``out_edges`` may be a list or a zero-arg loader (lazy: the
+        # shard charges adjacency-scan cost only on first access)
+        self._edges = out_edges
+        self._props = props
+        self.prog_state = prog_state
+
+    @property
+    def out_edges(self) -> List[EdgeView]:
+        if callable(self._edges):
+            self._edges = self._edges()
+        return self._edges
+
+    def prop(self, key: str, default=None):
+        return self._props.get(key, default)
+
+
+class ProgContext:
+    def __init__(self, at):
+        self.at = at                      # snapshot stamp T_prog
+        self.emits: List[Tuple[str, object]] = []
+        self.outputs: List[object] = []
+
+    def emit(self, dst_vid: str, params=None) -> None:
+        self.emits.append((dst_vid, params))
+
+    def output(self, value) -> None:
+        self.outputs.append(value)
+
+
+@dataclass
+class NodeProgram:
+    name: str
+    fn: Callable[[NodeView, object, ProgContext], None]
+    reduce: Callable[[List[object]], object] = lambda xs: xs
+
+
+REGISTRY: Dict[str, NodeProgram] = {}
+
+
+def register(name: str, reduce: Optional[Callable] = None):
+    def deco(fn):
+        REGISTRY[name] = NodeProgram(name, fn, reduce or (lambda xs: xs))
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Built-in programs used by the paper's workloads.
+# ---------------------------------------------------------------------------
+
+@register("get_node", reduce=lambda xs: xs[0] if xs else None)
+def get_node(node: NodeView, params, ctx: ProgContext) -> None:
+    """TAO-workload vertex read: id + properties + edge count (§5.2/§5.4)."""
+    ctx.output({"id": node.id, "n_edges": len(node.out_edges)})
+
+
+@register("get_edges", reduce=lambda xs: xs[0] if xs else [])
+def get_edges(node: NodeView, params, ctx: ProgContext) -> None:
+    ctx.output([(e.eid, e.dst) for e in node.out_edges])
+
+
+@register("count_edges", reduce=lambda xs: sum(xs))
+def count_edges(node: NodeView, params, ctx: ProgContext) -> None:
+    ctx.output(len(node.out_edges))
+
+
+@register("traverse", reduce=lambda xs: sorted(set(xs)))
+def traverse(node: NodeView, params, ctx: ProgContext) -> None:
+    """BFS traversal along edges carrying ``edge_property`` (paper Fig. 3).
+
+    params = {"edge_property": (key, value) | None, "max_depth": int|None,
+              "depth": int}
+    """
+    if node.prog_state.get("visited"):
+        return
+    node.prog_state["visited"] = True
+    ctx.output(node.id)
+    depth = params.get("depth", 0)
+    maxd = params.get("max_depth")
+    if maxd is not None and depth >= maxd:
+        return
+    want = params.get("edge_property")
+    for e in node.out_edges:
+        if want is None or e.prop(want[0]) == want[1]:
+            ctx.emit(e.dst, dict(params, depth=depth + 1))
+
+
+@register("reachable", reduce=lambda xs: any(xs))
+def reachable(node: NodeView, params, ctx: ProgContext) -> None:
+    """Reachability query (paper §5.3 benchmark)."""
+    if node.id == params["target"]:
+        ctx.output(True)
+        return
+    if node.prog_state.get("visited"):
+        return
+    node.prog_state["visited"] = True
+    for e in node.out_edges:
+        ctx.emit(e.dst, params)
+
+
+@register("block_render", reduce=lambda xs: xs)
+def block_render(node: NodeView, params, ctx: ProgContext) -> None:
+    """CoinGraph block query (§5.1): read the block vertex, then fetch
+    every Bitcoin-transaction vertex it points to (1-hop fan-out)."""
+    if params.get("hop", 0) == 0:
+        for e in node.out_edges:
+            if e.prop("type") == "contains":
+                ctx.emit(e.dst, {"hop": 1})
+    else:
+        ctx.output({"tx": node.id,
+                    "value": node.prop("value"),
+                    "n_out": len(node.out_edges)})
+
+
+@register("clustering", reduce=lambda xs: xs[0] if xs else 0.0)
+def clustering(node: NodeView, params, ctx: ProgContext) -> None:
+    """Local clustering coefficient (§5.4): fan out one hop to collect
+    neighbour adjacency, return to origin to close wedges."""
+    phase = params.get("phase", 0)
+    if phase == 0:
+        nbrs = sorted({e.dst for e in node.out_edges})
+        node.prog_state["nbrs"] = nbrs
+        node.prog_state["replies"] = 0
+        node.prog_state["links"] = 0
+        node.prog_state["origin"] = True
+        if len(nbrs) < 2:
+            ctx.output(0.0)
+            return
+        for v in nbrs:
+            ctx.emit(v, {"phase": 1, "origin": node.id, "nbrs": nbrs})
+    elif phase == 1:
+        mine = {e.dst for e in node.out_edges}
+        hits = sum(1 for v in params["nbrs"] if v != node.id and v in mine)
+        ctx.emit(params["origin"], {"phase": 2, "hits": hits})
+    else:  # phase == 2 — back at the origin, accumulate
+        st = node.prog_state
+        st["links"] = st.get("links", 0) + params["hits"]
+        st["replies"] = st.get("replies", 0) + 1
+        k = len(st.get("nbrs", []))
+        if st["replies"] == k and k >= 2:
+            ctx.output(st["links"] / (k * (k - 1)))
+
+
+@register("sssp", reduce=lambda xs: min(xs) if xs else None)
+def sssp(node: NodeView, params, ctx: ProgContext) -> None:
+    """Hop-bounded shortest path by weight property (label-correcting)."""
+    dist = params.get("dist", 0.0)
+    best = node.prog_state.get("dist")
+    if best is not None and best <= dist:
+        return
+    node.prog_state["dist"] = dist
+    if node.id == params["target"]:
+        ctx.output(dist)
+        return
+    if params.get("depth", 0) >= params.get("max_depth", 16):
+        return
+    for e in node.out_edges:
+        w = e.prop("weight", 1.0)
+        ctx.emit(e.dst, dict(params, dist=dist + w,
+                             depth=params.get("depth", 0) + 1))

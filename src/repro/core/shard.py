@@ -1,0 +1,411 @@
+"""Shard servers (paper §3.2, §4.1, §4.2, Fig. 6).
+
+Each shard owns an in-memory multi-version partition of the graph and
+obeys the refinable-timestamp order:
+
+* one FIFO queue of incoming items per gatekeeper (sequence-numbered);
+* the event loop executes the item with the *lowest* stamp once every
+  queue is non-empty (NOPs guarantee this under light load);
+* mutually concurrent queue heads are submitted to the timeline oracle in
+  a single request; the returned (now committed) order is cached locally —
+  oracle decisions are irreversible and monotonic;
+* node programs wait until their stamp precedes every queue head, then
+  execute against the multi-version snapshot at ``T_prog``; concurrent
+  object stamps encountered during the snapshot read are refined through
+  the oracle (default: program ordered *after* committed writes);
+* programs scatter to other shards by emitting (vertex, params) pairs,
+  grouped per destination shard, with coordinator-side termination
+  counting.
+
+Time model: the shard is a single-threaded server; each item charges a
+service time from :class:`~repro.core.gatekeeper.CostModel`, and each
+*uncached* oracle interaction stalls the loop by ``oracle_rtt``.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .clock import Order, Stamp, compare
+from .gatekeeper import CostModel
+from .mvgraph import MVGraphPartition
+from .nodeprog import REGISTRY, EdgeView, NodeView, ProgContext
+from .oracle import KIND_PROG, KIND_TX, OracleServer
+from .simulation import Simulator
+
+
+@dataclass
+class _QueueItem:
+    stamp: Stamp
+    kind: str          # "tx" | "nop"
+    payload: Optional[List[dict]]
+
+
+class Shard:
+    def __init__(self, sim: Simulator, sid: int, n_gk: int,
+                 oracle: OracleServer, cost: CostModel,
+                 directory: Callable[[str], Optional[int]]):
+        self.sim = sim
+        sim.register(self)
+        self.sid = sid
+        self.n_gk = n_gk
+        self.oracle = oracle
+        self.cost = cost
+        self.directory = directory       # vid -> shard id (cached map; §3.2)
+        self.partition = MVGraphPartition()
+        self.queues: Dict[int, deque] = {g: deque() for g in range(n_gk)}
+        self._expected_seq: Dict[int, int] = {g: 0 for g in range(n_gk)}
+        self._stash: Dict[int, Dict[int, tuple]] = {g: {} for g in range(n_gk)}
+        self.pending_progs: List[tuple] = []
+        self._prog_cleared: Dict[Tuple, set] = {}
+        self.prog_states: Dict[int, Dict[str, dict]] = {}
+        self._finished_progs: set = set()
+        self._order_cache: Dict[Tuple, Order] = {}
+        self.busy = False
+        self.alive = True
+        self.peers: List["Shard"] = []   # indexable by sid
+        self._stall = 0.0
+
+    def start(self, peers: List["Shard"]) -> None:
+        self.peers = peers
+
+    def stop(self) -> None:
+        self.alive = False
+
+    # ------------------------------------------------------------------ enqueue
+    def enqueue(self, gid: int, seq: int, stamp: Stamp, kind: str,
+                payload) -> None:
+        """FIFO channel receive with sequence-number reordering (§4.1)."""
+        if not self.alive:
+            return
+        exp = self._expected_seq[gid]
+        if seq == exp + 1:
+            self.queues[gid].append(_QueueItem(stamp, kind, payload))
+            self._expected_seq[gid] = seq
+            # drain stash
+            stash = self._stash[gid]
+            nxt = seq + 1
+            while nxt in stash:
+                s, k, p = stash.pop(nxt)
+                self.queues[gid].append(_QueueItem(s, k, p))
+                self._expected_seq[gid] = nxt
+                nxt += 1
+        elif seq > exp + 1:
+            self._stash[gid][seq] = (stamp, kind, payload)
+        # duplicate/old -> drop
+        self._kick()
+
+    def deliver_prog(self, prog_id: int, delivery_id, name: str, stamp: Stamp,
+                     entries: List[Tuple[str, object]], coordinator) -> None:
+        if not self.alive:
+            return
+        if prog_id in self._finished_progs:
+            self.sim.send(self, coordinator, coordinator.report, prog_id,
+                          delivery_id, [], [], nbytes=32)
+            return
+        self.pending_progs.append({
+            "prog_id": prog_id, "delivery_id": delivery_id, "name": name,
+            "stamp": stamp, "entries": entries, "coordinator": coordinator,
+            # queue-clearing state is PER PROGRAM per shard (monotone:
+            # once every queue head dominated T_prog, all later arrivals
+            # do too) — so follow-up deliveries of the same program run
+            # immediately instead of re-waiting.
+            "cleared": self._prog_cleared.setdefault(stamp.key(), set()),
+        })
+        self._kick()
+
+    def finish_prog(self, prog_id: int) -> None:
+        """Coordinator broadcast: GC per-query state (§4.5)."""
+        self._finished_progs.add(prog_id)
+        self.prog_states.pop(prog_id, None)
+        if len(self._prog_cleared) > 10_000:
+            self._prog_cleared.clear()
+        if len(self._finished_progs) > 100_000:
+            self._finished_progs.clear()
+
+    # ------------------------------------------------------------------ ordering
+    def _order(self, a: Stamp, b: Stamp, kind_a: int, kind_b: int) -> Order:
+        """Order two stamps, refining through the oracle when concurrent.
+
+        Charges ``oracle_rtt`` stall on cache miss.  Returns BEFORE if a ≺ b.
+        """
+        o = compare(a, b)
+        if o is not Order.CONCURRENT:
+            return o
+        ck = (a.key(), b.key())
+        hit = self._order_cache.get(ck)
+        if hit is not None:
+            self.sim.counters.oracle_cache_hits += 1
+            return hit
+        self.sim.counters.oracle_calls += 1
+        self._stall += self.cost.oracle_rtt
+        chain = self.oracle.oracle.order_events([a, b], [kind_a, kind_b])
+        o = Order.BEFORE if chain[0] == a.key() else Order.AFTER
+        self._order_cache[ck] = o
+        self._order_cache[(b.key(), a.key())] = (
+            Order.AFTER if o is Order.BEFORE else Order.BEFORE)
+        return o
+
+    def _order_heads(self, heads: List[Tuple[int, _QueueItem]]) -> int:
+        """Pick the gatekeeper id whose head executes next."""
+        gid, best = heads[0]
+        conc: List[Tuple[int, _QueueItem]] = []
+        for g, item in heads[1:]:
+            o = compare(item.stamp, best.stamp)
+            if o is Order.BEFORE:
+                gid, best = g, item
+                conc = [c for c in conc
+                        if compare(c[1].stamp, best.stamp) is Order.CONCURRENT]
+            elif o is Order.CONCURRENT:
+                conc.append((g, item))
+        if not conc:
+            return gid
+        # Fast path: NOPs are effect-free and never conflict, so a NOP in
+        # the concurrent-minimal set can execute first without the oracle
+        # (the paper's oracle is only for transactions that may conflict).
+        for g, item in [(gid, best)] + conc:
+            if item.kind == "nop":
+                return g
+        # one oracle request for the whole concurrent set (paper §4.1)
+        group = [(gid, best)] + conc
+        stamps = [it.stamp for _, it in group]
+        keys = [s.key() for s in stamps]
+        # local cache: all pairs known?
+        known = all(
+            self._order_cache.get((keys[i], keys[j])) is not None
+            for i in range(len(keys)) for j in range(i + 1, len(keys)))
+        if known:
+            self.sim.counters.oracle_cache_hits += 1
+        else:
+            self.sim.counters.oracle_calls += 1
+            self._stall += self.cost.oracle_rtt
+            chain = self.oracle.oracle.order_events(stamps,
+                                                    [KIND_TX] * len(stamps))
+            pos = {k: i for i, k in enumerate(chain)}
+            for i in range(len(keys)):
+                for j in range(len(keys)):
+                    if i != j:
+                        self._order_cache[(keys[i], keys[j])] = (
+                            Order.BEFORE if pos[keys[i]] < pos[keys[j]]
+                            else Order.AFTER)
+        # winner = minimal under cached order
+        win_g, win = group[0]
+        for g, item in group[1:]:
+            if self._order_cache.get((item.stamp.key(), win.stamp.key())) is Order.BEFORE:
+                win_g, win = g, item
+        return win_g
+
+    # ------------------------------------------------------------------ drain
+    def _kick(self) -> None:
+        if not self.busy and self.alive:
+            self._drain()
+
+    def _drain(self) -> None:
+        if self.busy or not self.alive:
+            return
+        self._stall = 0.0
+        # 1) runnable node program? (stamp ≺ every queue head; §4.2)
+        idx = self._runnable_prog_index()
+        if idx is not None:
+            prog = self.pending_progs.pop(idx)
+            service = self._exec_prog(
+                prog["prog_id"], prog["delivery_id"], prog["name"],
+                prog["stamp"], prog["entries"], prog["coordinator"])
+            self._finish_after(service + self._stall)
+            return
+        # 2) transactions: need every queue non-empty (Fig. 6)
+        if all(self.queues[g] for g in range(self.n_gk)):
+            heads = [(g, self.queues[g][0]) for g in range(self.n_gk)]
+            g = self._order_heads(heads)
+            item = self.queues[g].popleft()
+            service = self._exec_item(item)
+            self._finish_after(service + self._stall)
+            return
+        # idle: wait for the next enqueue/NOP
+
+    def _finish_after(self, service: float) -> None:
+        self.busy = True
+        self.sim.schedule(max(service, 1e-7), self._finished)
+
+    def _finished(self) -> None:
+        self.busy = False
+        self._drain()
+
+    def _runnable_prog_index(self) -> Optional[int]:
+        """A program runs once every gatekeeper queue is *cleared*:
+        its head stamp is (or is refined to be) after T_prog.  Per-GK
+        stamps are monotone and oracle decisions transitive, so a queue
+        cleared once stays cleared for this program — each program pays
+        at most one refinement per gatekeeper (§4.2 + transitivity).
+        Concurrent NOP heads are ordered AFTER the program (they are
+        effect-free; the commitment at the oracle is what pins all later
+        transactions from that gatekeeper behind the program).  Concurrent
+        *transaction* heads take the paper's default — write before
+        program — so the program waits for them.
+        """
+        if not self.pending_progs:
+            return None
+        for g in range(self.n_gk):
+            if not self.queues[g]:
+                return None
+        from .oracle import CycleError
+        for i, prog in enumerate(self.pending_progs):
+            stamp = prog["stamp"]
+            cleared = prog["cleared"]
+            ok = True
+            for g in range(self.n_gk):
+                if g in cleared:
+                    continue
+                head = self.queues[g][0]
+                o = compare(stamp, head.stamp)
+                if o is Order.BEFORE:
+                    cleared.add(g)
+                    continue
+                if o is not Order.CONCURRENT:
+                    ok = False
+                    continue
+                if head.kind == "nop":
+                    # A concurrent NOP head needs NO oracle: it is
+                    # effect-free and will pop quickly; once the announce
+                    # gossip makes a later head dominate T_prog, per-GK
+                    # clock monotonicity pins every later item after the
+                    # program with no commitment needed.  Just wait.
+                    ok = False
+                else:
+                    # real transaction: paper default, write ≺ program
+                    o = self._order(stamp, head.stamp, KIND_PROG, KIND_TX)
+                    if o is Order.BEFORE:
+                        cleared.add(g)
+                    else:
+                        ok = False
+            if ok and len(cleared) == self.n_gk:
+                return i
+        return None
+
+    # ------------------------------------------------------------------ execute
+    def _exec_item(self, item: _QueueItem) -> float:
+        if item.kind == "nop":
+            return 0.2e-6
+        ops = item.payload or []
+        ts = item.stamp
+        for op in ops:
+            k = op["op"]
+            try:
+                if k == "create_vertex":
+                    self.partition.create_vertex(op["vid"], ts)
+                elif k == "delete_vertex":
+                    self.partition.delete_vertex(op["vid"], ts)
+                elif k == "create_edge":
+                    self.partition.create_edge(op["src"], op["dst"], ts,
+                                               eid=op.get("eid"))
+                elif k == "delete_edge":
+                    self.partition.delete_edge(op["src"], op["eid"], ts)
+                elif k == "set_vertex_prop":
+                    self.partition.set_vertex_prop(op["vid"], op["key"],
+                                                   op["value"], ts)
+                elif k == "set_edge_prop":
+                    self.partition.set_edge_prop(op["src"], op["eid"],
+                                                 op["key"], op["value"], ts)
+            except KeyError:
+                # replica divergence would be a bug; store validated already
+                raise
+        return self.cost.shard_op * max(1, len(ops))
+
+    def _exec_prog(self, prog_id: int, delivery_id, name: str, stamp: Stamp,
+                   entries: List[Tuple[str, object]], coordinator) -> float:
+        prog = REGISTRY[name]
+        states = self.prog_states.setdefault(prog_id, {})
+        refine = lambda a, b: self._order(a, b, KIND_TX, KIND_PROG)
+        service = 0.0
+        emits: List[Tuple[str, object]] = []
+        outputs: List[object] = []
+        for vid, params in entries:
+            v = self.partition.vertex_at(vid, stamp, refine)
+            # re-deliveries to an already-visited vertex are a hash-map
+            # probe, not a full visit (the C++ system dispatches straight
+            # into the per-query state)
+            revisit = vid in states
+            service += (self.cost.prog_revisit if revisit
+                        else self.cost.prog_vertex)
+            if v is None:
+                continue
+
+            # LAZY edge materialization: edges are scanned (and charged)
+            # only if the program actually reads node.out_edges — a
+            # visited-check that returns early touches no adjacency.
+            charge = {"edges": 0.0}
+
+            def load_edges(v=v, charge=charge):
+                edges = self.partition.out_edges_at(v.vid, stamp, refine)
+                charge["edges"] = self.cost.prog_edge * len(v.out_edges)
+                eviews = []
+                for e in edges:
+                    eprops = {k: self.partition.prop_at(vs, stamp, refine)
+                              for k, vs in e.props.items()}
+                    eviews.append(EdgeView(e.eid, e.dst, eprops))
+                return eviews
+
+            vprops = {k: self.partition.prop_at(vs, stamp, refine)
+                      for k, vs in v.props.items()}
+            node = NodeView(vid, load_edges, vprops,
+                            states.setdefault(vid, {}))
+            ctx = ProgContext(stamp)
+            prog.fn(node, params, ctx)
+            service += charge["edges"]
+            emits.extend(ctx.emits)
+            outputs.extend(ctx.outputs)
+        # group scatter by destination shard (one message per shard; §2.3)
+        by_shard: Dict[int, List[Tuple[str, object]]] = {}
+        for dst_vid, params in emits:
+            sid = self.directory(dst_vid)
+            if sid is None:
+                continue
+            by_shard.setdefault(sid, []).append((dst_vid, params))
+        children = []
+        for sid, ent in by_shard.items():
+            self.sim.counters.shard_hops += 1
+            child_id = (self.sid, self._next_delivery())
+            children.append(child_id)
+            target = self.peers[sid]
+            self.sim.send(self, target, target.deliver_prog, prog_id, child_id,
+                          name, stamp, ent, coordinator,
+                          nbytes=64 + 48 * len(ent))
+        # termination detection: announced/reported delivery-id sets at the
+        # coordinator (premature-zero-safe, unlike naive credit counting)
+        self.sim.send(self, coordinator, coordinator.report, prog_id,
+                      delivery_id, children, outputs,
+                      nbytes=64 + 32 * len(outputs))
+        return service
+
+    def _next_delivery(self) -> int:
+        self._delivery_ctr = getattr(self, "_delivery_ctr", 0) + 1
+        return self._delivery_ctr
+
+    # ------------------------------------------------------------------ GC / recovery
+    def collect(self, horizon: Stamp) -> int:
+        return self.partition.collect(horizon)
+
+    def recover_from(self, ops: List[dict]) -> None:
+        """Backup promotion: rebuild the partition from the backing store."""
+        self.partition = MVGraphPartition()
+        for op in ops:
+            k, ts = op["op"], op["ts"]
+            if k == "create_vertex":
+                self.partition.create_vertex(op["vid"], ts)
+            elif k == "create_edge":
+                self.partition.create_edge(op["src"], op["dst"], ts,
+                                           eid=op.get("eid"))
+            elif k == "delete_edge":
+                self.partition.delete_edge(op["src"], op["eid"], ts)
+            elif k == "set_vertex_prop":
+                self.partition.set_vertex_prop(op["vid"], op["key"],
+                                               op["value"], ts)
+            elif k == "delete_vertex":
+                self.partition.delete_vertex(op["vid"], ts)
+
+    def enter_epoch(self, epoch: int) -> None:
+        """Cluster-manager barrier: fresh FIFO channels in the new epoch."""
+        self._expected_seq = {g: 0 for g in range(self.n_gk)}
+        self._stash = {g: {} for g in range(self.n_gk)}

@@ -1,0 +1,162 @@
+"""Deterministic discrete-event simulator for Weaver's control plane.
+
+The paper evaluates Weaver on a 44-machine GbE cluster.  This container has
+one CPU core, so the control plane (gatekeepers, shards, timeline oracle,
+cluster manager) runs as actors on a deterministic event loop with a
+parameterized network model.  All benchmark numbers derived from it are in
+*simulated* seconds and are reproducible bit-for-bit for a given seed.
+
+Design notes
+------------
+* Events are ``(time, seq, fn, args)`` in a heap; ``seq`` breaks ties so
+  ordering never depends on callback identity.
+* ``NetworkModel`` charges per-message latency = base + size/bandwidth +
+  jitter drawn from a seeded RNG.  Channels between a fixed (src, dst)
+  pair are FIFO: the simulator enforces in-order delivery per channel by
+  never scheduling a message earlier than the previous one on the same
+  channel (this models TCP, which Weaver's FIFO gatekeeper->shard channels
+  assume; sequence numbers are still checked at the receiver).
+* Actors are plain Python objects; ``Simulator.send`` invokes
+  ``dst.on_message(msg)`` at delivery time.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class NetworkModel:
+    """Latency model: base RPC latency + payload/bandwidth + jitter."""
+
+    base_latency: float = 100e-6        # 100us intra-rack RPC (GbE era)
+    bandwidth: float = 125e6            # 1 Gb/s in bytes/sec
+    jitter_frac: float = 0.05           # +-5% multiplicative jitter
+    local_latency: float = 2e-6         # same-process handoff
+
+    def delay(self, nbytes: int, rng: np.random.Generator, local: bool = False) -> float:
+        if local:
+            return self.local_latency
+        base = self.base_latency + nbytes / self.bandwidth
+        if self.jitter_frac:
+            base *= 1.0 + self.jitter_frac * (2.0 * rng.random() - 1.0)
+        return base
+
+
+@dataclass
+class Counters:
+    """Global measurement counters (paper Figs. 9-14 read these)."""
+
+    announce_messages: int = 0
+    oracle_calls: int = 0
+    oracle_cache_hits: int = 0
+    nop_messages: int = 0
+    tx_committed: int = 0
+    tx_retried: int = 0
+    tx_aborted: int = 0
+    nodeprog_completed: int = 0
+    messages_sent: int = 0
+    bytes_sent: int = 0
+    lock_waits: int = 0            # 2PL baseline
+    lock_aborts: int = 0           # 2PL deadlock aborts
+    barriers: int = 0              # BSP baseline
+    shard_hops: int = 0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+class Simulator:
+    """Deterministic discrete-event loop."""
+
+    def __init__(self, seed: int = 0, network: Optional[NetworkModel] = None):
+        self.now: float = 0.0
+        self._heap: list = []
+        self._seq = itertools.count()
+        self.rng = np.random.default_rng(seed)
+        self.network = network or NetworkModel()
+        self.counters = Counters()
+        # FIFO enforcement: last scheduled delivery time per (src_id, dst_id)
+        self._channel_clock: dict[tuple[int, int], float] = {}
+        self._actor_ids = itertools.count()
+        self._stopped = False
+
+    # ---- actor registry ------------------------------------------------
+    def register(self, actor: Any) -> int:
+        aid = next(self._actor_ids)
+        actor._sim_id = aid
+        return aid
+
+    # ---- scheduling ----------------------------------------------------
+    def schedule(self, delay: float, fn: Callable, *args) -> None:
+        heapq.heappush(self._heap, (self.now + delay, next(self._seq), fn, args))
+
+    def send(self, src: Any, dst: Any, fn: Callable, *args, nbytes: int = 256,
+             local: bool = False) -> None:
+        """Deliver ``fn(*args)`` at ``dst`` after a network delay.
+
+        FIFO per (src, dst) channel: delivery time is clamped to be >= the
+        last delivery time already scheduled on the channel.
+        """
+        self.counters.messages_sent += 1
+        self.counters.bytes_sent += nbytes
+        d = self.network.delay(nbytes, self.rng, local=local)
+        t = self.now + d
+        key = (getattr(src, "_sim_id", -1), getattr(dst, "_sim_id", -1))
+        prev = self._channel_clock.get(key, 0.0)
+        if t < prev:
+            t = prev + 1e-9
+        self._channel_clock[key] = t
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+
+    def call_after(self, delay: float, fn: Callable, *args) -> None:
+        self.schedule(delay, fn, *args)
+
+    # ---- main loop -----------------------------------------------------
+    def run(self, until: Optional[float] = None, max_events: int = 50_000_000) -> None:
+        self._stopped = False
+        n = 0
+        while self._heap and not self._stopped:
+            t, _, fn, args = self._heap[0]
+            if until is not None and t > until:
+                self.now = until
+                return
+            heapq.heappop(self._heap)
+            self.now = t
+            fn(*args)
+            n += 1
+            if n >= max_events:
+                raise RuntimeError(f"simulation exceeded {max_events} events")
+
+    def stop(self) -> None:
+        self._stopped = True
+
+    def pending(self) -> int:
+        return len(self._heap)
+
+
+class PeriodicTimer:
+    """Re-arming timer; ``period`` may be changed dynamically (tau tuning)."""
+
+    def __init__(self, sim: Simulator, period: float, fn: Callable,
+                 start_delay: Optional[float] = None):
+        self.sim = sim
+        self.period = period
+        self.fn = fn
+        self.cancelled = False
+        if period > 0:
+            sim.schedule(start_delay if start_delay is not None else period, self._fire)
+
+    def _fire(self) -> None:
+        if self.cancelled or self.period <= 0:
+            return
+        self.fn()
+        self.sim.schedule(self.period, self._fire)
+
+    def cancel(self) -> None:
+        self.cancelled = True

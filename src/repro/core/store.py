@@ -1,0 +1,260 @@
+"""Backing store — HyperDex/Warp stand-in (paper §3.2, §4.1).
+
+A strictly serializable, transactional key-value store that (a) holds the
+durable copy of the multi-version graph, (b) maps vertices to shard
+servers, and (c) records each vertex's last-update stamp, which the
+gatekeepers use to keep timestamps consistent with the store's execution
+order (``T_upd ≺ T_tx`` check; retry/refine otherwise).
+
+In the simulator it is a single actor executing multi-key transactions
+atomically at message-delivery time (that *is* strict serializability for
+a single-copy store), with a write-ahead log for recovery and an optional
+on-disk checkpoint used by the fault-tolerance tests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .clock import Stamp
+from .simulation import Simulator
+
+
+@dataclass
+class StoredVertex:
+    vid: str
+    shard: int
+    create_ts: Stamp
+    delete_ts: Optional[Stamp] = None
+    # durable mirror of edges/properties: eid -> (dst, create_ts, delete_ts)
+    edges: Dict[int, Tuple[str, Stamp, Optional[Stamp]]] = field(default_factory=dict)
+    props: Dict[str, List[Tuple[object, Stamp]]] = field(default_factory=dict)
+    last_update: Optional[Stamp] = None
+
+
+class BackingStore:
+    """Strictly serializable KV + vertex->shard directory + WAL."""
+
+    def __init__(self, sim: Simulator, n_shards: int):
+        self.sim = sim
+        sim.register(self)
+        self.n_shards = n_shards
+        self.vertices: Dict[str, StoredVertex] = {}
+        self.wal: List[dict] = []
+        self._next_eid = 0
+
+    # ---- directory -------------------------------------------------------
+    def place(self, vid: str) -> int:
+        """Static placement hash; dynamic migration (§4.6) is out of scope
+        for the evaluation (the paper disables it too)."""
+        return hash(vid) % self.n_shards
+
+    def shard_of(self, vid: str) -> Optional[int]:
+        v = self.vertices.get(vid)
+        return None if v is None else v.shard
+
+    def fresh_eid(self) -> int:
+        self._next_eid += 1
+        return self._next_eid
+
+    # ---- transactional execution ------------------------------------------
+    # Executed atomically by the gatekeeper's commit path; returns the list
+    # of (shard, op) to forward, or raises on logical error (-> abort).
+    def last_update_of(self, vid: str) -> Optional[Stamp]:
+        v = self.vertices.get(vid)
+        return None if v is None else v.last_update
+
+    def apply(self, ops: List[dict], ts: Stamp) -> List[Tuple[int, dict]]:
+        """Validate + execute a whole transaction atomically.
+
+        Validation runs against an *overlay* of the staged writes so a
+        transaction sees its own earlier operations (e.g. Fig. 2 creates a
+        vertex and immediately hangs edges off it).  A logical error aborts
+        with no side effects (§4.1).
+        """
+        fwd: List[Tuple[int, dict]] = []
+        staged: List[Callable[[], None]] = []
+        new_v: Dict[str, StoredVertex] = {}       # created in this tx
+        del_v: set = set()                        # deleted in this tx
+        new_e: Dict[str, Dict[int, str]] = {}     # src -> eid -> dst
+        del_e: set = set()                        # (src, eid)
+
+        def live(vid: str) -> bool:
+            if vid in del_v:
+                return False
+            if vid in new_v:
+                return True
+            v = self.vertices.get(vid)
+            return v is not None and v.delete_ts is None
+
+        def edge_live(src: str, eid: int) -> bool:
+            if (src, eid) in del_e:
+                return False
+            if eid in new_e.get(src, {}):
+                return True
+            v = self.vertices.get(src)
+            return (v is not None and eid in v.edges
+                    and v.edges[eid][2] is None)
+
+        def shard_for(vid: str) -> int:
+            if vid in new_v:
+                return new_v[vid].shard
+            return self.vertices[vid].shard
+
+        for op in ops:
+            kind = op["op"]
+            if kind == "create_vertex":
+                vid = op["vid"]
+                if live(vid):
+                    raise ValueError(f"vertex {vid} exists")
+                shard = op.get("shard", self.place(vid))
+                new_v[vid] = StoredVertex(vid, shard, ts, last_update=ts)
+                del_v.discard(vid)
+                fwd.append((shard, dict(op, ts=ts)))
+            elif kind == "delete_vertex":
+                vid = op["vid"]
+                if not live(vid):
+                    raise ValueError(f"vertex {vid} not live")
+                del_v.add(vid)
+                if vid not in new_v:
+                    v = self.vertices[vid]
+                    def _d(v=v):
+                        v.delete_ts = ts
+                        v.last_update = ts
+                    staged.append(_d)
+                fwd.append((shard_for(vid), dict(op, ts=ts)))
+            elif kind == "create_edge":
+                src, dst = op["src"], op["dst"]
+                if not live(src):
+                    raise ValueError(f"src {src} not live")
+                if not live(dst):
+                    raise ValueError(f"dst {dst} not live")
+                eid = op.get("eid") or self.fresh_eid()
+                new_e.setdefault(src, {})[eid] = dst
+                if src not in new_v:
+                    vs = self.vertices[src]
+                    def _e(vs=vs, eid=eid, dst=dst):
+                        vs.edges[eid] = (dst, ts, None)
+                        vs.last_update = ts
+                    staged.append(_e)
+                fwd.append((shard_for(src), dict(op, eid=eid, ts=ts)))
+            elif kind == "delete_edge":
+                src, eid = op["src"], op["eid"]
+                if not edge_live(src, eid):
+                    raise ValueError(f"edge {src}/{eid} not live")
+                del_e.add((src, eid))
+                if eid in new_e.get(src, {}):
+                    dst = new_e[src].pop(eid)
+                    def _de0(src=src, eid=eid, dst=dst):
+                        self.vertices[src].edges[eid] = (dst, ts, ts)
+                    staged.append(_de0)
+                else:
+                    vs = self.vertices[src]
+                    def _de(vs=vs, eid=eid):
+                        dst, cts, _ = vs.edges[eid]
+                        vs.edges[eid] = (dst, cts, ts)
+                        vs.last_update = ts
+                    staged.append(_de)
+                fwd.append((shard_for(src), dict(op, ts=ts)))
+            elif kind == "set_vertex_prop":
+                vid = op["vid"]
+                if not live(vid):
+                    raise ValueError(f"vertex {vid} not live")
+                if vid in new_v:
+                    new_v[vid].props.setdefault(op["key"], []).append(
+                        (op["value"], ts))
+                else:
+                    v = self.vertices[vid]
+                    def _p(v=v, op=op):
+                        v.props.setdefault(op["key"], []).append(
+                            (op["value"], ts))
+                        v.last_update = ts
+                    staged.append(_p)
+                fwd.append((shard_for(vid), dict(op, ts=ts)))
+            elif kind == "set_edge_prop":
+                src, eid = op["src"], op["eid"]
+                if not edge_live(src, eid):
+                    raise ValueError(f"edge {src}/{eid} missing")
+                if src not in new_v:
+                    vs = self.vertices[src]
+                    def _pe(vs=vs):
+                        vs.last_update = ts
+                    staged.append(_pe)
+                fwd.append((shard_for(src), dict(op, ts=ts)))
+            elif kind == "get_vertex":       # reads execute here (paper §4.1)
+                vid = op["vid"]
+                if not live(vid):
+                    raise ValueError(f"vertex {vid} not live")
+                # read-only: nothing forwarded, nothing staged
+            else:
+                raise ValueError(f"unknown op {kind}")
+
+        # ---- commit point: merge new vertices, run staged writes, WAL ----
+        for vid, v in new_v.items():
+            for eid, dst in new_e.get(vid, {}).items():
+                v.edges[eid] = (dst, ts, None)
+            if vid in del_v:
+                v.delete_ts = ts
+            self.vertices[vid] = v
+        for s in staged:
+            s()
+        if fwd:
+            self.wal.append({"ts": (ts.epoch, ts.gk, ts.ctr),
+                             "ops": [o["op"] for o in ops]})
+        return fwd
+
+    # ---- touched vertices (for last-update validation) ---------------------
+    @staticmethod
+    def write_set(ops: List[dict]) -> List[str]:
+        out = []
+        for op in ops:
+            k = op["op"]
+            if k in ("create_vertex", "delete_vertex", "set_vertex_prop"):
+                out.append(op["vid"])
+            elif k in ("create_edge", "delete_edge", "set_edge_prop"):
+                out.append(op["src"])
+        return out
+
+    # ---- recovery support ---------------------------------------------------
+    def recover_shard(self, shard: int) -> List[dict]:
+        """Replay ops for one shard's partition (backup promotion, §4.3)."""
+        out = []
+        for vid, v in self.vertices.items():
+            if v.shard != shard:
+                continue
+            out.append({"op": "create_vertex", "vid": vid, "ts": v.create_ts})
+            for eid, (dst, cts, dts) in v.edges.items():
+                out.append({"op": "create_edge", "src": vid, "dst": dst,
+                            "eid": eid, "ts": cts})
+                if dts is not None:
+                    out.append({"op": "delete_edge", "src": vid, "eid": eid,
+                                "ts": dts})
+            for key, versions in v.props.items():
+                for value, ts in versions:
+                    out.append({"op": "set_vertex_prop", "vid": vid, "key": key,
+                                "value": value, "ts": ts})
+            if v.delete_ts is not None:
+                out.append({"op": "delete_vertex", "vid": vid, "ts": v.delete_ts})
+        return out
+
+    # ---- durability to disk (used by checkpoint tests) ----------------------
+    def checkpoint_to(self, path: str) -> None:
+        data = {
+            "wal_len": len(self.wal),
+            "vertices": {
+                vid: {
+                    "shard": v.shard,
+                    "create": v.create_ts.key(),
+                    "deleted": None if v.delete_ts is None else v.delete_ts.key(),
+                    "n_edges": len(v.edges),
+                }
+                for vid, v in self.vertices.items()
+            },
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f)
+        os.replace(tmp, path)

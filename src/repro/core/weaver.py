@@ -1,0 +1,283 @@
+"""Weaver facade: wires gatekeepers, shards, timeline oracle, backing
+store and cluster manager together, and exposes the client API
+(transactions §2.2, node programs §2.3, GC §4.5, failures §4.3).
+
+Synchronous convenience wrappers (``run_tx``, ``run_program``) drive the
+simulator until the request's callback fires — used by tests, examples
+and benchmarks.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .clock import Stamp, compare, Order, zero
+from .cluster import ClusterManager, HeartbeatSender
+from .gatekeeper import CostModel, Gatekeeper
+from .nodeprog import REGISTRY
+from .oracle import OracleServer
+from .shard import Shard
+from .simulation import NetworkModel, PeriodicTimer, Simulator
+from .store import BackingStore
+from .txn import Transaction, TxResult
+
+
+class ProgCoordinator:
+    """Client-side termination detection for node programs.
+
+    Uses announced/reported delivery-id sets: a program completes when the
+    two sets are equal (safe against reports arriving before their
+    parent's announcement).
+    """
+
+    def __init__(self, sim: Simulator):
+        self.sim = sim
+        sim.register(self)
+        self.active: Dict[int, dict] = {}
+        self.done: set = set()
+        self.on_complete: Dict[int, Callable] = {}
+        self.shards: List[Shard] = []
+        self.weaver = None
+
+    def begin(self, prog_id: int, name: str, stamp: Stamp,
+              root_ids: List[tuple]) -> None:
+        st = self.active.setdefault(prog_id, {
+            "announced": set(), "reported": set(), "outputs": [],
+            "name": name, "stamp": stamp, "t0": self.sim.now,
+        })
+        st["announced"].update(root_ids)
+        self._maybe_finish(prog_id)
+
+    def report(self, prog_id: int, delivery_id, children: List[tuple],
+               outputs: List[object]) -> None:
+        if prog_id in self.done:
+            return
+        st = self.active.get(prog_id)
+        if st is None:
+            return
+        st["reported"].add(delivery_id)
+        st["announced"].update(children)
+        st["announced"].add(delivery_id)
+        st["outputs"].extend(outputs)
+        self._maybe_finish(prog_id)
+
+    def _maybe_finish(self, prog_id: int) -> None:
+        st = self.active[prog_id]
+        if st["announced"] and st["announced"] == st["reported"]:
+            self.done.add(prog_id)
+            del self.active[prog_id]
+            self.sim.counters.nodeprog_completed += 1
+            prog = REGISTRY[st["name"]]
+            result = prog.reduce(st["outputs"])
+            latency = self.sim.now - st["t0"]
+            for sh in self.shards:
+                sh.finish_prog(prog_id)
+            if self.weaver is not None:
+                self.weaver._prog_finished(prog_id)
+            cb = self.on_complete.pop(prog_id, None)
+            if cb is not None:
+                cb(result, st["stamp"], latency)
+
+
+@dataclass
+class WeaverConfig:
+    n_gatekeepers: int = 2
+    n_shards: int = 4
+    tau: float = 1e-3            # vector-clock announce period (§3.3)
+    tau_nop: float = 0.5e-3      # NOP period (§4.1)
+    gc_period: float = 50e-3     # distributed GC cadence (§4.5)
+    seed: int = 0
+    cost: CostModel = field(default_factory=CostModel)
+    network: NetworkModel = field(default_factory=NetworkModel)
+    heartbeat_period: float = 5e-3
+
+
+class Weaver:
+    def __init__(self, cfg: WeaverConfig = WeaverConfig()):
+        self.cfg = cfg
+        self.sim = Simulator(seed=cfg.seed, network=cfg.network)
+        self.store = BackingStore(self.sim, cfg.n_shards)
+        self.oracle = OracleServer(self.sim)
+        self.manager = ClusterManager(self.sim, cfg.heartbeat_period)
+        self.manager.weaver = self
+        self.gatekeepers: List[Gatekeeper] = [
+            Gatekeeper(self.sim, g, cfg.n_gatekeepers, self.store, self.oracle,
+                       cfg.cost, cfg.tau, cfg.tau_nop)
+            for g in range(cfg.n_gatekeepers)
+        ]
+        self.shards: List[Shard] = [
+            Shard(self.sim, s, cfg.n_gatekeepers, self.oracle, cfg.cost,
+                  self.store.shard_of)
+            for s in range(cfg.n_shards)
+        ]
+        for gk in self.gatekeepers:
+            gk.start(self.gatekeepers, self.shards)
+        for sh in self.shards:
+            sh.start(self.shards)
+        self.coordinator = ProgCoordinator(self.sim)
+        self.coordinator.shards = self.shards
+        self.coordinator.weaver = self
+        self._heartbeats = []
+        for i, gk in enumerate(self.gatekeepers):
+            self._heartbeats.append(
+                HeartbeatSender(self.sim, self.manager, f"gk{i}", gk))
+        for i, sh in enumerate(self.shards):
+            self._heartbeats.append(
+                HeartbeatSender(self.sim, self.manager, f"shard{i}", sh))
+        self.manager.start()
+        self._prog_ids = itertools.count(1)
+        self._client_ids = itertools.count(1)
+        self._eids = itertools.count(1)
+        self._rr = itertools.count()
+        self._outstanding_progs: Dict[int, Stamp] = {}
+        if cfg.gc_period > 0:
+            PeriodicTimer(self.sim, cfg.gc_period, self._gc)
+
+    # ---- client API -----------------------------------------------------
+    def begin_tx(self) -> Transaction:
+        cid = next(self._client_ids)
+        return Transaction(cid, self._eids, read_fn=self.read_vertex)
+
+    def read_vertex(self, vid: str) -> Optional[dict]:
+        """Client read against the backing store (latest committed)."""
+        v = self.store.vertices.get(vid)
+        if v is None or v.delete_ts is not None:
+            return None
+        return {
+            "id": vid,
+            "edges": {eid: dst for eid, (dst, _, dts) in v.edges.items()
+                      if dts is None},
+            "props": {k: vs[-1][0] for k, vs in v.props.items()},
+        }
+
+    def submit_tx(self, tx: Transaction, callback: Callable,
+                  gatekeeper: Optional[int] = None) -> None:
+        """Async submit; ``callback(TxResult)`` fires on commit/abort."""
+        g = (next(self._rr) % len(self.gatekeepers)
+             if gatekeeper is None else gatekeeper)
+        gk = self.gatekeepers[g]
+        if not gk.alive:  # client fails over to the next gatekeeper
+            g = (g + 1) % len(self.gatekeepers)
+            gk = self.gatekeepers[g]
+        t0 = self.sim.now
+        def reply(ok: bool, err: Optional[str], stamp: Stamp) -> None:
+            callback(TxResult(ok=ok, stamp=stamp, error=err,
+                              latency=self.sim.now - t0))
+        self.sim.send(self, gk, gk.submit_tx, self, tx.ops, reply,
+                      nbytes=64 + 48 * len(tx.ops))
+
+    def submit_program(self, name: str, entries: List[Tuple[str, object]],
+                       callback: Callable, gatekeeper: Optional[int] = None) -> int:
+        """Async node program; ``callback(result, stamp, latency)``."""
+        assert name in REGISTRY, f"unknown node program {name}"
+        pid = next(self._prog_ids)
+        g = (next(self._rr) % len(self.gatekeepers)
+             if gatekeeper is None else gatekeeper)
+        gk = self.gatekeepers[g]
+        if not gk.alive:
+            g = (g + 1) % len(self.gatekeepers)
+            gk = self.gatekeepers[g]
+        self.coordinator.on_complete[pid] = callback
+        self.sim.send(self, gk, gk.submit_program, self.coordinator, name,
+                      entries, pid, nbytes=64 + 48 * len(entries))
+        return pid
+
+    def _prog_finished(self, prog_id: int) -> None:
+        self._outstanding_progs.pop(prog_id, None)
+
+    # ---- synchronous conveniences (drive the simulator) --------------------
+    def run_tx(self, tx: Transaction, timeout: float = 5.0) -> TxResult:
+        box: List[TxResult] = []
+        self.submit_tx(tx, box.append)
+        deadline = self.sim.now + timeout
+        while not box and self.sim.pending() and self.sim.now < deadline:
+            self.sim.run(until=min(deadline, self.sim.now + 5e-3))
+        if not box:
+            raise TimeoutError("transaction did not complete")
+        return box[0]
+
+    def run_program(self, name: str, entries: List[Tuple[str, object]],
+                    timeout: float = 10.0):
+        box: List[tuple] = []
+        self.submit_program(name, entries,
+                            lambda r, s, l: box.append((r, s, l)))
+        deadline = self.sim.now + timeout
+        while not box and self.sim.pending() and self.sim.now < deadline:
+            self.sim.run(until=min(deadline, self.sim.now + 5e-3))
+        if not box:
+            raise TimeoutError("node program did not complete")
+        return box[0]
+
+    def settle(self, dt: float = 20e-3) -> None:
+        """Let in-flight work drain (bounded)."""
+        self.sim.run(until=self.sim.now + dt)
+
+    # ---- GC (§4.5) -----------------------------------------------------------
+    def _gc(self) -> None:
+        # T_e = earliest outstanding node program, else min gatekeeper clock
+        stamps = [s["stamp"] for s in self.coordinator.active.values()]
+        if stamps:
+            horizon = stamps[0]
+            for s in stamps[1:]:
+                if compare(s, horizon) is Order.BEFORE:
+                    horizon = s
+        else:
+            epoch = min(gk.epoch for gk in self.gatekeepers if gk.alive)
+            clocks = [gk.clock for gk in self.gatekeepers if gk.alive]
+            if not clocks:
+                return
+            n = len(clocks[0])
+            horizon = Stamp(epoch, tuple(min(c[i] for c in clocks)
+                                         for i in range(n)), -1, 0)
+        for sh in self.shards:
+            if sh.alive:
+                sh.collect(horizon)
+        self.oracle.oracle.collect(horizon)
+
+    # ---- fault tolerance (§4.3) ------------------------------------------------
+    def promote_backup(self, name: str) -> None:
+        """Replace a failed server with a backup recovered from the store."""
+        if name.startswith("shard"):
+            sid = int(name[len("shard"):])
+            old = self.shards[sid]
+            old.stop()
+            nu = Shard(self.sim, sid, self.cfg.n_gatekeepers, self.oracle,
+                       self.cfg.cost, self.store.shard_of)
+            nu.recover_from(self.store.recover_shard(sid))
+            self.shards[sid] = nu
+            for sh in self.shards:
+                sh.start(self.shards)
+            for gk in self.gatekeepers:
+                gk.shards = self.shards
+                gk._seq[sid] = 0
+            self.coordinator.shards = self.shards
+            self.manager.register_member(name, nu)
+            self._heartbeats.append(
+                HeartbeatSender(self.sim, self.manager, name, nu))
+        elif name.startswith("gk"):
+            gid = int(name[len("gk"):])
+            old = self.gatekeepers[gid]
+            old.stop()
+            nu = Gatekeeper(self.sim, gid, self.cfg.n_gatekeepers, self.store,
+                            self.oracle, self.cfg.cost, self.cfg.tau,
+                            self.cfg.tau_nop)
+            self.gatekeepers[gid] = nu
+            nu.start(self.gatekeepers, self.shards)
+            # refresh surviving gatekeepers' peer lists (no new timers)
+            for gk in self.gatekeepers:
+                if gk.alive and gk is not nu:
+                    gk.peers = [p for p in self.gatekeepers if p is not gk]
+            self.manager.register_member(name, nu)
+            self._heartbeats.append(
+                HeartbeatSender(self.sim, self.manager, name, nu))
+
+    def kill(self, name: str) -> None:
+        """Test hook: crash a server now (heartbeats stop immediately)."""
+        actor = self.manager.members[name]
+        actor.alive = False
+
+    # ---- introspection -------------------------------------------------------
+    def counters(self) -> dict:
+        return self.sim.counters.snapshot()

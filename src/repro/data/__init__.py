@@ -1,0 +1,3 @@
+from . import graphs, sampler, synth
+
+__all__ = ["graphs", "sampler", "synth"]

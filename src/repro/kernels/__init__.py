@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package has: kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper, layout prep), ref.py (pure-jnp oracle).
+All are validated in interpret=True mode against ref.py across
+shape/dtype sweeps (tests/test_kernels.py).
+
+  mv_visibility   — batched refinable-timestamp snapshot masks (the
+                    paper's multi-version read path, DESIGN.md §3)
+  segment_mp      — fused gather->matmul->segment-reduce message passing
+                    (SpMM regime: GIN/PNA/GAT aggregation, node programs)
+  flash_attention — blocked online-softmax attention (causal + sliding
+                    window), the LM prefill hot-spot
+  embedding_bag   — BlockSpec-driven dynamic row gather + bag reduce
+                    (recsys embedding lookup)
+"""

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: EmbeddingBag via BlockSpec-driven dynamic row fetch.
+
+The bag indices are **scalar-prefetched** (SMEM) so the embedding-table
+BlockSpec's index_map can point each grid step directly at the row the
+step needs — the gather happens in the pipeline's async copies (the same
+trick MaxText/MegaBlocks-style TPU kernels use for irregular reads),
+never through a big materialized (B, L, D) intermediate.
+
+Grid: (B, L) with L minormost; the (1, D) output block accumulates the
+weighted rows of one bag across its L steps.  Padding (idx = -1) is
+mapped to row 0 and multiplied by weight 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, w_ref, table_ref, out_ref, *, mean: bool):
+    j = pl.program_id(1)
+    n_l = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    row = table_ref[...]                    # (1, D): row idx[b, j] (or 0)
+    w = w_ref[0, 0]                         # scalar weight (0 for padding)
+    out_ref[...] += row.astype(out_ref.dtype) * w.astype(out_ref.dtype)
+
+    if mean:
+        @pl.when(j == n_l - 1)
+        def _norm():
+            pass  # normalization done in ops.py (needs the count)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_pallas(table: jnp.ndarray, idx_safe: jnp.ndarray,
+                         weights: jnp.ndarray,
+                         interpret: bool = True) -> jnp.ndarray:
+    """table (V, D); idx_safe (B, L) int32 with pads already mapped to 0;
+    weights (B, L) with pads already zeroed -> (B, D) sums."""
+    b, l = idx_safe.shape
+    v, d = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, l),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, idx: (i, j)),      # weights
+            pl.BlockSpec((1, d), lambda i, j, idx: (idx[i, j], 0)),  # table
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, idx: (i, 0)),
+    )
+    kernel = functools.partial(_bag_kernel, mean=False)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(idx_safe, weights, table)

@@ -1,0 +1,28 @@
+"""Public EmbeddingBag wrapper (sum/mean, -1 padding, per-sample weights)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .kernel import embedding_bag_pallas
+from .ref import embedding_bag_ref
+
+
+def embedding_bag(table: jnp.ndarray, idx: jnp.ndarray,
+                  weights: Optional[jnp.ndarray] = None, mode: str = "sum",
+                  interpret: bool = True,
+                  use_ref: bool = False) -> jnp.ndarray:
+    if use_ref:
+        return embedding_bag_ref(table, idx, weights, mode)
+    valid = idx >= 0
+    idx_safe = jnp.where(valid, idx, 0).astype(jnp.int32)
+    w = jnp.ones_like(idx, dtype=table.dtype) if weights is None \
+        else weights.astype(table.dtype)
+    w = w * valid.astype(table.dtype)
+    out = embedding_bag_pallas(table, idx_safe, w, interpret=interpret)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+        out = out / cnt
+    return out

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for EmbeddingBag (sum/mean, per-sample weights).
+
+JAX has no native EmbeddingBag — this gather + segment-reduce IS the
+system's implementation (kernel taxonomy §B.6/§B.11); the Pallas kernel
+accelerates it.  idx (B, L) int32 with -1 padding; weights (B, L) f32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, idx: jnp.ndarray,
+                      weights: Optional[jnp.ndarray] = None,
+                      mode: str = "sum") -> jnp.ndarray:
+    b, l = idx.shape
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    rows = table[safe]                          # (B, L, D)
+    w = jnp.ones_like(idx, dtype=table.dtype) if weights is None \
+        else weights.astype(table.dtype)
+    w = w * valid.astype(table.dtype)
+    out = jnp.sum(rows * w[..., None], axis=1)  # (B, D)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+        out = out / cnt
+    return out

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: blocked online-softmax attention (FlashAttention
+fwd), causal + optional sliding window.
+
+Grid: (batch*heads, q_blocks, kv_blocks) with kv minormost, so the f32
+scratch (running max m, normalizer l, accumulator acc) persists across a
+q-block's kv sweep in VMEM.  The (BQ, BK) logit tile is produced on the
+MXU, the rescale/accumulate path follows the standard two-pass-free
+online softmax.  Finalization (acc / l) happens on the last kv step.
+
+Adaptation note (DESIGN.md §3): the CUDA original tunes for SRAM/warp
+occupancy; here block sizes are chosen so q/k/v tiles are (8,128)-aligned
+for VMEM and the two matmuls per step hit the 128x128 MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, sq: int, sk: int,
+                  causal: bool, window: Optional[int]):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (BQ, D)
+    k = k_ref[0]                                   # (BK, D)
+    v = v_ref[0]                                   # (BK, D)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = (i * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+             + (sk - sq))                          # align ends for decode
+    k_pos = (j * block_k
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask = k_pos <= q_pos
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (BQ, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # (BQ, BK) f32
+    alpha = jnp.exp(m_prev - m_new)                # (BQ, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q",
+                                    "block_k", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q (BH, Sq, D); k, v (BH, Sk, D) -> (BH, Sq, D)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q,
+                                                     block_k)
+    grid = (bh, sq // block_q, sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, sq=sq, sk=sk,
+        causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

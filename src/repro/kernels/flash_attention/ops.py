@@ -1,0 +1,34 @@
+"""Public wrapper: (B, S, H, D) GQA layout -> kernel layout, with KV
+head-group expansion and shape padding."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+        causal: bool = True, window: Optional[int] = None,
+        interpret: bool = True, use_ref: bool = False) -> jnp.ndarray:
+    """q (B, Sq, Hq, D); k/v (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, sk, d)
+    fn = attention_ref if use_ref else flash_attention_pallas
+    if use_ref:
+        of = fn(qf, kf, vf, causal=causal, window=window)
+    else:
+        of = fn(qf, kf, vf, causal=causal, window=window,
+                interpret=interpret)
+    return of.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

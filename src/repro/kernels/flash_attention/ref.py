@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) attention.
+
+q (BH, Sq, D), k/v (BH, Sk, D) — batch*heads folded into the leading dim
+(GQA head-group expansion happens in ops.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bqd,bkd->bqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)    # align ends (decode)
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = k_pos <= q_pos
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs.astype(q.dtype), v)

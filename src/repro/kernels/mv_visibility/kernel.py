@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: batched refinable-timestamp visibility masks.
+
+Layout: stamps component-major ``(C, N)`` so the object axis N rides the
+128-wide lanes and the tiny component axis C (epoch + G gatekeeper
+counters, typically 2-9) rides sublanes; the all/any reductions are
+sublane reductions, and each grid step streams a ``(C, BLOCK_N)`` tile of
+creates + deletes through VMEM.  The query stamp is scalar-prefetched
+(SMEM) since every tile compares against the same q.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NO_STAMP = np.iinfo(np.int32).max
+
+DEFAULT_BLOCK_N = 1024
+
+
+def _visibility_kernel(q_ref, create_ref, delete_ref, out_ref):
+    q = q_ref[...]                      # (C, 1) int32 in SMEM-ish block
+    c = create_ref[...]                 # (C, BN)
+    d = delete_ref[...]                 # (C, BN)
+
+    def before(rows):
+        is_no = rows[0] == NO_STAMP
+        lower_epoch = rows[0] < q[0, 0]
+        same_epoch = rows[0] == q[0, 0]
+        le = jnp.all(rows[1:] <= q[1:], axis=0)
+        eq = jnp.all(rows[1:] == q[1:], axis=0)
+        return jnp.where(is_no, False, lower_epoch | (same_epoch & le & ~eq))
+
+    out_ref[...] = (before(c) & ~before(d))[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def visibility_pallas(create_cm: jnp.ndarray, delete_cm: jnp.ndarray,
+                      q: jnp.ndarray, block_n: int = DEFAULT_BLOCK_N,
+                      interpret: bool = True) -> jnp.ndarray:
+    """create/delete (C, N) int32, q (C,) -> (N,) bool.
+
+    N must be a multiple of ``block_n`` (ops.py pads).
+    """
+    c_dim, n = create_cm.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        _visibility_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c_dim, 1), lambda i: (0, 0)),      # q (broadcast)
+            pl.BlockSpec((c_dim, block_n), lambda i: (0, i)),
+            pl.BlockSpec((c_dim, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.bool_),
+        interpret=interpret,
+    )(q[:, None], create_cm, delete_cm)
+    return out[0]

@@ -1,0 +1,35 @@
+"""Public wrapper: accepts the (N, C) row-major layout used by
+``repro.core.clock.pack_many``, pads N to the block size, and dispatches
+to the Pallas kernel (interpret=True on CPU; compiled on TPU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import DEFAULT_BLOCK_N, NO_STAMP, visibility_pallas
+from .ref import visibility_ref
+
+
+def visibility_mask(create_rows: jnp.ndarray, delete_rows: jnp.ndarray,
+                    q: jnp.ndarray, block_n: int = DEFAULT_BLOCK_N,
+                    interpret: bool = True,
+                    use_ref: bool = False) -> jnp.ndarray:
+    """(N, C) stamp rows + (C,) query -> (N,) bool visibility mask."""
+    n, c = create_rows.shape
+    create_cm = jnp.asarray(create_rows).T
+    delete_cm = jnp.asarray(delete_rows).T
+    q = jnp.asarray(q)
+    if use_ref:
+        return visibility_ref(create_cm, delete_cm, q)
+    n_pad = -(-n // block_n) * block_n
+    if n_pad != n:
+        pad = n_pad - n
+        create_cm = jnp.pad(create_cm, ((0, 0), (0, pad)),
+                            constant_values=NO_STAMP)
+        delete_cm = jnp.pad(delete_cm, ((0, 0), (0, pad)),
+                            constant_values=NO_STAMP)
+    mask = visibility_pallas(create_cm, delete_cm, q, block_n=block_n,
+                             interpret=interpret)
+    return mask[:n]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the multi-version visibility kernel.
+
+Stamp rows are ``[epoch, c_0..c_{G-1}]`` int32; a row of all INT32_MAX
+means "no stamp" (never deleted).  Visible at q  <=>  create ≺ q  and
+not (delete ≺ q), with ``≺`` the epoch-then-vector-clock happens-before
+(see repro.core.clock).  Layout here is component-major ``(C, N)`` —
+the TPU-friendly orientation (components on sublanes, objects on lanes).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NO_STAMP = np.iinfo(np.int32).max
+
+
+def before_cm(rows_cm: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """rows (C, N) ≺ q (C,) -> (N,) bool."""
+    is_no = rows_cm[0] == NO_STAMP
+    lower_epoch = rows_cm[0] < q[0]
+    same_epoch = rows_cm[0] == q[0]
+    le = jnp.all(rows_cm[1:] <= q[1:, None], axis=0)
+    eq = jnp.all(rows_cm[1:] == q[1:, None], axis=0)
+    return jnp.where(is_no, False, lower_epoch | (same_epoch & le & ~eq))
+
+
+def visibility_ref(create_cm: jnp.ndarray, delete_cm: jnp.ndarray,
+                   q: jnp.ndarray) -> jnp.ndarray:
+    """create/delete (C, N) int32, q (C,) int32 -> (N,) bool."""
+    return before_cm(create_cm, q) & ~before_cm(delete_cm, q)

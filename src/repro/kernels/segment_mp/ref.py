@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for fused message passing:
+
+    y[v] = sum_{e : dst[e] = v} x[src[e]] @ W
+
+the SpMM-regime hot op behind GIN/PNA aggregation and traversal node
+programs (frontier expansion is this op with W = I and boolean x).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_matmul_reduce_ref(x: jnp.ndarray, w: jnp.ndarray,
+                              edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+                              n_nodes: int) -> jnp.ndarray:
+    msgs = x[edge_src] @ w
+    return jax.ops.segment_sum(msgs, edge_dst, num_segments=n_nodes)

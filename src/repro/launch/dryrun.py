@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh)
+cell, print ``memory_analysis()`` + ``cost_analysis()``, parse collective
+bytes out of the post-SPMD HLO, and emit roofline terms per cell.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init) — and is deliberately NOT set in conftest.py
+or pyproject: smoke tests and benches see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+      --shape long_500k --mesh single --variant window_cache
+Results accumulate under results/dryrun/<arch>__<shape>__<mesh>__<variant>.json
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+
+# TPU v5e hardware constants (targets; this container is CPU)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per-chip usable, 1 link)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-tensor bytes of every collective op in post-SPMD HLO.
+
+    The per-device transfer volume of ring all-gather/all-reduce is
+    ~(n-1)/n x tensor bytes; we record raw tensor bytes (upper bound) and
+    per-op counts so §Roofline can reason about both.
+    """
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        out[op] += _shape_bytes(shape_str)
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": float(sum(out.values()))}
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> dict:
+    tc = flops_per_dev / PEAK_FLOPS
+    tm = bytes_per_dev / HBM_BW
+    tn = coll_bytes_per_dev / ICI_BW
+    dom = max((tc, "compute"), (tm, "memory"), (tn, "collective"))[1]
+    return {"compute_s": tc, "memory_s": tm, "collective_s": tn,
+            "dominant": dom,
+            "step_s_lower_bound": max(tc, tm, tn)}
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, variant: str,
+             outdir: Path, hlo_dir=None) -> dict:
+    import jax
+    from repro.configs import get_arch
+    from repro.launch import input_specs
+    from repro.launch.mesh import make_production_mesh
+
+    spec = get_arch(arch)
+    sh = spec.shapes[shape]
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "variant": variant, "status": "ok"}
+    if sh.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = sh.skip
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    from repro import dist
+    dist.set_mesh(mesh)
+    low = input_specs.build(arch, shape, mesh, variant)
+    with mesh:
+        jitted = jax.jit(low.fn, in_shardings=low.in_shardings)
+        lowered = jitted.lower(*low.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    if hlo_dir is not None:
+        Path(hlo_dir).mkdir(parents=True, exist_ok=True)
+        (Path(hlo_dir) / f"{arch}__{shape}__{mesh_kind}__{variant}.hlo.txt"
+         ).write_text(hlo[:50_000_000])
+
+    # loop-aware static costing (XLA's cost_analysis counts while bodies
+    # ONCE — a scan-over-layers model is undercounted ~n_layers x; see
+    # repro/launch/hlo_cost.py and tests/test_hlo_cost.py)
+    from repro.launch import hlo_cost
+    rep = hlo_cost.analyze(hlo)
+    flops = rep.flops                            # per-device, post-SPMD
+    bytes_acc = rep.bytes_accessed
+    coll_per_dev = rep.total_collective_bytes
+    coll = {"bytes": rep.collective_bytes,
+            "counts": rep.collective_counts,
+            "total_bytes": coll_per_dev,
+            "while_trips": rep.while_trips}
+    xla_raw = {"flops": float(cost.get("flops", 0.0)),
+               "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+    terms = roofline_terms(flops, bytes_acc, coll_per_dev)
+    model_flops = low.meta.get("model_flops", 0.0)
+    useful = model_flops / max(flops * n_chips, 1.0)
+
+    rec.update({
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost": {"flops_per_device": flops,
+                 "bytes_accessed_per_device": bytes_acc,
+                 "xla_raw_uncorrected": xla_raw},
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops": model_flops,
+        "useful_flops_fraction": useful,
+        "meta": low.meta,
+    })
+    outdir.mkdir(parents=True, exist_ok=True)
+    fn = outdir / f"{arch}__{shape}__{mesh_kind}__{variant}.json"
+    fn.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--hlo-dir", default=None,
+                    help="dump post-SPMD HLO text per cell")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    outdir = Path(args.outdir)
+    cells = []
+    for aid, spec in ARCHS.items():
+        if args.arch and aid != args.arch:
+            continue
+        for sname in spec.shapes:
+            if args.shape and sname != args.shape:
+                continue
+            for mk in meshes:
+                cells.append((aid, sname, mk))
+
+    failures = 0
+    for aid, sname, mk in cells:
+        tag = f"{aid}/{sname}/{mk}/{args.variant}"
+        fn = outdir / f"{aid}__{sname}__{mk}__{args.variant}.json"
+        if args.skip_existing and fn.exists():
+            prev = json.loads(fn.read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[skip-existing] {tag}")
+                continue
+        try:
+            rec = run_cell(aid, sname, mk, args.variant, outdir,
+                           args.hlo_dir)
+            if rec["status"] == "skipped":
+                print(f"[SKIP] {tag}: {rec['skip_reason']}")
+                outdir.mkdir(parents=True, exist_ok=True)
+                fn.write_text(json.dumps(rec, indent=1))
+            else:
+                r = rec["roofline"]
+                print(f"[ok] {tag}: compile {rec['compile_s']}s "
+                      f"flops/dev {rec['cost']['flops_per_device']:.3e} "
+                      f"dom={r['dominant']} "
+                      f"peak_mem {rec['memory']['peak_estimate_bytes']/2**30:.2f} GiB")
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=4)
+            outdir.mkdir(parents=True, exist_ok=True)
+            fn.write_text(json.dumps(
+                {"arch": aid, "shape": sname, "mesh": mk,
+                 "variant": args.variant, "status": "fail",
+                 "error": f"{type(e).__name__}: {e}"}, indent=1))
+        sys.stdout.flush()
+    print(f"done: {len(cells)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,109 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+On this CPU container it runs REDUCED configs (same code path as
+production; the full configs lower via dryrun.py).  On a real cluster the
+same entry point runs under ``jax.distributed.initialize()`` with the
+production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import numpy as np
+
+
+def reduced_config(spec):
+    from repro.models import gnn, sasrec, transformer
+    cfg = spec.config
+    if spec.family == "lm":
+        moe = cfg.moe
+        if moe is not None:
+            moe = dataclasses.replace(moe, n_experts=4,
+                                      top_k=min(moe.top_k, 2), d_expert=32)
+        return dataclasses.replace(
+            cfg, n_layers=2, d_model=64, n_heads=4,
+            n_kv=max(1, cfg.n_kv * 4 // cfg.n_heads), d_head=16, d_ff=128,
+            vocab=512, moe=moe, dtype="float32")
+    if spec.family == "gnn":
+        return dataclasses.replace(cfg, d_hidden=32, d_feat=16, n_classes=4)
+    return dataclasses.replace(cfg, n_items=1000, seq_len=16, d_embed=32)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs import get_arch
+    from repro.data import graphs as G, synth
+    from repro.models import gnn, sasrec, transformer
+    from repro.optim import AdamWConfig
+    from repro.runtime import Trainer, TrainerConfig
+
+    spec = get_arch(args.arch)
+    cfg = reduced_config(spec)
+    rng = np.random.default_rng(args.seed)
+    key = jax.random.PRNGKey(args.seed)
+
+    if spec.family == "lm":
+        params = transformer.init_params(key, cfg)
+        loss_fn = lambda p, b: transformer.lm_loss(p, b, cfg)
+        def batches():
+            while True:
+                yield synth.lm_batch(rng, cfg.vocab, args.batch, args.seq)
+    elif spec.family == "gnn":
+        n, e = 256, 1024
+        src, dst = G.random_graph(rng, n, e)
+        if cfg.kind == "dimenet":
+            tin, tout = G.build_triplets(src, dst, max_per_edge=4)
+            base = {"species": rng.integers(0, 8, n).astype(np.int32),
+                    "pos": rng.normal(size=(n, 3)).astype(np.float32),
+                    "edge_src": src, "edge_dst": dst,
+                    "trip_in": tin, "trip_out": tout,
+                    "graph_ids": np.zeros(n, np.int32), "n_graphs": 1,
+                    "labels": np.asarray([0.5], np.float32)}
+        else:
+            base = {"x": rng.normal(size=(n, cfg.d_feat)).astype(np.float32),
+                    "edge_src": src, "edge_dst": dst,
+                    "graph_ids": np.zeros(n, np.int32), "n_graphs": 1,
+                    "labels": rng.integers(0, cfg.n_classes,
+                                           n).astype(np.int32)}
+        params = gnn.init_params(key, cfg)
+        loss_fn = lambda p, b: gnn.gnn_loss(p, b, cfg)
+        def batches():
+            while True:
+                yield base
+    else:
+        params = sasrec.init_params(key, cfg)
+        loss_fn = lambda p, b: sasrec.bce_loss(p, b, cfg)
+        def batches():
+            while True:
+                yield synth.sasrec_batch(rng, cfg.n_items, args.batch,
+                                         cfg.seq_len)
+
+    trainer = Trainer(
+        loss_fn, params,
+        AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=10))
+    if args.resume and trainer.try_resume():
+        print(f"resumed at step {trainer.step}")
+    hist = trainer.fit(batches())
+    print(f"final loss {hist[-1]['loss']:.4f} after {trainer.step} steps")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

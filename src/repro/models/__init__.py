@@ -1,0 +1,5 @@
+"""Model zoo: decoder LMs (dense/MoE), GNNs, SASRec — pure-functional JAX."""
+
+from . import gnn, layers, moe, mp, sasrec, transformer
+
+__all__ = ["gnn", "layers", "moe", "mp", "sasrec", "transformer"]

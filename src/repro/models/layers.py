@@ -1,0 +1,229 @@
+"""Transformer building blocks: norms, RoPE variants, GQA attention
+(full / sliding-window / KV-cache decode), gated MLPs.
+
+All layers are pure functions over parameter pytrees (nested dicts of
+jnp arrays) so they stack cleanly under ``jax.lax.scan`` and shard under
+``pjit`` name-based partition rules (see ``repro.dist.sharding``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Param = dict
+
+NEG_INF = jnp.float32(-1e30)
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(d_rot: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_rot, 2, dtype=np.float64) / d_rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """Rotary embedding on the leading ``fraction`` of head dims.
+
+    ``fraction=0.5`` gives the ChatGLM-style "2d" partial rotary where only
+    half of each head rotates (the other half stays positional-free).
+    x: (..., S, H, D); positions: broadcastable to (..., S).
+    """
+    d = x.shape[-1]
+    d_rot = int(d * fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    freqs = jnp.asarray(rope_freqs(d_rot, theta), dtype=jnp.float32)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,d_rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr = x[..., :d_rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rot = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rot.astype(x.dtype), x[..., d_rot:]], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+              .reshape(b, s, h * n_rep, d)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              q_positions: jnp.ndarray, k_positions: jnp.ndarray,
+              causal: bool = True, window: Optional[int] = None,
+              softmax_scale: Optional[float] = None) -> jnp.ndarray:
+    """Grouped-query attention with optional sliding window.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D).  Positions give the absolute
+    token index of each query/key (needed for decode and windowing).
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    n_rep = hq // hkv
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((sq, k.shape[1]), dtype=bool)
+    dq = q_positions[:, :, None]          # (B, Sq, 1)
+    dk = k_positions[:, None, :]          # (B, 1, Sk)
+    if causal:
+        mask = dk <= dq
+    else:
+        mask = jnp.broadcast_to(mask, (b, sq, k.shape[1]))
+    if window is not None:
+        mask = jnp.logical_and(mask, dq - dk < window)
+    logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0
+    qkv_bias: bool = False
+
+
+def init_attn(key, cfg: AttnConfig, dtype=jnp.bfloat16) -> Param:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = float(1.0 / np.sqrt(cfg.d_model))
+    p = {
+        "wq": jax.random.normal(k1, (cfg.d_model, cfg.n_heads * cfg.d_head),
+                                dtype) * s,
+        "wk": jax.random.normal(k2, (cfg.d_model, cfg.n_kv * cfg.d_head),
+                                dtype) * s,
+        "wv": jax.random.normal(k3, (cfg.d_model, cfg.n_kv * cfg.d_head),
+                                dtype) * s,
+        "wo": jax.random.normal(k4, (cfg.n_heads * cfg.d_head, cfg.d_model),
+                                dtype) * s,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * cfg.d_head,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv * cfg.d_head,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv * cfg.d_head,), dtype)
+    return p
+
+
+def attn_qkv(p: Param, x: jnp.ndarray, cfg: AttnConfig,
+             positions: jnp.ndarray):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv, cfg.d_head)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def self_attention_block(p: Param, x: jnp.ndarray, cfg: AttnConfig,
+                         positions: jnp.ndarray,
+                         window: Optional[int] = None) -> jnp.ndarray:
+    b, s, _ = x.shape
+    q, k, v = attn_qkv(p, x, cfg, positions)
+    o = attention(q, k, v, positions, positions, causal=True, window=window)
+    return o.reshape(b, s, cfg.n_heads * cfg.d_head) @ p["wo"]
+
+
+def decode_attention_block(p: Param, x: jnp.ndarray, cfg: AttnConfig,
+                           k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                           cache_len: jnp.ndarray,
+                           window: Optional[int] = None):
+    """One-token decode: append to the KV cache, attend over the prefix.
+
+    x: (B, 1, d_model); k_cache/v_cache: (B, S_max, n_kv, d_head);
+    cache_len: (B,) current lengths.  Returns (out, new_k, new_v).
+    """
+    b = x.shape[0]
+    positions = cache_len[:, None]                       # (B, 1)
+    q, k_new, v_new = attn_qkv(p, x, cfg, positions)
+    idx = cache_len                                       # (B,)
+    k_cache = jax.vmap(lambda c, kn, i: jax.lax.dynamic_update_slice(
+        c, kn, (i, 0, 0)))(k_cache, k_new, idx)
+    v_cache = jax.vmap(lambda c, vn, i: jax.lax.dynamic_update_slice(
+        c, vn, (i, 0, 0)))(v_cache, v_new, idx)
+    s_max = k_cache.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32), (b, s_max))
+    # mask out unwritten cache slots by pushing their positions past query
+    k_pos = jnp.where(k_pos <= idx[:, None], k_pos, jnp.int32(2**30))
+    o = attention(q, k_cache, v_cache, positions, k_pos, causal=True,
+                  window=window)
+    out = o.reshape(b, 1, cfg.n_heads * cfg.d_head) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True,
+             dtype=jnp.bfloat16) -> Param:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = float(1.0 / np.sqrt(d_model))
+    s_out = float(1.0 / np.sqrt(d_ff))
+    p = {
+        "w_up": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out,
+    }
+    if gated:
+        p["w_gate"] = jax.random.normal(k3, (d_model, d_ff), dtype) * s_in
+    return p
+
+
+def mlp_block(p: Param, x: jnp.ndarray, act=jax.nn.silu) -> jnp.ndarray:
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        up = act(x @ p["w_gate"]) * up
+    else:
+        up = act(up)
+    return up @ p["w_down"]
+
+
+# ----------------------------------------------------------------- embedding
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> Param:
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def embed(p: Param, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["table"][tokens]
+
+
+def unembed(p: Param, x: jnp.ndarray) -> jnp.ndarray:
+    # keep logits in the activation dtype (bf16): the fp32 loss math is
+    # streamed (logsumexp fusion) rather than materialized at (B,S,V)
+    return jnp.einsum("bsd,vd->bsv", x, p["table"])

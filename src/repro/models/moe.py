@@ -1,0 +1,200 @@
+"""Mixture-of-Experts FFN (GShard/Switch-style capacity dispatch).
+
+Design for expert parallelism under pjit: the per-expert buffers
+``(E, C, d)`` carry a sharding constraint on the expert axis (the mesh
+"model" axis), token activations stay sharded on the data axis, and the
+dispatch scatter / combine gather lower to cross-axis collectives chosen
+by SPMD.  The shard_map all-to-all variant lives in
+``repro.dist.collectives`` (used as a §Perf hillclimb lever).
+
+Router: softmax top-k with normalized weights + Switch-style load-balance
+auxiliary loss.  Shared experts (DeepSeek/Moonlight style) are a fused
+dense MLP applied to every token.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import dist
+
+from .layers import init_mlp, mlp_block
+
+
+def _tok_spec(mesh):
+    """(T*k, d) token-major tensors: shard dim0 over every mesh axis."""
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    return P(axes, None)
+
+
+def _ep_spec(mesh):
+    # (E, C, d): experts over 'model'.  (A 2-D variant additionally
+    # sharding C over 'data' was measured at 8x WORSE temp memory: XLA
+    # partitions the dispatch scatter by replicating the updates.  See
+    # EXPERIMENTS.md §Perf, refuted-hypothesis log.)
+    return P("model", None, None)
+
+
+Param = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    # "scatter": jit-level capacity dispatch (baseline);
+    # "a2a": shard_map expert-parallel all-to-all (§Perf variant)
+    moe_impl: str = "scatter"
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16) -> Param:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s_in = float(1.0 / np.sqrt(d_model))
+    s_out = float(1.0 / np.sqrt(cfg.d_expert))
+    p = {
+        "router": jax.random.normal(k1, (d_model, cfg.n_experts),
+                                    jnp.float32) * s_in,
+        "w_gate": jax.random.normal(k2, (cfg.n_experts, d_model,
+                                         cfg.d_expert), dtype) * s_in,
+        "w_up": jax.random.normal(k3, (cfg.n_experts, d_model,
+                                       cfg.d_expert), dtype) * s_in,
+        "w_down": jax.random.normal(k4, (cfg.n_experts, cfg.d_expert,
+                                         d_model), dtype) * s_out,
+    }
+    if cfg.n_shared:
+        p["shared"] = init_mlp(k5, d_model, cfg.n_shared * cfg.d_expert,
+                               gated=True, dtype=dtype)
+    return p
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(np.ceil(n_tokens * cfg.top_k * cfg.capacity_factor
+                    / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)   # round up to a multiple of 8
+
+
+def moe_block(p: Param, x: jnp.ndarray, cfg: MoEConfig,
+              ep_constraint=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``ep_constraint`` optionally applies a sharding constraint to the
+    (E, C, d) expert buffers (expert parallelism).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(t, cfg)
+
+    mesh = dist.get_mesh()
+    if cfg.moe_impl == "a2a" and mesh is not None             and "model" in mesh.axis_names:
+        return _moe_a2a(p, x, cfg, mesh)
+
+    # ---- router ----------------------------------------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)                   # (T, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+
+    # Switch load-balance loss: E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    onehot_top1 = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- dispatch: position of each (token, slot) inside its expert -------
+    # Sort-based (MegaBlocks-style): avoids materializing a (T*k, E)
+    # one-hot/cumsum — O(N) int32 arrays + one sort instead.
+    expert_flat = idx.reshape(-1)                            # (N = T*k,)
+    n = expert_flat.shape[0]
+    order = jnp.argsort(expert_flat)                         # (N,)
+    sorted_ids = expert_flat[order]
+    starts = jnp.searchsorted(sorted_ids,
+                              jnp.arange(e, dtype=sorted_ids.dtype))
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_ids]
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < c
+    pos_c = jnp.where(keep, pos, c)                          # overflow slot
+
+    token_idx = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    gathered = xf[token_idx]                                 # (T*k, d)
+    gathered = gathered * keep[:, None].astype(gathered.dtype)
+
+    buf = jnp.zeros((e, c + 1, d), dtype=x.dtype)
+    buf = buf.at[expert_flat, pos_c].add(gathered)
+    expert_in = buf[:, :c, :]                                # (E, C, d)
+    expert_in = dist.constrain(expert_in, _ep_spec)
+    if ep_constraint is not None:
+        expert_in = ep_constraint(expert_in)
+
+    # ---- expert FFN (SwiGLU), batched over experts -------------------------
+    g = jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, C, d)
+    expert_out = dist.constrain(expert_out, _ep_spec)
+    if ep_constraint is not None:
+        expert_out = ep_constraint(expert_out)
+
+    # ---- combine -------------------------------------------------------------
+    padded = jnp.concatenate(
+        [expert_out, jnp.zeros((e, 1, d), expert_out.dtype)], axis=1)
+    back = padded[expert_flat, pos_c]                        # (T*k, d)
+    # combine weights cast to the activation dtype BEFORE the big
+    # elementwise product: keeps the (T*k, d) backward cotangents in bf16
+    w_comb = (weights.astype(x.dtype).reshape(-1, 1)
+              * keep[:, None].astype(x.dtype))
+    back = back * w_comb
+    y = jnp.sum(back.reshape(t, k, d), axis=1)
+
+    if "shared" in p:
+        y = y + mlp_block(p["shared"], xf)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_a2a(p: Param, x: jnp.ndarray, cfg: MoEConfig, mesh
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """shard_map expert parallelism: explicit all-to-all dispatch instead
+    of the jit-level scatter whose SPMD partitioning is collective-heavy
+    (measured in EXPERIMENTS.md §Perf)."""
+    from repro.dist import collectives
+
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    xf = dist.constrain(xf, _tok_spec)
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    # aux loss computed jit-level (cheap, fully sharded)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top1 = jax.lax.top_k(probs, 1)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top1[:, 0], cfg.n_experts,
+                                 dtype=jnp.float32), axis=0)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+
+    n_model = mesh.shape["model"]
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    t_loc = t // (dp * n_model)
+    c_dev = max(8, int(-(-t_loc * cfg.top_k * cfg.capacity_factor
+                         // n_model) // 8 * 8 + 8))
+    y = collectives.moe_alltoall_block(
+        xf, logits, p["w_gate"], p["w_up"], p["w_down"], mesh,
+        cfg.top_k, c_dev,
+        local_capacity_factor=max(2.0, cfg.capacity_factor))
+    if "shared" in p:
+        y = y + mlp_block(p["shared"], xf)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,75 @@
+"""Message-passing primitive seam.
+
+JAX has no native sparse message passing (BCOO only), so the framework's
+GNN/message-passing layers all route through these helpers built on
+``jax.ops.segment_*`` — per the kernel taxonomy, this IS part of the
+system.  ``use_pallas`` switches the hot gather->reduce path to the
+fused Pallas kernel (``repro.kernels.segment_mp``) where shapes allow;
+the jnp path is the semantic reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_USE_PALLAS = False
+
+
+def set_use_pallas(flag: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = flag
+
+
+def gather_src(x: jnp.ndarray, edge_src: jnp.ndarray) -> jnp.ndarray:
+    return x[edge_src]
+
+
+def scatter_sum(messages: jnp.ndarray, edge_dst: jnp.ndarray,
+                n_nodes: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(messages, edge_dst, num_segments=n_nodes)
+
+
+def scatter_mean(messages, edge_dst, n_nodes: int):
+    s = scatter_sum(messages, edge_dst, n_nodes)
+    cnt = jax.ops.segment_sum(jnp.ones((messages.shape[0],), messages.dtype),
+                              edge_dst, num_segments=n_nodes)
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def scatter_max(messages, edge_dst, n_nodes: int):
+    return jax.ops.segment_max(messages, edge_dst, num_segments=n_nodes)
+
+
+def scatter_min(messages, edge_dst, n_nodes: int):
+    return jax.ops.segment_min(messages, edge_dst, num_segments=n_nodes)
+
+
+def degree(edge_dst: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(jnp.ones_like(edge_dst, dtype=jnp.float32),
+                               edge_dst, num_segments=n_nodes)
+
+
+def segment_softmax(logits: jnp.ndarray, segments: jnp.ndarray,
+                    n_segments: int) -> jnp.ndarray:
+    """Softmax over variable-size groups (GAT edge attention)."""
+    mx = jax.ops.segment_max(logits, segments, num_segments=n_segments)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(logits - mx[segments])
+    den = jax.ops.segment_sum(ex, segments, num_segments=n_segments)
+    return ex / jnp.maximum(den[segments], 1e-16)
+
+
+def propagate_matmul(x: jnp.ndarray, w: jnp.ndarray, edge_src: jnp.ndarray,
+                     edge_dst: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
+    """Fused gather -> matmul -> scatter-sum: y[v] = sum_{(u,v)} (x[u] @ w).
+
+    This is the SpMM-regime hot path; with ``set_use_pallas(True)`` it runs
+    through the blocked Pallas kernel (validated against this jnp path).
+    """
+    if _USE_PALLAS:
+        from repro.kernels.segment_mp import ops as smp_ops
+        return smp_ops.segment_matmul_reduce(x, w, edge_src, edge_dst,
+                                             n_nodes)
+    msgs = gather_src(x, edge_src) @ w
+    return scatter_sum(msgs, edge_dst, n_nodes)

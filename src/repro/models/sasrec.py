@@ -1,0 +1,126 @@
+"""SASRec (Self-Attentive Sequential Recommendation, arXiv:1808.09781).
+
+Item-embedding table (the huge-sparse-table regime) + 2 causal
+self-attention blocks over length-50 histories + dot-product scoring.
+Training uses the paper's BCE with one sampled negative per position;
+serving scores the last hidden state against candidate items (the
+``retrieval_cand`` shape scores 1M candidates with a batched dot, routed
+through the embedding-bag / matmul path — no loops).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Param = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str
+    n_items: int
+    seq_len: int = 50
+    d_embed: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def table_rows(cfg: SASRecConfig, multiple: int = 32) -> int:
+    """Embedding-table rows: n_items + 1 pad row, rounded up so the
+    row-sharded table divides the mesh 'model' axis."""
+    rows = cfg.n_items + 1
+    return -(-rows // multiple) * multiple
+
+
+def init_params(key, cfg: SASRecConfig) -> Param:
+    ks = jax.random.split(key, 2 + 6 * cfg.n_blocks)
+    dt = cfg.jdtype
+    d = cfg.d_embed
+    p = {
+        # row 0 is the padding item; tail rows are sharding pad (unused)
+        "item_emb": jax.random.normal(ks[0], (table_rows(cfg), d), dt) * 0.02,
+        "pos_emb": jax.random.normal(ks[1], (cfg.seq_len, d), dt) * 0.02,
+        "blocks": [],
+    }
+    for b in range(cfg.n_blocks):
+        k = ks[2 + 6 * b: 8 + 6 * b]
+        p["blocks"].append({
+            "wq": jax.random.normal(k[0], (d, d), dt) / np.sqrt(d),
+            "wk": jax.random.normal(k[1], (d, d), dt) / np.sqrt(d),
+            "wv": jax.random.normal(k[2], (d, d), dt) / np.sqrt(d),
+            "ln1": jnp.ones((d,), dt),
+            "w1": jax.random.normal(k[3], (d, d), dt) / np.sqrt(d),
+            "w2": jax.random.normal(k[4], (d, d), dt) / np.sqrt(d),
+            "ln2": jnp.ones((d,), dt),
+        })
+    return p
+
+
+def _ln(x, scale, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale
+
+
+def encode(params: Param, hist: jnp.ndarray, cfg: SASRecConfig):
+    """hist (B, S) item ids (0 = pad) -> hidden states (B, S, d)."""
+    b, s = hist.shape
+    x = params["item_emb"][hist] * np.sqrt(cfg.d_embed)
+    x = x + params["pos_emb"][None, :s, :]
+    pad_mask = hist > 0                                    # (B, S)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    mask = causal[None, :, :] & pad_mask[:, None, :]
+    h = cfg.n_heads
+    dh = cfg.d_embed // h
+    for blk in params["blocks"]:
+        xn = _ln(x, blk["ln1"])
+        q = (xn @ blk["wq"]).reshape(b, s, h, dh)
+        k = (xn @ blk["wk"]).reshape(b, s, h, dh)
+        v = (xn @ blk["wv"]).reshape(b, s, h, dh)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+        logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+        att = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, -1)
+        x = x + o
+        xn = _ln(x, blk["ln2"])
+        x = x + jax.nn.relu(xn @ blk["w1"]) @ blk["w2"]
+    return x * pad_mask[:, :, None]
+
+
+def bce_loss(params: Param, batch: dict, cfg: SASRecConfig):
+    """batch: hist (B,S), pos (B,S) next-item targets, neg (B,S) sampled
+    negatives; 0 = pad."""
+    h = encode(params, batch["hist"], cfg)                 # (B, S, d)
+    pe = params["item_emb"][batch["pos"]]
+    ne = params["item_emb"][batch["neg"]]
+    pos_logit = jnp.sum(h * pe, axis=-1)
+    neg_logit = jnp.sum(h * ne, axis=-1)
+    mask = (batch["pos"] > 0).astype(h.dtype)
+    loss = -(jax.nn.log_sigmoid(pos_logit)
+             + jax.nn.log_sigmoid(-neg_logit)) * mask
+    loss = jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss}
+
+
+def score_catalog(params: Param, hist: jnp.ndarray, cfg: SASRecConfig):
+    """Serve: score every item for each user (B, n_items+1)."""
+    h = encode(params, hist, cfg)[:, -1, :]                # (B, d)
+    return h @ params["item_emb"].T
+
+
+def score_candidates(params: Param, hist: jnp.ndarray,
+                     candidates: jnp.ndarray, cfg: SASRecConfig):
+    """Retrieval: hist (B,S), candidates (B, C) -> scores (B, C)."""
+    h = encode(params, hist, cfg)[:, -1, :]                # (B, d)
+    ce = params["item_emb"][candidates]                    # (B, C, d)
+    return jnp.einsum("bd,bcd->bc", h, ce)

@@ -1,0 +1,5 @@
+from . import adamw, compress
+from .adamw import AdamWConfig, AdamWState, make_train_step
+
+__all__ = ["adamw", "compress", "AdamWConfig", "AdamWState",
+           "make_train_step"]

@@ -1,0 +1,67 @@
+"""Gradient compression for the cross-pod hop: int8 quantization with
+error feedback (1-bit-Adam-family trick adapted to int8).
+
+At 512+ chips the pod-to-pod gradient all-reduce crosses the slowest
+links; quantizing the cross-pod summand to int8 with per-tensor scales
+cuts that traffic 4x (bf16) while error feedback keeps convergence
+(residuals re-injected next step).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: dict          # same tree as grads, fp32
+
+
+def init_error_feedback(params) -> EFState:
+    return EFState(residual=jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization; returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef: EFState) -> Tuple[dict, EFState]:
+    """Quantize grads+residual to int8; new residual = quantization error.
+
+    The returned tree holds (q, scale) pairs; ``decompress_grads``
+    reconstructs fp32.  In the distributed step this runs on the
+    cross-pod axis only (see repro.dist.collectives.cross_pod_allreduce).
+    """
+    def one(g, r):
+        tot = g.astype(jnp.float32) + r
+        q, s = quantize_int8(tot)
+        deq = dequantize_int8(q, s)
+        return (q, s), tot - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    qs, rs = [], []
+    for g, r in zip(flat_g, flat_r):
+        (q, s), nr = one(g, r)
+        qs.append((q, s))
+        rs.append(nr)
+    return (jax.tree_util.tree_unflatten(treedef, qs),
+            EFState(residual=jax.tree_util.tree_unflatten(treedef, rs)))
+
+
+def decompress_grads(qtree) -> dict:
+    return jax.tree_util.tree_map(
+        lambda qs: dequantize_int8(*qs), qtree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and hasattr(x[0], "dtype"))

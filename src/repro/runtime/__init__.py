@@ -1,0 +1,5 @@
+from .server import GraphQueryServer, LMServer, RecServer
+from .trainer import HeartbeatMonitor, Trainer, TrainerConfig
+
+__all__ = ["GraphQueryServer", "LMServer", "RecServer", "HeartbeatMonitor",
+           "Trainer", "TrainerConfig"]

@@ -1,0 +1,178 @@
+"""Tests for the JAX analytics bridge (snapshot -> arrays -> traversals)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import networkx as nx
+
+from repro.core import Weaver, WeaverConfig
+from repro.core import analytics as A
+from repro.core.clock import Stamp
+
+
+def _random_edges(rng, n, m):
+    src = rng.integers(0, n, size=m).astype(np.int32)
+    dst = rng.integers(0, n, size=m).astype(np.int32)
+    return src, dst
+
+
+class TestFrontierPrograms:
+    def test_bfs_levels_line_graph(self):
+        src = np.array([0, 1, 2], dtype=np.int32)
+        dst = np.array([1, 2, 3], dtype=np.int32)
+        lv = np.asarray(A.bfs_levels(jnp.asarray(src), jnp.asarray(dst), 4,
+                                     jnp.asarray([0])))
+        assert lv.tolist() == [0, 1, 2, 3]
+
+    def test_bfs_unreachable_is_inf(self):
+        src = np.array([0], dtype=np.int32)
+        dst = np.array([1], dtype=np.int32)
+        lv = np.asarray(A.bfs_levels(jnp.asarray(src), jnp.asarray(dst), 3,
+                                     jnp.asarray([0])))
+        assert lv[2] == A.INF
+
+    @given(st.integers(2, 30), st.integers(1, 80), st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_bfs_matches_networkx(self, n, m, seed):
+        rng = np.random.default_rng(seed)
+        src, dst = _random_edges(rng, n, m)
+        g = nx.DiGraph()
+        g.add_nodes_from(range(n))
+        g.add_edges_from(zip(src.tolist(), dst.tolist()))
+        ref = nx.single_source_shortest_path_length(g, 0)
+        lv = np.asarray(A.bfs_levels(jnp.asarray(src), jnp.asarray(dst), n,
+                                     jnp.asarray([0])))
+        for v in range(n):
+            if v in ref:
+                assert lv[v] == ref[v], (v, lv[v], ref[v])
+            else:
+                assert lv[v] == A.INF
+
+    @given(st.integers(2, 25), st.integers(0, 60), st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_connected_components_match_networkx(self, n, m, seed):
+        rng = np.random.default_rng(seed)
+        src, dst = _random_edges(rng, n, m)
+        g = nx.Graph()
+        g.add_nodes_from(range(n))
+        g.add_edges_from(zip(src.tolist(), dst.tolist()))
+        lab = np.asarray(A.connected_components(jnp.asarray(src),
+                                                jnp.asarray(dst), n))
+        for comp in nx.connected_components(g):
+            labs = {int(lab[v]) for v in comp}
+            assert len(labs) == 1
+
+    def test_pagerank_sums_to_one(self):
+        rng = np.random.default_rng(0)
+        src, dst = _random_edges(rng, 50, 300)
+        pr = np.asarray(A.pagerank(jnp.asarray(src), jnp.asarray(dst), 50))
+        # dangling mass leaks in this formulation only if a node has no
+        # out-edges; with 300 random edges over 50 nodes that's unlikely
+        assert pr.min() > 0
+
+    def test_sssp_weighted(self):
+        src = np.array([0, 0, 1], dtype=np.int32)
+        dst = np.array([1, 2, 2], dtype=np.int32)
+        w = np.array([1.0, 5.0, 1.0], dtype=np.float32)
+        d = np.asarray(A.sssp_weighted(jnp.asarray(src), jnp.asarray(dst),
+                                       jnp.asarray(w), 3, jnp.asarray([0])))
+        assert d[2] == pytest.approx(2.0)
+
+    def test_clustering_jax_matches_np(self):
+        rng = np.random.default_rng(1)
+        src, dst = _random_edges(rng, 20, 80)
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        # dedupe parallel edges (the numpy reference uses sets)
+        pairs = sorted(set(zip(src.tolist(), dst.tolist())))
+        src = np.asarray([p[0] for p in pairs], np.int32)
+        dst = np.asarray([p[1] for p in pairs], np.int32)
+        ref = A.clustering_coefficients_np(src, dst, 20)
+        got = np.asarray(A.clustering_coefficients_jax(src, dst, 20,
+                                                       max_deg=20))
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+class TestSnapshotBridge:
+    def test_snapshot_matches_node_program(self):
+        w = Weaver(WeaverConfig(n_gatekeepers=2, n_shards=3, seed=2))
+        tx = w.begin_tx()
+        for v in "abcde":
+            tx.create_vertex(v)
+        for s, d in [("a", "b"), ("b", "c"), ("c", "d"), ("a", "e")]:
+            tx.create_edge(s, d)
+        assert w.run_tx(tx).ok
+        # delete one edge
+        eid = [e for e, dd in w.read_vertex("b")["edges"].items()][0]
+        tx2 = w.begin_tx()
+        tx2.delete_edge("b", eid)
+        assert w.run_tx(tx2).ok
+
+        res, stamp, _ = w.run_program("traverse", [("a", {"depth": 0})])
+        ga = A.snapshot_arrays(w, stamp)
+        lv = np.asarray(A.bfs_levels(jnp.asarray(ga.edge_src),
+                                     jnp.asarray(ga.edge_dst), ga.n_nodes,
+                                     jnp.asarray([ga.index["a"]])))
+        reachable = sorted(ga.vids[i] for i in range(ga.n_nodes)
+                           if lv[i] < A.INF)
+        assert reachable == res
+
+    def test_visibility_kernel_path_matches(self):
+        w = Weaver(WeaverConfig(n_gatekeepers=2, n_shards=2, seed=3))
+        tx = w.begin_tx()
+        for v in "xyz":
+            tx.create_vertex(v)
+        e1 = tx.create_edge("x", "y")
+        tx.create_edge("y", "z")
+        assert w.run_tx(tx).ok
+        tx2 = w.begin_tx()
+        tx2.delete_edge(e1)
+        assert w.run_tx(tx2).ok
+        res, stamp, _ = w.run_program("count_edges", [("x", None)])
+        assert res == 0
+        ga = A.snapshot_arrays(w, stamp, keep_raw=True)
+        vsrc, vdst, mask = A.visible_edges_at(ga, stamp,
+                                              w.cfg.n_gatekeepers)
+        # filtered edges equal the snapshot edge list
+        got = sorted(zip(vsrc.tolist(), vdst.tolist()))
+        want = sorted(zip(ga.edge_src.tolist(), ga.edge_dst.tolist()))
+        assert got == want
+
+
+class TestBaselines:
+    def test_twopl_store_basic(self):
+        from repro.core.twopl import TwoPLStore
+        s = TwoPLStore(n_shards=3, seed=0)
+        s.load_graph([("a", "b"), ("b", "c")])
+        done = []
+        s.submit([{"op": "get_vertex", "vid": "a"}], done.append)
+        s.sim.run(until=0.1)
+        assert done and done[0]["ok"]
+        assert done[0]["reads"]["a"]["edges"]
+
+    def test_twopl_contention_serializes(self):
+        from repro.core.twopl import TwoPLStore
+        s = TwoPLStore(n_shards=2, seed=0)
+        s.load_graph([("h", "x")])
+        done = []
+        for i in range(10):
+            s.submit([{"op": "set_vertex_prop", "vid": "h", "key": "k",
+                       "value": i}], done.append)
+        s.sim.run(until=1.0)
+        assert len(done) == 10
+        assert s.sim.counters.lock_waits > 0
+
+    def test_bsp_sync_and_async_reach_target(self):
+        from repro.core.bsp import BSPEngine
+        e = BSPEngine(n_workers=3, seed=0)
+        e.load_graph([(f"v{i}", f"v{i+1}") for i in range(20)])
+        out = []
+        e.bfs_sync("v0", "v20", out.append)
+        e.sim.run(until=1.0)
+        assert out and out[0]["reached"]
+        assert out[0]["levels"] >= 20
+        out2 = []
+        e.bfs_async("v0", "v20", out2.append)
+        e.sim.run(until=2.0)
+        assert out2 and out2[0]["reached"]

@@ -1,0 +1,207 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs the
+pure-jnp ref.py oracles, plus hypothesis property tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clock
+from repro.core.clock import Stamp
+
+
+# ------------------------------------------------------------ mv_visibility
+class TestMVVisibility:
+    def _rand_rows(self, rng, n, g, frac_nostamp=0.3):
+        rows = rng.integers(0, 6, size=(n, g + 1)).astype(np.int32)
+        rows[:, 0] = rng.integers(0, 2, size=n)        # epochs
+        no = rng.random(n) < frac_nostamp
+        rows[no] = clock.NO_STAMP
+        return rows
+
+    @pytest.mark.parametrize("n,g", [(7, 1), (64, 2), (300, 3), (1024, 4),
+                                     (2500, 8)])
+    def test_matches_ref_and_core(self, n, g):
+        from repro.kernels.mv_visibility import ops
+        rng = np.random.default_rng(n * 31 + g)
+        creates = rng.integers(0, 6, size=(n, g + 1)).astype(np.int32)
+        creates[:, 0] = 0
+        deletes = self._rand_rows(rng, n, g, frac_nostamp=0.5)
+        q = np.asarray([0] + list(rng.integers(0, 6, g)), np.int32)
+        got = np.asarray(ops.visibility_mask(creates, deletes, q))
+        ref = np.asarray(ops.visibility_mask(creates, deletes, q,
+                                             use_ref=True))
+        core = clock.visibility_mask_np(creates, deletes, q)
+        np.testing.assert_array_equal(got, ref)
+        np.testing.assert_array_equal(got, core)
+
+    @given(st.integers(1, 5), st.integers(1, 200), st.integers(0, 10**6))
+    @settings(max_examples=30, deadline=None)
+    def test_property_matches_core(self, g, n, seed):
+        from repro.kernels.mv_visibility import ops
+        rng = np.random.default_rng(seed)
+        creates = rng.integers(0, 4, size=(n, g + 1)).astype(np.int32)
+        creates[:, 0] = rng.integers(0, 2, size=n)
+        deletes = self._rand_rows(rng, n, g)
+        q = rng.integers(0, 4, size=g + 1).astype(np.int32)
+        got = np.asarray(ops.visibility_mask(creates, deletes, q,
+                                             block_n=128))
+        core = clock.visibility_mask_np(creates, deletes, q)
+        np.testing.assert_array_equal(got, core)
+
+
+# -------------------------------------------------------------- segment_mp
+class TestSegmentMP:
+    @pytest.mark.parametrize("n,e,d,f,dtype", [
+        (64, 256, 16, 32, jnp.float32),
+        (128, 1000, 64, 64, jnp.float32),
+        (300, 2000, 32, 8, jnp.float32),
+        (128, 512, 128, 128, jnp.bfloat16),
+        (17, 3, 8, 16, jnp.float32),          # tiny/ragged
+    ])
+    def test_matches_ref(self, n, e, d, f, dtype):
+        from repro.kernels.segment_mp import ops
+        from repro.kernels.segment_mp.ref import segment_matmul_reduce_ref
+        rng = np.random.default_rng(e + d)
+        x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+        w = jnp.asarray(rng.normal(size=(d, f)), dtype)
+        src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+        dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+        got = ops.segment_matmul_reduce(x, w, src, dst, n,
+                                        block_n=32, block_e=64)
+        # bf16: the kernel accumulates fp32 across tiles, so compare to
+        # the fp32 ground truth with bf16-eps-scaled tolerance
+        ref = segment_matmul_reduce_ref(
+            x.astype(jnp.float32), w.astype(jnp.float32), src, dst, n)
+        if dtype == jnp.bfloat16:
+            tol = dict(rtol=3e-2, atol=3e-1)
+        else:
+            tol = dict(rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32), **tol)
+
+    def test_skewed_degrees(self):
+        """Power-law dst distribution (one hub node)."""
+        from repro.kernels.segment_mp import ops
+        from repro.kernels.segment_mp.ref import segment_matmul_reduce_ref
+        rng = np.random.default_rng(0)
+        n, e, d, f = 100, 3000, 16, 16
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(d, f)), jnp.float32)
+        src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+        dst = np.where(rng.random(e) < 0.5, 7,
+                       rng.integers(0, n, e)).astype(np.int32)
+        got = ops.segment_matmul_reduce(x, w, src, jnp.asarray(dst), n,
+                                        block_n=32, block_e=128)
+        ref = segment_matmul_reduce_ref(x, w, src, jnp.asarray(dst), n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_mp_seam_switches(self):
+        """repro.models.mp routes through the kernel when enabled."""
+        from repro.models import mp
+        rng = np.random.default_rng(1)
+        n, e, d, f = 40, 200, 8, 8
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(d, f)), jnp.float32)
+        src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+        dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+        base = mp.propagate_matmul(x, w, src, dst, n)
+        mp.set_use_pallas(True)
+        try:
+            fused = mp.propagate_matmul(x, w, src, dst, n)
+        finally:
+            mp.set_use_pallas(False)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(fused),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------- flash_attention
+class TestFlashAttention:
+    @pytest.mark.parametrize("bh,sq,sk,d,causal,window,dtype", [
+        (2, 128, 128, 64, True, None, jnp.float32),
+        (1, 256, 256, 32, True, None, jnp.float32),
+        (3, 128, 128, 64, False, None, jnp.float32),
+        (2, 128, 128, 64, True, 64, jnp.float32),     # sliding window
+        (2, 128, 256, 64, True, None, jnp.float32),   # decode-ish sk>sq
+        (2, 256, 256, 128, True, None, jnp.bfloat16),
+    ])
+    def test_matches_ref(self, bh, sq, sk, d, causal, window, dtype):
+        from repro.kernels.flash_attention.kernel import \
+            flash_attention_pallas
+        from repro.kernels.flash_attention.ref import attention_ref
+        rng = np.random.default_rng(sq + sk + d)
+        q = jnp.asarray(rng.normal(size=(bh, sq, d)), dtype)
+        k = jnp.asarray(rng.normal(size=(bh, sk, d)), dtype)
+        v = jnp.asarray(rng.normal(size=(bh, sk, d)), dtype)
+        got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                     block_q=64, block_k=64)
+        ref = attention_ref(q, k, v, causal=causal, window=window)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_gqa_wrapper_matches_model_attention(self):
+        from repro.kernels.flash_attention import ops
+        from repro.models.layers import attention as model_attention
+        rng = np.random.default_rng(5)
+        b, s, hq, hkv, d = 2, 128, 8, 2, 32
+        q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        got = ops.mha(q, k, v, causal=True)
+        ref = model_attention(q, k, v, pos, pos, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @given(st.sampled_from([64, 128]), st.sampled_from([64, 128]),
+           st.sampled_from([32, 64]), st.integers(0, 10**6))
+    @settings(max_examples=10, deadline=None)
+    def test_property_rowsums(self, sq, sk, d, seed):
+        """Attention output of constant-V must be ~V (probs sum to 1)."""
+        from repro.kernels.flash_attention.kernel import \
+            flash_attention_pallas
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(1, sq, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, sk, d)), jnp.float32)
+        v = jnp.ones((1, sk, d), jnp.float32) * 3.5
+        got = flash_attention_pallas(q, k, v, causal=False,
+                                     block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(got), 3.5, rtol=1e-5)
+
+
+# ------------------------------------------------------------ embedding_bag
+class TestEmbeddingBag:
+    @pytest.mark.parametrize("v,d,b,l,weighted,mode,dtype", [
+        (50, 128, 4, 6, False, "sum", jnp.float32),
+        (200, 128, 8, 10, True, "sum", jnp.float32),
+        (100, 256, 3, 5, True, "mean", jnp.float32),
+        (64, 128, 16, 4, False, "mean", jnp.float32),
+        (32, 128, 5, 7, True, "sum", jnp.bfloat16),
+    ])
+    def test_matches_ref(self, v, d, b, l, weighted, mode, dtype):
+        from repro.kernels.embedding_bag import ops
+        rng = np.random.default_rng(v + b)
+        table = jnp.asarray(rng.normal(size=(v, d)), dtype)
+        idx = rng.integers(0, v, size=(b, l)).astype(np.int32)
+        idx[rng.random((b, l)) < 0.2] = -1             # padding
+        # positive weights: mean-mode normalizes by sum(w), which must
+        # stay away from 0 for a well-conditioned comparison
+        w = jnp.asarray(np.abs(rng.normal(size=(b, l))) + 0.1,
+                        jnp.float32) if weighted else None
+        got = ops.embedding_bag(table, jnp.asarray(idx), w, mode=mode)
+        ref = ops.embedding_bag(table, jnp.asarray(idx), w, mode=mode,
+                                use_ref=True)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_all_padding_bag_is_zero(self):
+        from repro.kernels.embedding_bag import ops
+        table = jnp.ones((10, 128), jnp.float32)
+        idx = jnp.full((2, 3), -1, jnp.int32)
+        got = ops.embedding_bag(table, idx)
+        np.testing.assert_array_equal(np.asarray(got), 0.0)
