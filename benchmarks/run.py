@@ -2,6 +2,7 @@
 
 Prints ``name,metric,value`` CSV lines (simulated time; deterministic).
 
+  snapshot       — snapshot materialization: columnar cold/delta vs seed
   block_query    — Fig. 7 / Table 2 (CoinGraph vs relational explorer)
   social         — Fig. 9 / Fig. 10 (TAO mix, Weaver vs 2PL)
   traversal      — Fig. 11 (node programs vs BSP sync/async)
@@ -18,10 +19,11 @@ import time
 
 def main() -> None:
     from . import (block_query, coordination, roofline, scalability,
-                   social, traversal)
+                   snapshot, social, traversal)
 
-    modules = [("block_query", block_query), ("social", social),
-               ("traversal", traversal), ("scalability", scalability),
+    modules = [("snapshot", snapshot), ("block_query", block_query),
+               ("social", social), ("traversal", traversal),
+               ("scalability", scalability),
                ("coordination", coordination), ("roofline", roofline)]
     t00 = time.time()
     for name, mod in modules:

@@ -1,0 +1,167 @@
+"""Snapshot-materialization microbenchmark (columnar engine PR).
+
+Times three ways of materializing a timestamp-consistent snapshot of a
+~100k-edge synthetic social graph (wall-clock, not simulated time — this
+measures the data-plane bridge itself):
+
+* ``python``  — the seed per-object path (`snapshot_arrays_python`):
+  per-vertex/per-edge dict iteration with per-stamp ``compare`` calls;
+* ``cold``    — columnar cold build: concatenate shard columns, one
+  batched visibility pass, vectorized CSR compaction;
+* ``delta``   — cached delta refresh after mutating <1% of stamps
+  (O(changed) re-evaluation + sorted-merge patch of the CSR arrays);
+* ``noop``    — cached refresh with nothing changed.
+
+Writes ``BENCH_snapshot.json`` at the repo root (plus the usual
+results/bench copy) with median seconds and speedups, so the perf
+trajectory of the snapshot path is tracked across PRs.
+
+Writes are applied directly to the shard partitions with synthetic
+totally-ordered stamps: the transaction pipeline is not under test here.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import Weaver, WeaverConfig
+from repro.core import analytics as A
+from repro.core.analytics import SnapshotEngine
+from repro.core.clock import Stamp
+
+from .common import save_result
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+N_USERS = 20_000
+AVG_DEG = 5
+
+
+class _StampGen:
+    """Totally-ordered synthetic stamps (round-robin gatekeepers)."""
+
+    def __init__(self, n_gk: int):
+        self.n_gk = n_gk
+        self.clock = [0] * n_gk
+        self.i = 0
+
+    def next(self) -> Stamp:
+        g = self.i % self.n_gk
+        self.i += 1
+        self.clock[g] += 1
+        return Stamp(0, tuple(self.clock), g, self.clock[g])
+
+    def query(self) -> Stamp:
+        """A stamp after everything issued so far (program-like)."""
+        g = self.i % self.n_gk
+        self.i += 1
+        self.clock = [c + 1 for c in self.clock]
+        return Stamp(0, tuple(self.clock), g, self.clock[g])
+
+
+def _build(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    from repro.data import synth
+    edges = synth.social_graph(rng, N_USERS, AVG_DEG)
+    w = Weaver(WeaverConfig(n_gatekeepers=2, n_shards=4, gc_period=0,
+                            seed=seed))
+    sg = _StampGen(w.cfg.n_gatekeepers)
+    part_of = lambda vid: w.shards[w.store.place(vid)].partition
+    vertices = sorted({v for e in edges for v in e})
+    for v in vertices:
+        part_of(v).create_vertex(v, sg.next())
+    handles = []
+    for s, d in edges:
+        handles.append((s, part_of(s).create_edge(s, d, sg.next()).eid))
+    return w, sg, vertices, handles, len(edges)
+
+
+def _canon(ga) -> tuple:
+    vids = ga.vids[:ga.n_nodes]
+    pairs = sorted(zip((vids[i] for i in ga.edge_src.tolist()),
+                       (vids[i] for i in ga.edge_dst.tolist())))
+    return sorted(vids), pairs
+
+
+def _median(f, iters: int) -> float:
+    ts: List[float] = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        f()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def main() -> None:
+    w, sg, vertices, handles, n_edges = _build()
+    at = sg.query()
+
+    # seed python path (O(V+E) interpreter work per query)
+    t_python = _median(lambda: A.snapshot_arrays_python(w, at), 2)
+
+    # columnar cold build (fresh engine each run)
+    t_cold = _median(lambda: SnapshotEngine(w).snapshot(at), 3)
+
+    # equivalence spot-check while we are here
+    eng = SnapshotEngine(w)
+    ok = _canon(eng.snapshot(at)) == _canon(A.snapshot_arrays_python(w, at))
+
+    # delta refresh: mutate <1% of stamps, re-snapshot on a warm engine
+    rng = np.random.default_rng(1)
+    frac = max(1, n_edges // 400)        # 0.25% of edges
+    part_of = lambda vid: w.shards[w.store.place(vid)].partition
+    delta_ts: List[float] = []
+    at_i = at
+    for round_i in range(14):
+        for s, d in zip(rng.choice(vertices, frac // 2),
+                        rng.choice(vertices, frac // 2)):
+            part_of(s).create_edge(s, d, sg.next())
+        kill = rng.integers(0, len(handles), frac // 2)
+        for i in kill:
+            s, eid = handles[int(i)]
+            e = part_of(s).vertices[s].out_edges[eid]
+            if e.delete_ts is None:
+                part_of(s).delete_edge(s, eid, sg.next())
+        at_i = sg.query()
+        t0 = time.perf_counter()
+        eng.snapshot(at_i)
+        if round_i >= 4:             # first rounds warm the grow buffers
+            delta_ts.append(time.perf_counter() - t0)
+    t_delta = float(np.median(delta_ts))
+
+    # no-change refresh at a fresh later stamp
+    at_n = sg.query()
+    t_noop = _median(lambda: eng.snapshot(at_n), 5)
+
+    # delta result still equivalent after the mutation stream
+    ok = ok and (_canon(eng.snapshot(at_n))
+                 == _canon(A.snapshot_arrays_python(w, at_n)))
+
+    payload = {
+        "graph": {"n_vertices": len(vertices), "n_edges": n_edges},
+        "seconds": {"python": t_python, "cold": t_cold,
+                    "delta": t_delta, "noop": t_noop},
+        "speedup": {"cold_vs_python": t_python / t_cold,
+                    "delta_vs_cold": t_cold / t_delta,
+                    "noop_vs_cold": t_cold / t_noop},
+        "changed_per_delta": frac,
+        "engine_stats": eng.stats,
+        "equivalent": bool(ok),
+    }
+    for k, v in payload["seconds"].items():
+        print(f"snapshot,seconds_{k},{v:.6f}")
+    for k, v in payload["speedup"].items():
+        print(f"snapshot,{k},{v:.2f}")
+    print(f"snapshot,equivalent,{int(ok)}")
+    with open(os.path.join(REPO_ROOT, "BENCH_snapshot.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    save_result("snapshot", payload)
+
+
+if __name__ == "__main__":
+    main()

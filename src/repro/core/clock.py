@@ -137,6 +137,23 @@ def visibility_mask_np(create_rows: np.ndarray, delete_rows: np.ndarray,
     return _np_before(create_rows, q) & ~_np_before(delete_rows, q)
 
 
+def concurrent_mask_np(rows: np.ndarray, q: np.ndarray) -> np.ndarray:
+    """rows[i] possibly concurrent with q (numpy analog of
+    :func:`concurrent_mask`).
+
+    Same epoch and vector-incomparable, plus the equal-vector case (equal
+    vectors from *different* gatekeepers are distinct-but-concurrent; the
+    packed row does not carry the gatekeeper id, so callers must resolve
+    equal-vector hits against the original :class:`Stamp`).
+    """
+    is_no = rows[:, 0] == NO_STAMP
+    same_epoch = rows[:, 0] == q[0]
+    le = np.all(rows[:, 1:] <= q[1:], axis=1)
+    ge = np.all(rows[:, 1:] >= q[1:], axis=1)
+    eq = le & ge
+    return (~is_no) & same_epoch & ((~le & ~ge) | eq)
+
+
 if jnp is not None:
 
     def _jnp_before(rows, q):

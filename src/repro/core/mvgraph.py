@@ -11,6 +11,31 @@ Visibility at stamp ``T`` (for snapshot reads by node programs, §4.2):
 ``create_ts ≺ T  and  not (delete_ts ≺ T)``.  If a relevant stamp is
 *concurrent* with T, the caller (shard server) must refine through the
 timeline oracle — this module reports concurrency instead of guessing.
+
+Columnar mirror (data-plane hot path)
+-------------------------------------
+Besides the per-object dict structures (which serve the shard's own
+node-program reads), every partition incrementally maintains a
+struct-of-arrays mirror, :class:`PartitionColumns`:
+
+* vertices: ``v_gid`` (slot -> global interned vid id), packed
+  ``v_create`` / ``v_delete`` stamp matrices of shape ``(N, G+1)`` int32
+  (row = ``[epoch, c_0..c_{G-1}]``, all-``NO_STAMP`` = absent), plus the
+  original :class:`~repro.core.clock.Stamp` objects for oracle
+  refinement of truly concurrent rows;
+* edges: ``e_src`` / ``e_dst`` interned-id columns with the same packed
+  stamp matrices;
+* a monotone ``version`` and per-table patch logs so snapshot caches can
+  do **delta refresh**: re-evaluate only slots whose stamps changed since
+  the cached build instead of rescanning O(V+E) objects.
+
+Columns are append-mostly: creates append a slot, deletes/GC patch the
+slot's stamp rows in place (GC "purges" a slot by writing all-``NO_STAMP``
+rows, which no query stamp can ever see).  Vertex ids are interned
+through a :class:`VidIntern` shared across all partitions of a deployment
+so that edge endpoints are cross-shard-resolvable integers at write time
+— the snapshot engine (``repro.core.analytics``) never touches a Python
+string on the per-object path.
 """
 
 from __future__ import annotations
@@ -18,7 +43,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
-from .clock import Order, Stamp, compare
+import numpy as np
+
+from . import clock as _clock
+from .clock import NO_STAMP, Order, Stamp, compare, pack
 
 
 @dataclass
@@ -73,12 +101,214 @@ def visible(create_ts: Stamp, delete_ts: Optional[Stamp], at: Stamp,
     return True
 
 
+class VidIntern:
+    """Process-wide vid -> dense int32 id table (shared by all partitions
+    of one deployment so edge endpoints resolve across shards)."""
+
+    __slots__ = ("ids", "vids")
+
+    def __init__(self) -> None:
+        self.ids: Dict[str, int] = {}
+        self.vids: List[str] = []
+
+    def intern(self, vid: str) -> int:
+        i = self.ids.get(vid)
+        if i is None:
+            i = len(self.vids)
+            self.ids[vid] = i
+            self.vids.append(vid)
+        return i
+
+    def __len__(self) -> int:
+        return len(self.vids)
+
+
+class _GrowRows:
+    """Growable (N, C) int32 matrix with amortized O(1) row appends."""
+
+    __slots__ = ("c", "n", "buf")
+
+    def __init__(self, c: int, cap: int = 64) -> None:
+        self.c = c
+        self.n = 0
+        self.buf = np.empty((cap, c), np.int32)
+
+    def _grow(self) -> None:
+        nu = np.empty((max(2 * self.buf.shape[0], 64), self.c), np.int32)
+        nu[:self.n] = self.buf[:self.n]
+        self.buf = nu
+
+    def append(self, row: np.ndarray) -> int:
+        if self.n == self.buf.shape[0]:
+            self._grow()
+        self.buf[self.n] = row
+        self.n += 1
+        return self.n - 1
+
+    def set(self, i: int, row: np.ndarray) -> None:
+        self.buf[i] = row
+
+    def view(self) -> np.ndarray:
+        return self.buf[:self.n]
+
+
+class _GrowInts:
+    """Growable (N,) int32 vector with amortized O(1) appends."""
+
+    __slots__ = ("n", "buf")
+
+    def __init__(self, cap: int = 64) -> None:
+        self.n = 0
+        self.buf = np.empty((cap,), np.int32)
+
+    def append(self, x: int) -> int:
+        if self.n == self.buf.shape[0]:
+            nu = np.empty((max(2 * self.buf.shape[0], 64),), np.int32)
+            nu[:self.n] = self.buf[:self.n]
+            self.buf = nu
+        self.buf[self.n] = x
+        self.n += 1
+        return self.n - 1
+
+    def view(self) -> np.ndarray:
+        return self.buf[:self.n]
+
+
+class PartitionColumns:
+    """Struct-of-arrays mirror of one partition (see module docstring).
+
+    Slots are stable: a vid (or (src, eid) edge key) keeps its slot across
+    delete / GC / re-create; only its stamp rows are patched.  ``v_patch``
+    / ``e_patch`` log every in-place patch (appends are implied by the
+    growth of ``n_v`` / ``n_e``); consumers track their own read offsets.
+    """
+
+    def __init__(self, n_gk: int, intern: Optional[VidIntern] = None) -> None:
+        self.n_gk = n_gk
+        self.c = n_gk + 1
+        self.intern = intern if intern is not None else VidIntern()
+        self._no_row = np.full((self.c,), NO_STAMP, np.int32)
+        # vertex table
+        self.v_gid = _GrowInts()
+        self.v_create = _GrowRows(self.c)
+        self.v_delete = _GrowRows(self.c)
+        self.v_create_stamp: List[Optional[Stamp]] = []
+        self.v_delete_stamp: List[Optional[Stamp]] = []
+        self.v_slot: Dict[int, int] = {}          # gid -> slot
+        # edge table
+        self.e_src = _GrowInts()
+        self.e_dst = _GrowInts()
+        self.e_create = _GrowRows(self.c)
+        self.e_delete = _GrowRows(self.c)
+        self.e_create_stamp: List[Optional[Stamp]] = []
+        self.e_delete_stamp: List[Optional[Stamp]] = []
+        self.e_slot: Dict[Tuple[int, int], int] = {}  # (src gid, eid) -> slot
+        # change log
+        self.version = 0
+        self.v_patch: List[int] = []
+        self.e_patch: List[int] = []
+
+    @property
+    def n_v(self) -> int:
+        return self.v_gid.n
+
+    @property
+    def n_e(self) -> int:
+        return self.e_src.n
+
+    # ---- vertex events ---------------------------------------------------
+    def vertex_created(self, vid: str, ts: Stamp) -> None:
+        gid = self.intern.intern(vid)
+        slot = self.v_slot.get(gid)
+        row = pack(ts, self.n_gk)
+        if slot is None:
+            self.v_slot[gid] = self.v_gid.append(gid)
+            self.v_create.append(row)
+            self.v_delete.append(self._no_row)
+            self.v_create_stamp.append(ts)
+            self.v_delete_stamp.append(None)
+        else:  # re-create after delete (slot reuse keeps ordering stable)
+            self.v_create.set(slot, row)
+            self.v_delete.set(slot, self._no_row)
+            self.v_create_stamp[slot] = ts
+            self.v_delete_stamp[slot] = None
+            self.v_patch.append(slot)
+        self.version += 1
+
+    def vertex_deleted(self, vid: str, ts: Stamp) -> None:
+        slot = self.v_slot[self.intern.intern(vid)]
+        self.v_delete.set(slot, pack(ts, self.n_gk))
+        self.v_delete_stamp[slot] = ts
+        self.v_patch.append(slot)
+        self.version += 1
+
+    def vertex_purged(self, vid: str) -> None:
+        """GC: the slot can never be visible again (all-NO_STAMP rows)."""
+        slot = self.v_slot[self.intern.intern(vid)]
+        self.v_create.set(slot, self._no_row)
+        self.v_delete.set(slot, self._no_row)
+        self.v_create_stamp[slot] = None
+        self.v_delete_stamp[slot] = None
+        self.v_patch.append(slot)
+        self.version += 1
+
+    # ---- edge events -----------------------------------------------------
+    def edge_created(self, src: str, dst: str, eid: int, ts: Stamp) -> None:
+        sg = self.intern.intern(src)
+        dg = self.intern.intern(dst)
+        key = (sg, eid)
+        slot = self.e_slot.get(key)
+        row = pack(ts, self.n_gk)
+        if slot is None:
+            self.e_slot[key] = self.e_src.append(sg)
+            self.e_dst.append(dg)
+            self.e_create.append(row)
+            self.e_delete.append(self._no_row)
+            self.e_create_stamp.append(ts)
+            self.e_delete_stamp.append(None)
+        else:
+            self.e_create.set(slot, row)
+            self.e_delete.set(slot, self._no_row)
+            self.e_create_stamp[slot] = ts
+            self.e_delete_stamp[slot] = None
+            self.e_patch.append(slot)
+        self.version += 1
+
+    def edge_deleted(self, src: str, eid: int, ts: Stamp) -> None:
+        slot = self.e_slot[(self.intern.intern(src), eid)]
+        self.e_delete.set(slot, pack(ts, self.n_gk))
+        self.e_delete_stamp[slot] = ts
+        self.e_patch.append(slot)
+        self.version += 1
+
+    def edge_purged(self, src: str, eid: int) -> None:
+        slot = self.e_slot[(self.intern.intern(src), eid)]
+        self.e_create.set(slot, self._no_row)
+        self.e_delete.set(slot, self._no_row)
+        self.e_create_stamp[slot] = None
+        self.e_delete_stamp[slot] = None
+        self.e_patch.append(slot)
+        self.version += 1
+
+
 class MVGraphPartition:
     """One shard's partition of the multi-version graph."""
 
-    def __init__(self) -> None:
+    def __init__(self, n_gk: Optional[int] = None,
+                 intern: Optional[VidIntern] = None) -> None:
         self.vertices: Dict[str, MVVertex] = {}
         self._eid = 0
+        self._n_gk = n_gk
+        self._intern = intern
+        self.columns: Optional[PartitionColumns] = None
+        if n_gk is not None:
+            self.columns = PartitionColumns(n_gk, intern)
+
+    def _cols(self, ts: Stamp) -> PartitionColumns:
+        """Column mirror, created lazily when G is first observable."""
+        if self.columns is None:
+            self.columns = PartitionColumns(len(ts.clock), self._intern)
+        return self.columns
 
     # ---- write path (called by shard at a transaction's stamp) ----------
     def create_vertex(self, vid: str, ts: Stamp) -> MVVertex:
@@ -88,14 +318,18 @@ class MVGraphPartition:
             raise KeyError(f"vertex {vid} already exists")
         v = MVVertex(vid, create_ts=ts)
         self.vertices[vid] = v
+        self._cols(ts).vertex_created(vid, ts)
         return v
 
     def delete_vertex(self, vid: str, ts: Stamp) -> None:
         v = self.vertices[vid]
         v.delete_ts = ts
+        cols = self._cols(ts)
+        cols.vertex_deleted(vid, ts)
         for e in v.out_edges.values():
             if e.delete_ts is None:
                 e.delete_ts = ts
+                cols.edge_deleted(vid, e.eid, ts)
 
     def create_edge(self, src: str, dst: str, ts: Stamp,
                     eid: Optional[int] = None) -> MVEdge:
@@ -105,10 +339,13 @@ class MVGraphPartition:
             eid = self._eid
         e = MVEdge(eid, src, dst, create_ts=ts)
         v.out_edges[eid] = e
+        self._cols(ts).edge_created(src, dst, eid, ts)
         return e
 
     def delete_edge(self, src: str, eid: int, ts: Stamp) -> None:
-        self.vertices[src].out_edges[eid].delete_ts = ts
+        e = self.vertices[src].out_edges[eid]
+        e.delete_ts = ts
+        self._cols(ts).edge_deleted(src, eid, ts)
 
     def set_vertex_prop(self, vid: str, key: str, value, ts: Stamp) -> None:
         self.vertices[vid].props.setdefault(key, []).append(Versioned(value, ts))
@@ -155,6 +392,7 @@ class MVGraphPartition:
     def collect(self, horizon: Stamp) -> int:
         """Drop versions deleted strictly before ``horizon``."""
         n = 0
+        cols = self.columns
         dead_v = []
         for vid, v in self.vertices.items():
             if v.delete_ts is not None and compare(v.delete_ts, horizon) is Order.BEFORE:
@@ -166,6 +404,8 @@ class MVGraphPartition:
                       and compare(e.delete_ts, horizon) is Order.BEFORE]
             for eid in dead_e:
                 del v.out_edges[eid]
+                if cols is not None:
+                    cols.edge_purged(vid, eid)
                 n += 1
             for key, versions in list(v.props.items()):
                 if len(versions) > 1:
@@ -175,6 +415,10 @@ class MVGraphPartition:
                     n += len(versions) - len(keep)
                     v.props[key] = keep
         for vid in dead_v:
+            if cols is not None:
+                for eid in self.vertices[vid].out_edges:
+                    cols.edge_purged(vid, eid)
+                cols.vertex_purged(vid)
             del self.vertices[vid]
         return n
 

@@ -30,7 +30,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from .clock import Order, Stamp, compare
 from .gatekeeper import CostModel
-from .mvgraph import MVGraphPartition
+from .mvgraph import MVGraphPartition, VidIntern
 from .nodeprog import REGISTRY, EdgeView, NodeView, ProgContext
 from .oracle import KIND_PROG, KIND_TX, OracleServer
 from .simulation import Simulator
@@ -46,7 +46,8 @@ class _QueueItem:
 class Shard:
     def __init__(self, sim: Simulator, sid: int, n_gk: int,
                  oracle: OracleServer, cost: CostModel,
-                 directory: Callable[[str], Optional[int]]):
+                 directory: Callable[[str], Optional[int]],
+                 intern: Optional[VidIntern] = None):
         self.sim = sim
         sim.register(self)
         self.sid = sid
@@ -54,7 +55,10 @@ class Shard:
         self.oracle = oracle
         self.cost = cost
         self.directory = directory       # vid -> shard id (cached map; §3.2)
-        self.partition = MVGraphPartition()
+        # vid intern table is deployment-wide so edge endpoints resolve
+        # across partitions in the columnar snapshot path
+        self.intern = intern if intern is not None else VidIntern()
+        self.partition = MVGraphPartition(n_gk, self.intern)
         self.queues: Dict[int, deque] = {g: deque() for g in range(n_gk)}
         self._expected_seq: Dict[int, int] = {g: 0 for g in range(n_gk)}
         self._stash: Dict[int, Dict[int, tuple]] = {g: {} for g in range(n_gk)}
@@ -389,7 +393,7 @@ class Shard:
 
     def recover_from(self, ops: List[dict]) -> None:
         """Backup promotion: rebuild the partition from the backing store."""
-        self.partition = MVGraphPartition()
+        self.partition = MVGraphPartition(self.n_gk, self.intern)
         for op in ops:
             k, ts = op["op"], op["ts"]
             if k == "create_vertex":

@@ -16,6 +16,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 from .clock import Stamp, compare, Order, zero
 from .cluster import ClusterManager, HeartbeatSender
 from .gatekeeper import CostModel, Gatekeeper
+from .mvgraph import VidIntern
 from .nodeprog import REGISTRY
 from .oracle import OracleServer
 from .shard import Shard
@@ -107,9 +108,10 @@ class Weaver:
                        cfg.cost, cfg.tau, cfg.tau_nop)
             for g in range(cfg.n_gatekeepers)
         ]
+        self.intern = VidIntern()       # deployment-wide vid interning
         self.shards: List[Shard] = [
             Shard(self.sim, s, cfg.n_gatekeepers, self.oracle, cfg.cost,
-                  self.store.shard_of)
+                  self.store.shard_of, intern=self.intern)
             for s in range(cfg.n_shards)
         ]
         for gk in self.gatekeepers:
@@ -244,7 +246,7 @@ class Weaver:
             old = self.shards[sid]
             old.stop()
             nu = Shard(self.sim, sid, self.cfg.n_gatekeepers, self.oracle,
-                       self.cfg.cost, self.store.shard_of)
+                       self.cfg.cost, self.store.shard_of, intern=self.intern)
             nu.recover_from(self.store.recover_shard(sid))
             self.shards[sid] = nu
             for sh in self.shards:

@@ -7,6 +7,14 @@ pulls batches; each batch is materialized *at a refinable timestamp* via
 coherent graph version per batch no matter how fast writers mutate the
 graph — exactly the long-read/concurrent-write isolation the paper
 builds refinable timestamps for.
+
+Batches ride the columnar snapshot engine: the first batch pays a cold
+columnar build, every later batch is a **delta refresh** that only
+re-evaluates the stamps the writers touched since the previous batch
+(O(changed), see ``analytics.SnapshotEngine``), and the edge arrays come
+back CSR-sorted so downstream segment reductions can claim sorted
+indices.  ``snapshot_stats()`` exposes the engine's cold/delta counters
+for monitoring the hit rate under a write workload.
 """
 
 from __future__ import annotations
@@ -58,6 +66,11 @@ class DynamicGraphPipeline:
                 size=(self.d_feat,)).astype(np.float32)
             self._feat_cache[vid] = f
         return f
+
+    def snapshot_stats(self) -> dict:
+        """Cold/delta/noop counters of the weaver's snapshot engine."""
+        eng = getattr(self.weaver, "_snapshot_engine", None)
+        return dict(eng.stats) if eng is not None else {}
 
     def snapshot_batch(self) -> SnapshotBatch:
         """One snapshot-consistent full-graph batch at a fresh stamp."""

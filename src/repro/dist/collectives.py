@@ -1,0 +1,158 @@
+"""Explicit shard_map collectives (MoE all-to-all, hierarchical grad
+sync, cross-pod allreduce).
+
+Only the single-device-correct entry points are provided here; the
+multi-device shard_map bodies are gated until the distributed runtime
+lands (tracked in ROADMAP "Open items").  Callers already guard on
+``dist.get_mesh() is not None`` plus config flags, so the default smoke
+and tier-1 paths never reach the gated branches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_GATE_MSG = ("repro.dist.collectives.{name} requires the multi-device "
+             "shard_map runtime, which is not wired up in this build; "
+             "run with the jit-level variant (default config) instead")
+
+
+def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
+                      c_dev, local_capacity_factor=2.0):
+    """Expert-parallel MoE dispatch via explicit all-to-all.
+
+    Tokens are sharded over (dp axes, 'model'); the expert axis of the
+    weight tensors is sharded over 'model' (replicated across dp).  Each
+    device routes its local (token, slot) pairs to the model shard that
+    owns the chosen expert with a sort-based dispatch (same MegaBlocks
+    trick as the jit-level scatter path), exchanges (n_model, c_dev, d)
+    buffers with ONE all_to_all each way, and combines locally with its
+    own router weights — so only token activations cross the wire.
+
+    Capacity semantics: drops are per (source device, destination shard)
+    at ``max(c_dev, ceil(t_loc*k*local_capacity_factor/n_model))``, vs
+    the scatter path's per-global-expert capacity; with ample capacity
+    (no drops) both paths agree elementwise.
+    """
+    import math
+
+    from jax.sharding import PartitionSpec as P
+
+    from . import shard_map
+    from .sharding import dp_axes
+
+    n_model = int(mesh.shape["model"])
+    e = w_gate.shape[0]
+    assert e % n_model == 0, (e, n_model)
+    e_loc = e // n_model
+    dp_names = dp_axes(mesh)
+    tok_axes = tuple(dp_names) + ("model",)
+    n_dp = int(math.prod(int(mesh.shape[a]) for a in dp_names)) \
+        if dp_names else 1
+    t_loc = int(xf.shape[0]) // (n_dp * n_model)
+    c_dev = max(int(c_dev),
+                math.ceil(t_loc * int(top_k)
+                          * float(local_capacity_factor) / n_model))
+
+    def body(xf_l, logits_l, wg, wu, wd):
+        t_loc, d = xf_l.shape
+        k = top_k
+        probs = jax.nn.softmax(logits_l.astype(jnp.float32), axis=-1)
+        weights, idx = jax.lax.top_k(probs, k)          # (t_loc, k)
+        weights = weights / jnp.maximum(
+            jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+        flat_e = idx.reshape(-1)                        # (N = t_loc*k,)
+        n = flat_e.shape[0]
+        dest = flat_e // e_loc
+        order = jnp.argsort(dest)
+        dest_sorted = dest[order]
+        starts = jnp.searchsorted(
+            dest_sorted, jnp.arange(n_model, dtype=dest_sorted.dtype))
+        pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[dest_sorted]
+        pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+        keep = pos < c_dev
+        pos_c = jnp.where(keep, pos, c_dev)             # overflow slot
+        token_of = jnp.repeat(jnp.arange(t_loc, dtype=jnp.int32), k)
+
+        send_x = jnp.zeros((n_model, c_dev + 1, d), xf_l.dtype)
+        send_x = send_x.at[dest, pos_c].set(
+            xf_l[token_of] * keep[:, None].astype(xf_l.dtype))
+        send_e = jnp.zeros((n_model, c_dev + 1), jnp.int32)
+        send_e = send_e.at[dest, pos_c].set(flat_e % e_loc)
+
+        recv_x = jax.lax.all_to_all(send_x[:, :c_dev], "model", 0, 0)
+        recv_e = jax.lax.all_to_all(send_e[:, :c_dev], "model", 0, 0)
+
+        rx = recv_x.reshape(n_model * c_dev, d)
+        re = recv_e.reshape(n_model * c_dev)
+        g = jnp.einsum("nd,ndf->nf", rx, wg[re])
+        u = jnp.einsum("nd,ndf->nf", rx, wu[re])
+        out = jnp.einsum("nf,nfd->nd", jax.nn.silu(g) * u, wd[re])
+
+        back = jax.lax.all_to_all(
+            out.reshape(n_model, c_dev, d), "model", 0, 0)
+        back_flat = jnp.concatenate(
+            [back.reshape(n_model * c_dev, d),
+             jnp.zeros((1, d), back.dtype)], axis=0)
+        slot = jnp.where(keep, dest * c_dev + pos_c, n_model * c_dev)
+        per_slot = back_flat[slot]                      # (N, d)
+        w_comb = (weights.reshape(-1).astype(xf_l.dtype)
+                  * keep.astype(xf_l.dtype))
+        return jnp.sum((per_slot * w_comb[:, None]).reshape(t_loc, k, d),
+                       axis=1)
+
+    spec_tok = P(tok_axes, None)
+    spec_w = P("model", None, None)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(spec_tok, spec_tok, spec_w, spec_w, spec_w),
+                     out_specs=spec_tok, check_vma=False)(
+        xf, logits, w_gate, w_up, w_down)
+
+
+def grad_sync(mesh, grads, int8_cross_pod: bool = False):
+    """Hierarchical gradient mean over the data-parallel axes.
+
+    In-pod (``data``) reduction runs in fp32; the cross-pod hop (the slow
+    DCN link) optionally quantizes its summand to int8 with per-tensor
+    scales (``optim.compress``) before reducing.  Tensor-parallel
+    (``model``) gradients are already replicated and untouched.
+    """
+    if mesh is None or all(int(s) == 1 for s in mesh.shape.values()):
+        return grads
+    from jax.sharding import PartitionSpec as P
+
+    from . import shard_map
+    from .sharding import dp_axes
+
+    dp = dp_axes(mesh)
+    if not dp:
+        return grads
+    in_pod = tuple(a for a in dp if a != "pod")
+
+    def body(g):
+        def one(x):
+            x32 = x.astype(jnp.float32)
+            if in_pod:
+                x32 = jax.lax.pmean(x32, in_pod)
+            if "pod" in dp:
+                if int8_cross_pod:
+                    from repro.optim.compress import (dequantize_int8,
+                                                      quantize_int8)
+                    q, s = quantize_int8(x32)
+                    x32 = jax.lax.pmean(dequantize_int8(q, s), "pod")
+                else:
+                    x32 = jax.lax.pmean(x32, "pod")
+            return x32.astype(x.dtype)
+
+        return jax.tree_util.tree_map(one, g)
+
+    return shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=P())(grads)
+
+
+def cross_pod_allreduce(mesh, x, compress: bool = False):
+    """Mean-allreduce over the 'pod' axis (gated off single-device)."""
+    if mesh is None or "pod" not in mesh.axis_names \
+            or int(mesh.shape["pod"]) == 1:
+        return x
+    raise NotImplementedError(_GATE_MSG.format(name="cross_pod_allreduce"))

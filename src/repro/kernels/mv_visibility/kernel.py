@@ -23,6 +23,11 @@ NO_STAMP = np.iinfo(np.int32).max
 DEFAULT_BLOCK_N = 1024
 
 
+def default_interpret() -> bool:
+    """Compile on TPU/GPU; interpret only on CPU (no Mosaic backend)."""
+    return jax.default_backend() == "cpu"
+
+
 def _visibility_kernel(q_ref, create_ref, delete_ref, out_ref):
     q = q_ref[...]                      # (C, 1) int32 in SMEM-ish block
     c = create_ref[...]                 # (C, BN)
@@ -42,11 +47,15 @@ def _visibility_kernel(q_ref, create_ref, delete_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def visibility_pallas(create_cm: jnp.ndarray, delete_cm: jnp.ndarray,
                       q: jnp.ndarray, block_n: int = DEFAULT_BLOCK_N,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: bool = None) -> jnp.ndarray:
     """create/delete (C, N) int32, q (C,) -> (N,) bool.
 
-    N must be a multiple of ``block_n`` (ops.py pads).
+    N must be a multiple of ``block_n`` (ops.py pads).  ``interpret=None``
+    auto-detects the backend (compiled off-CPU) — it is a static arg, so
+    the branch resolves at trace time.
     """
+    if interpret is None:
+        interpret = default_interpret()
     c_dim, n = create_cm.shape
     assert n % block_n == 0, (n, block_n)
     grid = (n // block_n,)

@@ -1,22 +1,33 @@
 """Public wrapper: accepts the (N, C) row-major layout used by
 ``repro.core.clock.pack_many``, pads N to the block size, and dispatches
-to the Pallas kernel (interpret=True on CPU; compiled on TPU)."""
+to the Pallas kernel.
+
+Backend selection: ``interpret=None`` (the default) auto-detects —
+compiled Pallas on TPU/GPU, interpreter mode on CPU (where no Mosaic
+backend exists).  Pass an explicit bool to override (tests force
+``interpret=True`` to exercise the kernel body on CPU).
+"""
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import DEFAULT_BLOCK_N, NO_STAMP, visibility_pallas
+from .kernel import DEFAULT_BLOCK_N, NO_STAMP, default_interpret, \
+    visibility_pallas
 from .ref import visibility_ref
 
 
 def visibility_mask(create_rows: jnp.ndarray, delete_rows: jnp.ndarray,
                     q: jnp.ndarray, block_n: int = DEFAULT_BLOCK_N,
-                    interpret: bool = True,
+                    interpret: Optional[bool] = None,
                     use_ref: bool = False) -> jnp.ndarray:
     """(N, C) stamp rows + (C,) query -> (N,) bool visibility mask."""
+    if interpret is None:
+        interpret = default_interpret()
     n, c = create_rows.shape
     create_cm = jnp.asarray(create_rows).T
     delete_cm = jnp.asarray(delete_rows).T

@@ -2,6 +2,10 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import networkx as nx

@@ -1,6 +1,10 @@
 """Unit + property tests for refinable timestamps and the timeline oracle."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.clock import (Order, Stamp, compare, merge, pack, pack_many,

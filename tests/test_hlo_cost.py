@@ -38,8 +38,10 @@ class TestLoopAwareCosting:
             f"scan flops {r_scan.flops} != {expected} " \
             f"(trips seen: {r_scan.while_trips})"
         # XLA's own analysis undercounts the scan by ~n
-        xla = _compile(scanned, x, ws).cost_analysis()["flops"]
-        assert xla < expected / 2
+        ca = _compile(scanned, x, ws).cost_analysis()
+        if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+            ca = ca[0]
+        assert ca["flops"] < expected / 2
 
     def test_trip_count_parsed(self):
         d, n = 64, 12
