@@ -1,0 +1,195 @@
+"""Frontier-batched node-program microbenchmark (nodeprog runtime PR).
+
+Wall-clock times of the two node-program execution paths at identical
+stamps on a ~100k-edge synthetic social graph:
+
+* ``scalar``   — the per-vertex interpreter (seed semantics): one Python
+  callback + NodeView/EdgeView materialization per delivered vertex, one
+  (dst, params) entry per emitted vertex;
+* ``frontier`` — the batched path: per-shard sorted-CSR plans over the
+  stamped columns, one vectorized step per hop per shard, one packed
+  frontier message per destination shard per hop.
+
+Queries: multi-hop ``traverse`` (full BFS from a seed user), bounded
+``traverse`` (3 hops), ``reachable`` pairs, and weighted ``sssp`` —
+driven synchronously (``frontier.run_local``) so both paths execute at
+the SAME stamp and results can be compared bit-for-bit.  A second
+section runs ``traverse`` through the full simulator (two Weaver
+deployments, ``frontier_progs`` on/off) to report the simulated-time
+and message/entry counters.
+
+Writes ``BENCH_nodeprog.json`` at the repo root (plus the usual
+results/bench copy) with median seconds, speedups, entry/message
+reductions, and the equivalence bit.  The acceptance bar for this PR is
+``speedup.traverse_multi_hop >= 3``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import Weaver, WeaverConfig
+from repro.core import frontier as F
+from repro.core.clock import Stamp
+
+from .common import save_result
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+N_USERS = 20_000
+AVG_DEG = 5
+
+
+class _StampGen:
+    """Totally-ordered synthetic stamps (round-robin gatekeepers)."""
+
+    def __init__(self, n_gk: int):
+        self.n_gk = n_gk
+        self.clock = [0] * n_gk
+        self.i = 0
+
+    def next(self) -> Stamp:
+        g = self.i % self.n_gk
+        self.i += 1
+        self.clock[g] += 1
+        return Stamp(0, tuple(self.clock), g, self.clock[g])
+
+    def query(self) -> Stamp:
+        g = self.i % self.n_gk
+        self.i += 1
+        self.clock = [c + 1 for c in self.clock]
+        return Stamp(0, tuple(self.clock), g, self.clock[g])
+
+
+def _build(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    from repro.data import synth
+    edges = synth.social_graph(rng, N_USERS, AVG_DEG)
+    w = Weaver(WeaverConfig(n_gatekeepers=2, n_shards=4, gc_period=0,
+                            seed=seed))
+    sg = _StampGen(w.cfg.n_gatekeepers)
+    part_of = lambda vid: w.shards[w.store.place(vid)].partition
+    vertices = sorted({v for e in edges for v in e})
+    for v in vertices:
+        part_of(v).create_vertex(v, sg.next())
+    for s, d in edges:
+        e = part_of(s).create_edge(s, d, sg.next())
+        # deterministic 1..4 weight so sssp exercises the prop columns
+        part_of(s).set_edge_prop(s, e.eid, "weight",
+                                 float(1 + (e.eid % 4)), sg.next())
+    return w, sg, vertices, len(edges)
+
+
+def _median(f, iters: int) -> float:
+    ts: List[float] = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        f()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def main() -> None:
+    w, sg, vertices, n_edges = _build()
+    place = lambda vid: w.store.place(vid)
+    rng = np.random.default_rng(1)
+    seeds = [str(v) for v in rng.choice(vertices, 8, replace=False)]
+    at = sg.query()
+
+    queries = {
+        "traverse_multi_hop": ("traverse", [(seeds[0], {"depth": 0})]),
+        "traverse_3hop": ("traverse",
+                          [(seeds[1], {"depth": 0, "max_depth": 3})]),
+        "reachable": ("reachable", [(seeds[2], {"target": seeds[3]})]),
+        "sssp": ("sssp", [(seeds[4], {"target": seeds[5],
+                                      "max_depth": 32})]),
+    }
+
+    seconds: dict = {"scalar": {}, "frontier": {}}
+    msgstats: dict = {"scalar": {}, "frontier": {}}
+    equivalent = True
+    for qname, (prog, entries) in queries.items():
+        results = {}
+        for mode, flag in (("frontier", True), ("scalar", False)):
+            run = lambda: F.run_local(w, prog, entries, at,
+                                      use_frontier=flag, shard_of=place)
+            r, st = run()
+            results[mode] = r
+            msgstats[mode][qname] = st
+            # scalar multi-hop BFS over 100k edges is slow: time it once,
+            # batched path gets proper medians
+            seconds[mode][qname] = _median(run, 3 if flag else 1)
+        equivalent &= results["frontier"] == results["scalar"]
+
+    speedup = {q: seconds["scalar"][q] / seconds["frontier"][q]
+               for q in queries}
+    entry_reduction = {
+        q: msgstats["scalar"][q]["entries"]
+        / max(1, msgstats["frontier"][q]["entries"])
+        for q in queries}
+
+    # ---- through the simulator: counters + simulated latency ------------
+    def sim_side(frontier_on: bool):
+        ww = Weaver(WeaverConfig(n_gatekeepers=2, n_shards=4, seed=3,
+                                 frontier_progs=frontier_on))
+        rng2 = np.random.default_rng(7)
+        tx = ww.begin_tx()
+        for i in range(400):
+            tx.create_vertex(f"s{i}")
+        seen = set()
+        for _ in range(2400):
+            a, b = rng2.integers(0, 400, 2)
+            if a != b and (a, b) not in seen:
+                seen.add((a, b))
+                tx.create_edge(f"s{a}", f"s{b}")
+        assert ww.run_tx(tx).ok
+        t0 = time.perf_counter()
+        res, _, lat = ww.run_program("traverse", [("s0", {"depth": 0})],
+                                     timeout=120.0)
+        wall = time.perf_counter() - t0
+        c = ww.counters()
+        return {
+            "result_size": len(res),
+            "sim_latency_ms": lat * 1e3,
+            "wall_s": wall,
+            "frontier_batches": c["frontier_batches"],
+            "scalar_deliveries": c["scalar_deliveries"],
+            "entries_delivered": c["prog_entries_delivered"],
+            "shard_hops": c["shard_hops"],
+        }
+
+    sim_frontier = sim_side(True)
+    sim_scalar = sim_side(False)
+    equivalent &= sim_frontier["result_size"] == sim_scalar["result_size"]
+
+    payload = {
+        "graph": {"n_vertices": len(vertices), "n_edges": n_edges},
+        "seconds": seconds,
+        "speedup": speedup,
+        "entry_reduction": entry_reduction,
+        "messages": msgstats,
+        "simulator": {"frontier": sim_frontier, "scalar": sim_scalar},
+        "equivalent": bool(equivalent),
+    }
+    for q, s in speedup.items():
+        print(f"nodeprog,speedup_{q},{s:.2f}")
+    for q, r in entry_reduction.items():
+        print(f"nodeprog,entry_reduction_{q},{r:.2f}")
+    print(f"nodeprog,sim_entries_frontier,"
+          f"{sim_frontier['entries_delivered']}")
+    print(f"nodeprog,sim_entries_scalar,{sim_scalar['entries_delivered']}")
+    print(f"nodeprog,equivalent,{int(equivalent)}")
+    with open(os.path.join(REPO_ROOT, "BENCH_nodeprog.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    save_result("nodeprog", payload)
+    if not equivalent:
+        raise AssertionError("frontier/scalar results diverged")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,12 +3,17 @@
 Prints ``name,metric,value`` CSV lines (simulated time; deterministic).
 
   snapshot       — snapshot materialization: columnar cold/delta vs seed
+  nodeprog       — frontier-batched vs per-vertex node programs
   block_query    — Fig. 7 / Table 2 (CoinGraph vs relational explorer)
   social         — Fig. 9 / Fig. 10 (TAO mix, Weaver vs 2PL)
   traversal      — Fig. 11 (node programs vs BSP sync/async)
   scalability    — Fig. 12 / Fig. 13 (gatekeeper & shard scaling)
   coordination   — Fig. 14 (tau sweep: announce vs oracle)
   roofline       — §Roofline summary from the dry-run artifacts
+
+A benchmark that raises is reported, the remaining modules still run,
+and the harness exits non-zero at the end — failures are loud, never
+silently skipped.
 """
 
 from __future__ import annotations
@@ -18,25 +23,32 @@ import time
 
 
 def main() -> None:
-    from . import (block_query, coordination, roofline, scalability,
-                   snapshot, social, traversal)
+    from . import (block_query, coordination, nodeprog, roofline,
+                   scalability, snapshot, social, traversal)
 
-    modules = [("snapshot", snapshot), ("block_query", block_query),
+    modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
+               ("block_query", block_query),
                ("social", social), ("traversal", traversal),
                ("scalability", scalability),
                ("coordination", coordination), ("roofline", roofline)]
     t00 = time.time()
+    failures = []
     for name, mod in modules:
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
         try:
             mod.main()
-        except Exception as e:  # keep the harness going
+        except Exception as e:  # keep the harness going, fail at the end
+            failures.append((name, f"{type(e).__name__}: {e}"))
             print(f"{name},ERROR,{type(e).__name__}: {e}")
             import traceback
             traceback.print_exc(limit=3)
         print(f"# {name} took {time.time()-t0:.1f}s wall", flush=True)
     print(f"# total {time.time()-t00:.1f}s wall")
+    if failures:
+        for name, err in failures:
+            print(f"# FAILED {name}: {err}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -15,8 +15,12 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core import Weaver, WeaverConfig
 from repro.data.pipeline import DynamicGraphPipeline
-from repro.models import gnn
+from repro.models import gnn, mp
 from repro.optim import AdamWConfig, adamw, make_train_step
+
+# pipeline batches are CSC-sorted (dst-major): claim sorted segment ids
+# in every scatter of the jitted model
+mp.set_sorted_indices(True)
 
 # boot a store and seed a graph
 w = Weaver(WeaverConfig(n_gatekeepers=2, n_shards=3, seed=3))

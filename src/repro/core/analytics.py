@@ -28,8 +28,10 @@ create/delete stamp matrices plus interned src/dst id columns):
 
 Snapshot array ordering (documented contract): vertex indices follow
 (shard, creation-slot) order on a cold build; a delta refresh appends
-newly visible vertices at the end, and a slot re-created after GC keeps
-its original position (the legacy dict path would move it last).  Edge
+newly visible vertices at the end, removes a newly *invisible* vertex by
+backfilling its index with the (previously) last vertex, and a slot
+re-created after GC keeps its original position (the legacy dict path
+would move it last).  Edge
 arrays come in two sorted orientations: ``edge_src``/``edge_dst`` are
 CSR (sorted by ``(src, dst)``) and ``csc_src``/``csc_dst`` are CSC
 (sorted by ``(dst, src)``), so segment reductions can claim
@@ -260,12 +262,21 @@ class SnapshotEngine:
     One engine per :class:`~repro.core.weaver.Weaver` (attached lazily by
     :func:`snapshot_arrays`).  The cache is valid for a query stamp ``T'``
     iff the shard/partition topology is unchanged and ``T ≼ T'`` (same or
-    later epoch); otherwise the engine falls back to a cold build.  A
-    vertex whose cached visibility flips OFF — i.e. any vertex deletion
-    that becomes visible between snapshots — also forces a cold build,
-    because vertex compaction indices are append-only; edge churn stays
-    on the O(changed) delta path (vertex-delete delta support is a
-    ROADMAP open item).
+    later epoch); otherwise the engine falls back to a cold build.
+
+    A vertex whose cached visibility flips OFF (a vertex deletion — or
+    GC purge — becoming visible between snapshots) is removed from the
+    compacted index *in place*: its index slot is tombstoned in
+    ``vid_index`` and backfilled by the last vertex, and only the CSR/CSC
+    keys of edges incident to the two touched vertices are patched — so
+    vertex churn stays O(changed) like edge churn instead of degrading
+    to a cold rebuild.
+
+    Column **compactions** (``PartitionColumns.compact``) are consumed
+    through the per-shard ``events`` log: cached rows are remapped to the
+    new slot numbering (dropped slots point nowhere and gather as
+    all-``NO_STAMP``), unread patch-log tails are recovered from the
+    event, and the delta path continues uninterrupted.
     """
 
     def __init__(self, weaver) -> None:
@@ -334,17 +345,19 @@ class SnapshotEngine:
         pend: List[tuple] = []
         self.sig = self._signature(shards)
         self.shard_cols = [sh.partition.columns for sh in shards]
-        self.consumed = []            # per shard: [n_v, n_e, v_log, e_log]
+        # per shard: [n_v, n_e, v_log, e_log, n_compaction_events]
+        self.consumed = []
         v_blocks, e_blocks = [], []   # (cb, db, create_view, delete_view)
         v_sh, v_sl, e_sh, e_sl = [], [], [], []
         v_gid_parts, e_src_parts, e_dst_parts = [], [], []
         for si, cols in enumerate(self.shard_cols):
             if cols is None:
-                self.consumed.append([0, 0, 0, 0])
+                self.consumed.append([0, 0, 0, 0, 0])
                 continue
             nv, ne = cols.n_v, cols.n_e
             self.consumed.append([nv, ne, len(cols.v_patch),
-                                  len(cols.e_patch)])
+                                  len(cols.e_patch),
+                                  cols.events_dropped + len(cols.events)])
             if nv:
                 cv, dv = cols.v_create.view(), cols.v_delete.view()
                 cb, db = self._eval(cv, dv,
@@ -430,6 +443,7 @@ class SnapshotEngine:
         self.refine = refine
         self._valid = True
         self._vids_copy = None    # a rebuild may change vids at same len
+        self._vids_ver = 0        # bumped on every vids mutation
         self.stats["cold"] += 1
         self._make_ga()
 
@@ -450,9 +464,15 @@ class SnapshotEngine:
         delete = np.empty((rows.size, self.c), np.int32)
         sh = shard_of[rows]
         sl = slot_of[rows]
-        for si in np.unique(sh):
+        # slots dropped by a compaction gather as all-NO_STAMP (the row
+        # can never be visible again)
+        dead = sl < 0
+        if dead.any():
+            create[dead] = NO_STAMP
+            delete[dead] = NO_STAMP
+        for si in np.unique(sh[~dead]) if dead.any() else np.unique(sh):
             cols = self.shard_cols[si]
-            m = sh == si
+            m = (sh == si) & ~dead
             slots = sl[m]
             if kind == "v":
                 create[m] = cols.v_create.view()[slots]
@@ -463,6 +483,8 @@ class SnapshotEngine:
 
         def _stamp_of(which: int):
             def f(i: int) -> Optional[Stamp]:
+                if sl[i] < 0:
+                    return None
                 cols = self.shard_cols[sh[i]]
                 lists = ((cols.v_create_stamp, cols.v_delete_stamp)
                          if kind == "v"
@@ -472,6 +494,48 @@ class SnapshotEngine:
 
         return create, delete, _stamp_of(0), _stamp_of(1)
 
+    def _consume_compactions(self, si: int, cols, ch_v, ch_e):
+        """Catch up with column compactions of shard ``si``.
+
+        For every unseen :class:`~repro.core.mvgraph.CompactionEvent`:
+        recover the unread tail of the pre-compaction patch logs (those
+        rows must still be re-evaluated), then remap the engine's cached
+        slot pointers and ``slot2row`` maps to the new numbering.
+        Dropped slots become -1 and gather as all-``NO_STAMP``.  Returns
+        the consumed-state cursor in post-compaction numbering."""
+        nv0, ne0, lv0, le0, ev0 = self.consumed[si]
+        for ev in cols.events[ev0 - cols.events_dropped:]:
+            # (a) unread patch tail, old numbering -> engine global rows
+            tail_v = sorted({s for s in ev.old_v_patch[lv0:] if s < nv0})
+            if tail_v:
+                ch_v.append(self.v_slot2row[si][np.asarray(tail_v, np.int64)])
+            tail_e = sorted({s for s in ev.old_e_patch[le0:] if s < ne0})
+            if tail_e:
+                ch_e.append(self.e_slot2row[si][np.asarray(tail_e, np.int64)])
+            # (b) remap cached slot pointers of this shard's rows
+            for shard_of, slot_of, s2r, smap, n0 in (
+                    (self.v_shard, self.v_slot, self.v_slot2row, ev.v_map,
+                     nv0),
+                    (self.e_shard, self.e_slot, self.e_slot2row, ev.e_map,
+                     ne0)):
+                mrows = np.nonzero(shard_of == si)[0]
+                if mrows.size:
+                    old = slot_of[mrows].astype(np.int64)
+                    ns = np.full(old.shape, -1, np.int64)
+                    ok = old >= 0
+                    ns[ok] = smap[old[ok]]
+                    slot_of[mrows] = ns.astype(np.int32)
+                old_s2r = s2r[si]
+                nmap = smap[:n0]
+                keep = nmap >= 0
+                new_s2r = np.empty(int(keep.sum()), old_s2r.dtype)
+                new_s2r[nmap[keep]] = old_s2r[keep]
+                s2r[si] = new_s2r
+            nv0 = int((ev.v_map[:nv0] >= 0).sum())
+            ne0 = int((ev.e_map[:ne0] >= 0).sum())
+            lv0 = le0 = 0
+        return nv0, ne0, lv0, le0
+
     # --------------------------------------------------------------- delta
     def _delta_ok(self, at: Stamp, refine: bool) -> bool:
         if not self._valid or refine != self.refine:
@@ -479,6 +543,11 @@ class SnapshotEngine:
         shards = self._shards()
         if self._signature(shards) != self.sig:
             return False
+        # compaction history must still cover our consume point (events
+        # beyond MAX_COMPACTION_EVENTS are dropped)
+        for si, cols in enumerate(self.shard_cols):
+            if cols is not None and self.consumed[si][4] < cols.events_dropped:
+                return False
         o = compare(self.at, at)
         return o is Order.BEFORE or o is Order.EQUAL
 
@@ -494,7 +563,11 @@ class SnapshotEngine:
         for si, cols in enumerate(self.shard_cols):
             if cols is None:
                 continue
-            nv0, ne0, lv0, le0 = self.consumed[si]
+            if cols.events_dropped + len(cols.events) > self.consumed[si][4]:
+                nv0, ne0, lv0, le0 = self._consume_compactions(
+                    si, cols, ch_v, ch_e)
+            else:
+                nv0, ne0, lv0, le0 = self.consumed[si][:4]
             nv, ne = cols.n_v, cols.n_e
             if nv > nv0:
                 v_app.append((si, cols.v_gid.view()[nv0:nv].copy()))
@@ -512,7 +585,8 @@ class SnapshotEngine:
                 if slots.size:
                     ch_e.append(self.e_slot2row[si][slots])
             self.consumed[si] = [nv, ne, len(cols.v_patch),
-                                 len(cols.e_patch)]
+                                 len(cols.e_patch),
+                                 cols.events_dropped + len(cols.events)]
         app_v = sum(p[1].size for p in v_app)
         app_e = sum(p[1].size for p in e_app)
         g = self._g
@@ -580,13 +654,17 @@ class SnapshotEngine:
 
         new_v = v_cb & ~v_db
         old_v = self.v_vis[ids_v]
-        if np.any(old_v & ~new_v):
-            # a vertex flipped invisible: compaction indices are
-            # append-only, rebuild cold (rare)
-            self._cold(at, refine)
-            return
         self.v_vis[ids_v] = new_v
         self.v_unsettled = ids_v[self._unsettled(vc, vd, v_cb, v_db)]
+        flip_off = ids_v[old_v & ~new_v]
+        if flip_off.size > max(32, len(self.vids) // 4):
+            # bulk disappearance: per-vertex key patching would cost
+            # O(drops x E) — a cold rebuild is cheaper
+            self._cold(at, refine)
+            return
+        if flip_off.size:
+            # vertex-delete delta path: tombstone + backfill, O(changed)
+            self._drop_vertices(flip_off)
         flipped_v = ids_v[new_v & ~old_v]
         if flipped_v.size:
             flipped_v = np.sort(flipped_v)
@@ -598,6 +676,7 @@ class SnapshotEngine:
                 vid = intern.vids[g]
                 self.index[vid] = len(self.vids)
                 self.vids.append(vid)
+            self._vids_ver += 1
 
         old_e = self.e_vis[ids_e]
         new_e = e_cb & ~e_db
@@ -612,7 +691,8 @@ class SnapshotEngine:
             touch = np.nonzero(np.isin(self.E_srcg, gset)
                                | np.isin(self.E_dstg, gset))[0]
             f_rows = np.union1d(f_rows, touch)
-        if f_rows.size == 0 and flipped_v.size == 0:
+        v_changed = bool(flipped_v.size or flip_off.size)
+        if f_rows.size == 0 and not v_changed:
             self.at = at
             self.stats["delta_noop"] += 1
             return
@@ -636,8 +716,143 @@ class SnapshotEngine:
                                         _sort_key(a_dst, a_src))
         self.at = at
         self.stats["delta"] += 1
-        if added.size or removed.size or flipped_v.size:
+        if added.size or removed.size or v_changed:
             self._make_ga()
+
+    def _drop_vertices(self, rows: np.ndarray) -> None:
+        """Remove newly-invisible vertices from the compacted index.
+
+        Per dropped vertex: delete its incident CSR/CSC keys, tombstone
+        its ``vid_index`` slot, and backfill the freed snapshot index
+        with the (previously) last vertex, re-keying only the edges
+        incident to that one vertex — O(deg) key patches plus a
+        vectorized membership scan, instead of a cold rebuild."""
+        intern = self.weaver.intern
+        none = np.zeros(0, np.int64)
+        # one membership pass for ALL dropped gids; the per-vertex scans
+        # below then touch only these candidate rows
+        dead_gids = self.V_gid[rows]
+        cand = np.nonzero((np.isin(self.E_srcg, dead_gids)
+                           | np.isin(self.E_dstg, dead_gids))
+                          & self.f_mask)[0]
+        for row in rows.tolist():
+            g_dead = int(self.V_gid[row])
+            iu = int(self.vid_index[g_dead])
+            if iu < 0:       # several rows may share a gid (re-creates)
+                continue
+            inc = cand[((self.E_srcg[cand] == g_dead)
+                        | (self.E_dstg[cand] == g_dead))
+                       & self.f_mask[cand]]
+            if inc.size:
+                r_src = self.vid_index[self.E_srcg[inc]]
+                r_dst = self.vid_index[self.E_dstg[inc]]
+                self.csr_key = _merge_patch(self.csr_key,
+                                            _sort_key(r_src, r_dst), none)
+                self.csc_key = _merge_patch(self.csc_key,
+                                            _sort_key(r_dst, r_src), none)
+                self.f_mask[inc] = False
+            il = len(self.vids) - 1
+            dead_vid = self.vids[iu]
+            if iu != il:
+                last_vid = self.vids[il]
+                g_last = intern.ids[last_vid]
+                minc = np.nonzero(((self.E_srcg == g_last)
+                                   | (self.E_dstg == g_last))
+                                  & self.f_mask)[0]
+                if minc.size:       # re-key the backfilled vertex's edges
+                    rm_csr = _sort_key(self.vid_index[self.E_srcg[minc]],
+                                       self.vid_index[self.E_dstg[minc]])
+                    rm_csc = _sort_key(self.vid_index[self.E_dstg[minc]],
+                                       self.vid_index[self.E_srcg[minc]])
+                self.vid_index[g_last] = iu
+                self.vids[iu] = last_vid
+                self.index[last_vid] = iu
+                if minc.size:
+                    a_src = self.vid_index[self.E_srcg[minc]]
+                    a_dst = self.vid_index[self.E_dstg[minc]]
+                    self.csr_key = _merge_patch(self.csr_key, rm_csr,
+                                                _sort_key(a_src, a_dst))
+                    self.csc_key = _merge_patch(self.csc_key, rm_csc,
+                                                _sort_key(a_dst, a_src))
+            self.vids.pop()
+            del self.index[dead_vid]
+            self.vid_index[g_dead] = -1
+            self._vids_ver += 1
+
+    # ----------------------------------------------------- property columns
+    def _visible_prop_rows(self, pt, q: np.ndarray, kid: int) -> np.ndarray:
+        """Row ids of property versions with the right key, visible at the
+        engine stamp (concurrent stamps refined in ONE oracle pass)."""
+        if pt.n == 0 or kid < 0:
+            return np.zeros(0, np.int64)
+        krows = np.nonzero(pt.key.view() == kid)[0]
+        if krows.size == 0:
+            return krows
+        rows = pt.stamp.view()[krows]
+        cb = np.array(_before_batch(rows, q))
+        if self.refine:
+            pend: List[tuple] = []
+            for i in np.nonzero(clock.concurrent_mask_np(rows, q))[0]:
+                s = pt.stamp_obj[int(krows[i])]
+                if s is not None and compare(s, self.at) is Order.CONCURRENT:
+                    pend.append((cb, i, s))
+            self._resolve(pend, self.at)
+        return krows[cb]
+
+    def vertex_prop_column(self, key: str):
+        """Latest-visible value of vertex property ``key`` per snapshot
+        index: returns ``(values, num)`` where ``values`` is a list of
+        Python objects (None = absent) of length ``n_nodes`` and ``num``
+        the float64 mirror (NaN = absent or non-numeric).
+
+        Served straight from the columnar property tables at the
+        engine's current stamp; version order within an owner follows
+        append order (the transaction pipeline's last-update validation
+        guarantees commit order == append order per object)."""
+        assert self._valid, "snapshot() first"
+        q = clock.pack(self.at, self.n_gk)
+        n = len(self.vids)
+        values: List[object] = [None] * n
+        num = np.full(n, np.nan)
+        for cols in self.shard_cols:
+            if cols is None:
+                continue
+            pt = cols.v_props
+            vis = self._visible_prop_rows(pt, q, cols.keys.lookup(key))
+            if vis.size == 0:
+                continue
+            owners = pt.owner.view()[vis]
+            idx = self.vid_index[cols.v_gid.view()[owners]]
+            ok = idx >= 0
+            vals_l = pt.val.view()[vis]
+            num_l = pt.num.view()[vis]
+            # ascending row order == version order: later rows overwrite
+            for r, i in zip(np.nonzero(ok)[0].tolist(), idx[ok].tolist()):
+                values[i] = cols.vals.vals[int(vals_l[r])]
+                num[i] = num_l[r]
+        return values, num
+
+    def edge_prop_rows(self, key: str) -> Dict[int, object]:
+        """Latest-visible value of edge property ``key`` keyed by GLOBAL
+        edge row id (align with ``e_shard``/``e_slot`` or the raw rows of
+        a ``keep_raw`` snapshot)."""
+        assert self._valid, "snapshot() first"
+        q = clock.pack(self.at, self.n_gk)
+        out: Dict[int, object] = {}
+        for si, cols in enumerate(self.shard_cols):
+            if cols is None:
+                continue
+            pt = cols.e_props
+            vis = self._visible_prop_rows(pt, q, cols.keys.lookup(key))
+            if vis.size == 0:
+                continue
+            owners = pt.owner.view()[vis]
+            rows = self.e_slot2row[si]
+            vals_l = pt.val.view()[vis]
+            for r, o in enumerate(owners.tolist()):
+                if o < rows.size:
+                    out[int(rows[o])] = cols.vals.vals[int(vals_l[r])]
+        return out
 
     # ------------------------------------------------------------- results
     def _make_ga(self) -> None:
@@ -667,14 +882,16 @@ class SnapshotEngine:
             self._refresh(at, refine_concurrent)
         else:
             self._cold(at, refine_concurrent)
-        # vids/index are snapshotted by copy (later deltas append to the
+        # vids/index are snapshotted by copy (later deltas mutate the
         # engine's structures, which would leak future vertices into an
         # older snapshot); the copies are cached until the vertex set
-        # grows, so edge-only delta chains never re-copy
+        # changes (a version counter — deletes can keep the length
+        # constant), so edge-only delta chains never re-copy
         if getattr(self, "_vids_copy", None) is None \
-                or len(self._vids_copy) != len(self.vids):
+                or self._copied_ver != self._vids_ver:
             self._vids_copy = list(self.vids)
             self._index_copy = dict(self.index)
+            self._copied_ver = self._vids_ver
         ga = GraphArrays(
             vids=self._vids_copy, index=self._index_copy,
             edge_src=self.ga.edge_src, edge_dst=self.ga.edge_dst,

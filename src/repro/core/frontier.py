@@ -1,0 +1,490 @@
+"""Frontier-batched node-program runtime on the columnar data plane.
+
+The per-vertex path (``nodeprog.run_entries_scalar``) interprets one
+Python callback per delivered vertex against the multi-version dicts.
+This module executes a whole per-shard *frontier* in one vectorized step
+against the stamped columns the partition already maintains
+(:class:`~repro.core.mvgraph.PartitionColumns`):
+
+* :class:`ShardPlan` — a per-shard sorted-CSR snapshot *slice* at the
+  program stamp ``T_prog``: one batched visibility pass over the packed
+  stamp matrices (the same `mv_visibility` contract the global snapshot
+  engine uses, truly-concurrent stamps refined through the shard's
+  timeline-oracle cache in ONE request), the visible out-edges sorted by
+  ``(src gid, dst gid)``, and lazily-materialized latest-visible
+  property columns per key (edge filters, weights, vertex values).
+  Plans are cached per (columns.version, stamp) — every hop of a
+  multi-hop program reuses one plan, and concurrent writes invalidate it
+  because every column mutation bumps ``version``.
+* :class:`Frontier` — the packed exchange unit: a gid array plus an
+  optional per-entry float payload (e.g. sssp distances) and a shared
+  ``meta`` dict.  Shards exchange ONE such message per destination shard
+  per hop instead of one ``(dst, params)`` tuple per emitted vertex.
+* :func:`execute_step` — runs a program's registered ``frontier_step``
+  (see ``nodeprog.frontier_impl``) over one plan + frontier, returning
+  the batch outputs, the global next frontier and the charged service
+  time.  Per-destination neighbour aggregation goes through
+  ``repro.kernels.segment_mp.ops.segment_reduce_sorted`` — the
+  CSR-sorted plan makes the sorted-segment contract free.
+
+The plan/fallback contract: a program participates iff it registered a
+``frontier_step`` AND ``frontier_ok(params)`` accepts the root
+parameters (e.g. an unhashable edge-filter constant forces the scalar
+path).  The decision is a pure function of ``(name, root params)``, so
+every shard of one query independently agrees; follow-up hops carry
+:class:`Frontier` objects, which imply the batched path.  Results are
+identical to the scalar path at the same stamp (randomized equivalence
+is enforced by ``tests/test_frontier_prog.py``); the only caveat is
+``sssp`` under a *binding* ``max_depth``, where the scalar path itself
+is delivery-order dependent.
+
+:func:`run_local` drives a whole program synchronously outside the
+simulator (equivalence tests, wall-clock benchmarks).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import clock
+from .clock import NO_STAMP, Order, Stamp, compare
+
+
+@dataclass
+class Frontier:
+    """Packed per-hop delivery: one message per destination shard."""
+
+    gids: np.ndarray                       # (F,) int64 vertex intern ids
+    vals: Optional[np.ndarray] = None      # (F,) float64 payload (sssp dist)
+    depth: int = 0                         # hop depth (shared)
+    meta: dict = field(default_factory=dict)   # shared params
+
+    def __len__(self) -> int:
+        return int(self.gids.size)
+
+    def nbytes(self) -> int:
+        """Simulated wire size: packed arrays, not per-entry tuples."""
+        n = 64 + 8 * self.gids.size
+        if self.vals is not None:
+            n += 8 * self.vals.size
+        return n
+
+
+def _before_rows(rows: np.ndarray, q: np.ndarray) -> np.ndarray:
+    """rows ≺ q with the kernel/numpy auto-switch of the snapshot engine."""
+    from . import analytics
+    return np.array(analytics._before_batch(rows, q))
+
+
+class ShardPlan:
+    """Sorted-CSR snapshot slice of ONE partition at one stamp.
+
+    ``refine_batch(stamps) -> {stamp.key(): bool}`` resolves stamps that
+    are truly concurrent with ``at`` (True = before the program); the
+    shard passes a closure over its oracle cache so a plan build costs at
+    most one oracle round trip.
+    """
+
+    def __init__(self, cols, at: Stamp, n_gk: int,
+                 refine_batch: Optional[Callable] = None):
+        self.at = at
+        self.version = cols.version
+        self.cols = cols
+        self.n_gk = n_gk
+        self.q = clock.pack(at, n_gk)
+        self._refine_batch = refine_batch
+        self._prop_cache: Dict[Tuple[str, str], tuple] = {}
+        # settled: every stamp present in the columns (incl. property
+        # versions) is strictly vector-before ``at`` — then visibility is
+        # identical at EVERY later stamp, and the shard may reuse this
+        # plan for new queries without rebuilding (point-read hot path).
+        self._all_before = True
+        #: rows evaluated by this build (simulated-cost accounting)
+        self.built_rows = (cols.n_v + cols.n_e
+                           + cols.v_props.n + cols.e_props.n)
+
+        nv = cols.n_v
+        v_create = cols.v_create.view()
+        v_delete = cols.v_delete.view()
+        cb = self._vis_half(v_create, cols.v_create_stamp)
+        db = self._vis_half(v_delete, cols.v_delete_stamp)
+        self.v_visible = cb & ~db if nv else np.zeros(0, bool)
+
+        # gid -> vertex slot (dense over the intern table seen so far)
+        gids = cols.v_gid.view()
+        self._slot_of = np.full(int(gids.max()) + 1 if nv else 1, -1,
+                                np.int64)
+        self._slot_of[gids] = np.arange(nv, dtype=np.int64)
+
+        # visible out-edges of visible sources, sorted by (src, dst) gid
+        ne = cols.n_e
+        if ne:
+            ecb = self._vis_half(cols.e_create.view(), cols.e_create_stamp)
+            edb = self._vis_half(cols.e_delete.view(), cols.e_delete_stamp)
+            e_vis = ecb & ~edb
+            src = cols.e_src.view().astype(np.int64)
+            sslot = np.where(src < self._slot_of.size,
+                             self._slot_of[np.minimum(src,
+                                                      self._slot_of.size - 1)],
+                             -1)
+            keep = e_vis & (sslot >= 0)
+            keep[keep] &= self.v_visible[sslot[keep]]
+            rows = np.nonzero(keep)[0]
+            dst = cols.e_dst.view().astype(np.int64)[rows]
+            order = np.lexsort((dst, src[rows]))
+            self.esrc = src[rows][order]
+            self.edst = dst[order]
+            self.eslot = rows[order]          # edge slot per CSR position
+        else:
+            self.esrc = np.zeros(0, np.int64)
+            self.edst = np.zeros(0, np.int64)
+            self.eslot = np.zeros(0, np.int64)
+
+        # fold the property stamps into the settledness check eagerly
+        # (prop arrays themselves stay lazy per key)
+        for pt in (cols.v_props, cols.e_props):
+            if pt.n:
+                rows = pt.stamp.view()
+                raw = _before_rows(rows, self.q)
+                self._all_before &= bool(
+                    np.all(raw | (rows[:, 0] == NO_STAMP)))
+        self.settled = self._all_before
+
+    # ------------------------------------------------------------ visibility
+    def _vis_half(self, rows: np.ndarray, stamp_of: List) -> np.ndarray:
+        if rows.shape[0] == 0:
+            return np.zeros(0, bool)
+        out = _before_rows(rows, self.q)
+        # a present stamp not strictly vector-before q can flip at a
+        # later query stamp: the plan is then stamp-specific
+        self._all_before &= bool(np.all(out | (rows[:, 0] == NO_STAMP)))
+        if self._refine_batch is not None:
+            cand = np.nonzero(clock.concurrent_mask_np(rows, self.q))[0]
+            if cand.size:
+                pend = [(int(i), stamp_of[int(i)]) for i in cand
+                        if stamp_of[int(i)] is not None
+                        and compare(stamp_of[int(i)], self.at)
+                        is Order.CONCURRENT]
+                if pend:
+                    got = self._refine_batch([s for _, s in pend])
+                    for i, s in pend:
+                        out[i] = got[s.key()]
+        return out
+
+    # ------------------------------------------------------------- lookups
+    def vertex_visible(self, gids: np.ndarray) -> np.ndarray:
+        """(F,) bool — is each frontier gid a visible vertex here?"""
+        g = np.asarray(gids, np.int64)
+        ok = (g >= 0) & (g < self._slot_of.size)
+        slot = np.where(ok, self._slot_of[np.minimum(g, self._slot_of.size - 1)],
+                        -1)
+        ok &= slot >= 0
+        ok[ok] = self.v_visible[slot[ok]]
+        return ok
+
+    def edge_ranges(self, gids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """CSR [lo, hi) into esrc/edst per frontier gid."""
+        g = np.asarray(gids, np.int64)
+        return (np.searchsorted(self.esrc, g, side="left"),
+                np.searchsorted(self.esrc, g, side="right"))
+
+    def gather_edges(self, gids: np.ndarray):
+        """Ragged expansion: all CSR edge positions of ``gids``, plus the
+        index of the source frontier entry per position."""
+        lo, hi = self.edge_ranges(gids)
+        ln = hi - lo
+        total = int(ln.sum())
+        if total == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64), ln
+        off = np.repeat(np.cumsum(ln) - ln, ln)
+        pos = np.arange(total, dtype=np.int64) - off + np.repeat(lo, ln)
+        src_idx = np.repeat(np.arange(g_len(gids), dtype=np.int64), ln)
+        return pos, src_idx, ln
+
+    def out_degree(self, gids: np.ndarray) -> np.ndarray:
+        lo, hi = self.edge_ranges(gids)
+        return hi - lo
+
+    # ------------------------------------------------------------ properties
+    def _prop_arrays(self, table: str, key: str):
+        """(val_id, num) of the latest visible version per OWNER SLOT."""
+        ck = (table, key)
+        hit = self._prop_cache.get(ck)
+        if hit is not None:
+            return hit
+        cols = self.cols
+        pt = cols.v_props if table == "v" else cols.e_props
+        n_owner = cols.n_v if table == "v" else cols.n_e
+        ids = np.full(n_owner, -1, np.int64)
+        num = np.full(n_owner, np.nan)
+        kid = cols.keys.lookup(key)
+        if kid >= 0 and pt.n:
+            krows = np.nonzero(pt.key.view() == kid)[0]
+            if krows.size:
+                vis = self._vis_half(pt.stamp.view()[krows],
+                                     [pt.stamp_obj[int(i)] for i in krows])
+                rows = krows[vis]
+                owners = pt.owner.view()[rows].astype(np.int64)
+                # ascending row order == version order: last write wins
+                ids[owners] = pt.val.view()[rows]
+                num[owners] = pt.num.view()[rows]
+        self._prop_cache[ck] = (ids, num)
+        return ids, num
+
+    def edge_prop(self, key: str):
+        """(val_id, num) per CSR edge position (-1 / NaN = absent)."""
+        ids, num = self._prop_arrays("e", key)
+        return ids[self.eslot], num[self.eslot]
+
+    def vertex_prop_of(self, gids: np.ndarray, key: str):
+        """(val_id, num) per gid; caller guarantees visibility."""
+        ids, num = self._prop_arrays("v", key)
+        slot = self._slot_of[np.asarray(gids, np.int64)]
+        return ids[slot], num[slot]
+
+    def value_id(self, value) -> int:
+        """This partition's intern id for a filter constant (-1 = never
+        stored here, matches nothing)."""
+        return self.cols.vals.lookup(value)
+
+    def value_of(self, val_id: int):
+        return self.cols.vals.vals[val_id] if val_id >= 0 else None
+
+
+def g_len(a: np.ndarray) -> int:
+    return int(np.asarray(a).size)
+
+
+class BatchContext:
+    """What a ``frontier_step`` sees: the plan, vid resolution, output
+    and emit sinks, and service-time accounting mirroring the scalar
+    cost model (prog_vertex / prog_revisit / prog_edge)."""
+
+    def __init__(self, plan: ShardPlan, intern, cost):
+        self.plan = plan
+        self.intern = intern
+        self.cost = cost
+        self.outputs: List[object] = []
+        self.emit_gids: List[np.ndarray] = []
+        self.emit_vals: List[Optional[np.ndarray]] = []
+        self.next_meta: Optional[dict] = None
+        self.service = 0.0
+
+    def vid(self, gid: int) -> str:
+        return self.intern.vids[gid]
+
+    def vids_of(self, gids: np.ndarray) -> List[str]:
+        vs = self.intern.vids
+        return [vs[g] for g in np.asarray(gids).tolist()]
+
+    def output(self, value) -> None:
+        self.outputs.append(value)
+
+    def emit(self, gids: np.ndarray, vals: Optional[np.ndarray] = None,
+             meta: Optional[dict] = None) -> None:
+        self.emit_gids.append(np.asarray(gids, np.int64))
+        self.emit_vals.append(None if vals is None
+                              else np.asarray(vals, np.float64))
+        if meta is not None:
+            self.next_meta = meta
+
+    def charge(self, n_visit: int = 0, n_revisit: int = 0,
+               n_edges: int = 0) -> None:
+        self.service += (self.cost.prog_vertex * n_visit
+                         + self.cost.prog_revisit * n_revisit
+                         + self.cost.prog_edge * n_edges)
+
+
+def execute_step(plan: ShardPlan, prog, frontier: Frontier, state: dict,
+                 intern, cost) -> Tuple[List[object], Optional[Frontier],
+                                        float]:
+    """Run one batched hop.  Returns (outputs, next_frontier, service)."""
+    ctx = BatchContext(plan, intern, cost)
+    prog.frontier_step(plan, frontier, state, ctx)
+    nxt = None
+    if ctx.emit_gids:
+        gids = np.concatenate(ctx.emit_gids)
+        if gids.size:
+            if any(v is not None for v in ctx.emit_vals):
+                vals = np.concatenate([
+                    v if v is not None else np.zeros(g.size)
+                    for g, v in zip(ctx.emit_gids, ctx.emit_vals)])
+            else:
+                vals = None
+            nxt = Frontier(gids=gids, vals=vals, depth=frontier.depth + 1,
+                           meta=(ctx.next_meta if ctx.next_meta is not None
+                                 else frontier.meta))
+    return ctx.outputs, nxt, ctx.service
+
+
+def ensure_state(state: dict, name: str, n: int, fill, dtype) -> np.ndarray:
+    """Grow-on-demand per-program state array indexed by gid."""
+    arr = state.get(name)
+    if arr is None or arr.size < n:
+        nu = np.full(max(n, 64, 0 if arr is None else arr.size * 2),
+                     fill, dtype)
+        if arr is not None:
+            nu[:arr.size] = arr
+        state[name] = arr = nu
+    return arr
+
+
+# ---------------------------------------------------------------------------
+# Synchronous driver (tests / wall-clock benchmarks): executes a whole
+# program hop-by-hop against the shard partitions directly, without the
+# simulator.  ``use_frontier=False`` drives the scalar per-vertex path
+# over the same stamps — the equivalence oracle.
+# ---------------------------------------------------------------------------
+
+def run_local(weaver, name: str, entries, at: Stamp,
+              use_frontier: bool = True,
+              shard_of: Optional[Callable[[str], Optional[int]]] = None,
+              refine_oracle: bool = True):
+    """Execute program ``name`` at stamp ``at`` synchronously.
+
+    Returns ``(result, stats)`` where stats counts hops, messages and
+    delivered entries — the benchmark's message-reduction evidence.
+    """
+    from .nodeprog import REGISTRY, run_entries_scalar
+    from .oracle import KIND_PROG, KIND_TX
+
+    prog = REGISTRY[name]
+    shards = weaver.shards
+    place = shard_of or (lambda vid: weaver.store.place(vid))
+    intern = weaver.intern
+    cache: Dict[tuple, bool] = {}
+
+    def refine_pair(a: Stamp, b: Stamp) -> Order:
+        if b.key() == at.key():     # object stamp vs program stamp
+            got = refine_many([a])
+            return Order.BEFORE if got[a.key()] else Order.AFTER
+        if not refine_oracle:       # conservative default: a after b
+            return Order.AFTER
+        # version-vs-version (prop_at ordering): pairwise refinement
+        chain = weaver.oracle.oracle.order_events([a, b],
+                                                  [KIND_TX, KIND_TX])
+        weaver.sim.counters.oracle_calls += 1
+        return Order.BEFORE if chain[0] == a.key() else Order.AFTER
+
+    def refine_many(stamps: List[Stamp]) -> Dict[tuple, bool]:
+        missing = [s for s in stamps if s.key() not in cache]
+        if missing:
+            if refine_oracle:
+                oracle = weaver.oracle.oracle
+                chain = oracle.order_events(
+                    missing + [at], [KIND_TX] * len(missing) + [KIND_PROG])
+                weaver.sim.counters.oracle_calls += 1
+                pos = {k: i for i, k in enumerate(chain)}
+                for s in missing:
+                    cache[s.key()] = pos[s.key()] < pos[at.key()]
+            else:
+                for s in missing:
+                    cache[s.key()] = False     # conservative: write after
+        return {s.key(): cache[s.key()] for s in stamps}
+
+    stats = {"hops": 0, "messages": 0, "entries": 0, "batches": 0}
+    outputs: List[object] = []
+
+    batched = (use_frontier and prog.frontier_step is not None
+               and prog.pack_root is not None)
+    if batched:
+        # all root entries must share one params dict (else scalar path)
+        froot = prog.pack_root(entries, intern)
+        batched = froot is not None
+
+    if batched:
+        plans: Dict[int, ShardPlan] = {}
+        states: Dict[int, dict] = {}
+        # route roots
+        pending: Dict[int, Frontier] = {}
+        for sid, gs in _route_gids(froot.gids, froot.vals, intern,
+                                   place).items():
+            pending[sid] = Frontier(gs[0], gs[1], froot.depth, froot.meta)
+        while pending:
+            stats["hops"] += 1
+            nxt: Dict[int, List[Frontier]] = {}
+            for sid, fr in pending.items():
+                stats["messages"] += 1
+                stats["batches"] += 1
+                stats["entries"] += len(fr)
+                sh = shards[sid]
+                cols = sh.partition.columns
+                plan = plans.get(sid)
+                if plan is None or plan.version != cols.version:
+                    plans[sid] = plan = ShardPlan(
+                        cols, at, sh.n_gk,
+                        refine_batch=refine_many if refine_oracle else None)
+                outs, out_fr, _ = execute_step(
+                    plan, prog, fr, states.setdefault(sid, {}),
+                    intern, sh.cost)
+                outputs.extend(outs)
+                if out_fr is not None:
+                    for nsid, gs in _route_gids(out_fr.gids, out_fr.vals,
+                                                intern, place).items():
+                        nxt.setdefault(nsid, []).append(
+                            Frontier(gs[0], gs[1], out_fr.depth,
+                                     out_fr.meta))
+            pending = {sid: _merge_frontiers(frs)
+                       for sid, frs in nxt.items()}
+    else:
+        states = {}
+        pending_s: Dict[int, list] = {}
+        for vid, params in entries:
+            sid = place(vid)
+            if sid is not None:
+                pending_s.setdefault(sid, []).append((vid, params))
+        while pending_s:
+            stats["hops"] += 1
+            nxt_s: Dict[int, list] = {}
+            for sid, ent in pending_s.items():
+                stats["messages"] += 1
+                stats["entries"] += len(ent)
+                sh = shards[sid]
+                emits, outs, _ = run_entries_scalar(
+                    sh.partition, prog, ent, at, refine_pair,
+                    states.setdefault(sid, {}), sh.cost)
+                outputs.extend(outs)
+                for vid, params in emits:
+                    nsid = place(vid)
+                    if nsid is not None:
+                        nxt_s.setdefault(nsid, []).append((vid, params))
+            pending_s = nxt_s
+
+    return prog.reduce(outputs), stats
+
+
+def _route_gids(gids: np.ndarray, vals: Optional[np.ndarray], intern, place):
+    """Split a global frontier by destination shard (vectorized groupby
+    over a lazily-extended gid -> shard map)."""
+    out: Dict[int, tuple] = {}
+    if gids.size == 0:
+        return out
+    vids = intern.vids
+    lst = []
+    for g in gids.tolist():
+        s = place(vids[g]) if g < len(vids) else None
+        lst.append(-1 if s is None else s)
+    sids = np.asarray(lst, np.int64)
+    order = np.argsort(sids, kind="stable")
+    sg = sids[order]
+    starts = np.flatnonzero(np.r_[True, sg[1:] != sg[:-1]])
+    bounds = np.r_[starts, sg.size]
+    for i, st in enumerate(starts.tolist()):
+        sid = int(sg[st])
+        if sid < 0:
+            continue
+        sel = order[st:bounds[i + 1]]
+        out[sid] = (gids[sel], None if vals is None else vals[sel])
+    return out
+
+
+def _merge_frontiers(frs: List[Frontier]) -> Frontier:
+    if len(frs) == 1:
+        return frs[0]
+    gids = np.concatenate([f.gids for f in frs])
+    vals = (np.concatenate([f.vals for f in frs])
+            if frs[0].vals is not None else None)
+    return Frontier(gids, vals, frs[0].depth, frs[0].meta)

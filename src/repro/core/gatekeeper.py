@@ -41,6 +41,9 @@ class CostModel:
     prog_vertex: float = 1.5e-6        # node-program visit, per vertex
     prog_revisit: float = 0.3e-6       # re-delivery to a visited vertex
     prog_edge: float = 0.15e-6         # node-program visit, per edge scanned
+    prog_plan_row: float = 0.01e-6     # frontier-plan (re)build, per column
+                                       # row — one vectorized visibility +
+                                       # sort pass, ~10ns/row amortized
     bsp_update: float = 3.0e-6         # GraphLab engine overhead per vertex
                                        # update (scheduler + state commit;
                                        # OSDI'12 reports ~0.1-0.3M

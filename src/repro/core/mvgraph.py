@@ -25,6 +25,12 @@ struct-of-arrays mirror, :class:`PartitionColumns`:
   refinement of truly concurrent rows;
 * edges: ``e_src`` / ``e_dst`` interned-id columns with the same packed
   stamp matrices;
+* property *versions* as columns too: per table (vertex / edge) an
+  append-only log of (owner slot, interned key id, interned value id,
+  float mirror, packed stamp) rows — the latest row visible at ``T`` per
+  (owner, key) is the property value at ``T``, so node programs that
+  filter on edge properties or read weights run on the data plane
+  (``repro.core.frontier``) without touching a Python dict;
 * a monotone ``version`` and per-table patch logs so snapshot caches can
   do **delta refresh**: re-evaluate only slots whose stamps changed since
   the cached build instead of rescanning O(V+E) objects.
@@ -36,6 +42,17 @@ through a :class:`VidIntern` shared across all partitions of a deployment
 so that edge endpoints are cross-shard-resolvable integers at write time
 — the snapshot engine (``repro.core.analytics``) never touches a Python
 string on the per-object path.
+
+GC compaction
+-------------
+Purged slots (all-``NO_STAMP`` rows) used to accumulate forever.  When
+the dead fraction of a partition's columns exceeds
+:data:`COMPACT_DEAD_FRAC`, :meth:`PartitionColumns.maybe_compact`
+rewrites every table keeping only live slots and appends a
+:class:`CompactionEvent` (old→new slot maps plus the pre-compaction
+patch logs) to ``events`` so snapshot caches can *remap* their cached
+rows instead of rebuilding cold — see
+``analytics.SnapshotEngine._consume_changes``.
 """
 
 from __future__ import annotations
@@ -53,6 +70,7 @@ from .clock import NO_STAMP, Order, Stamp, compare, pack
 class Versioned:
     value: object
     ts: Stamp
+    slot: int = -1          # row in the partition's property columns
 
 
 @dataclass
@@ -123,6 +141,43 @@ class VidIntern:
         return len(self.vids)
 
 
+class PropIntern:
+    """Per-partition value/key intern table.
+
+    Hashable objects are deduplicated (value -> dense id); unhashable
+    values get a fresh id each time (they can never be filter targets
+    anyway).  ``lookup`` probes without inserting — the frontier runtime
+    uses it to translate a filter constant into this partition's id
+    space (-1 = the partition has never seen the value)."""
+
+    __slots__ = ("ids", "vals")
+
+    def __init__(self) -> None:
+        self.ids: Dict[object, int] = {}
+        self.vals: List[object] = []
+
+    def intern(self, v) -> int:
+        try:
+            i = self.ids.get(v)
+        except TypeError:                 # unhashable: fresh id, no dedup
+            self.vals.append(v)
+            return len(self.vals) - 1
+        if i is None:
+            i = len(self.vals)
+            self.ids[v] = i
+            self.vals.append(v)
+        return i
+
+    def lookup(self, v) -> int:
+        try:
+            return self.ids.get(v, -1)
+        except TypeError:
+            return -1
+
+    def __len__(self) -> int:
+        return len(self.vals)
+
+
 class _GrowRows:
     """Growable (N, C) int32 matrix with amortized O(1) row appends."""
 
@@ -151,6 +206,13 @@ class _GrowRows:
     def view(self) -> np.ndarray:
         return self.buf[:self.n]
 
+    def reset_to(self, rows: np.ndarray) -> None:
+        """Replace contents (compaction rebuild)."""
+        self.n = rows.shape[0]
+        if self.n > self.buf.shape[0]:
+            self.buf = np.empty((max(64, self.n * 5 // 4), self.c), np.int32)
+        self.buf[:self.n] = rows
+
 
 class _GrowInts:
     """Growable (N,) int32 vector with amortized O(1) appends."""
@@ -173,14 +235,169 @@ class _GrowInts:
     def view(self) -> np.ndarray:
         return self.buf[:self.n]
 
+    def reset_to(self, xs: np.ndarray) -> None:
+        self.n = xs.shape[0]
+        if self.n > self.buf.shape[0]:
+            self.buf = np.empty((max(64, self.n * 5 // 4),), self.buf.dtype)
+        self.buf[:self.n] = xs
+
+
+class _GrowFloats(_GrowInts):
+    """Growable (N,) float64 vector (numeric mirror of property values)."""
+
+    def __init__(self, cap: int = 64) -> None:
+        self.n = 0
+        self.buf = np.empty((cap,), np.float64)
+
+    def append(self, x: float) -> int:
+        if self.n == self.buf.shape[0]:
+            nu = np.empty((max(2 * self.buf.shape[0], 64),), np.float64)
+            nu[:self.n] = self.buf[:self.n]
+            self.buf = nu
+        self.buf[self.n] = x
+        self.n += 1
+        return self.n - 1
+
+
+class _PropTable:
+    """Append-only property-version columns for one owner table.
+
+    One row per ``set_*_prop`` call: owner slot, interned key id,
+    interned value id, float mirror (NaN when the value is not a real
+    number), packed stamp row + original :class:`Stamp` for oracle
+    refinement.  Purges (GC / owner re-create) overwrite the stamp row
+    with all-``NO_STAMP`` and log the row in ``patch`` — the same
+    delta-refresh contract as ``v_patch``/``e_patch`` (cleared at
+    compaction; reserved for the planned ShardPlan delta refresh, see
+    ROADMAP — current consumers re-evaluate prop visibility per
+    build)."""
+
+    def __init__(self, c: int) -> None:
+        self.c = c
+        self._no_row = np.full((c,), NO_STAMP, np.int32)
+        self.owner = _GrowInts()
+        self.key = _GrowInts()
+        self.val = _GrowInts()
+        self.num = _GrowFloats()
+        self.stamp = _GrowRows(c)
+        self.stamp_obj: List[Optional[Stamp]] = []
+        self.ver: List[Optional["Versioned"]] = []   # backrefs for remap
+        self.by_owner: Dict[int, List[int]] = {}
+        self.patch: List[int] = []
+
+    @property
+    def n(self) -> int:
+        return self.owner.n
+
+    @staticmethod
+    def _as_num(value) -> float:
+        if isinstance(value, bool) or not isinstance(
+                value, (int, float, np.integer, np.floating)):
+            return float("nan")
+        try:
+            return float(value)
+        except (TypeError, OverflowError):  # pragma: no cover - exotic
+            return float("nan")
+
+    def append(self, owner_slot: int, key_id: int, val_id: int,
+               value, row: np.ndarray, ts: Stamp,
+               ver: Optional["Versioned"] = None) -> int:
+        slot = self.owner.append(owner_slot)
+        self.key.append(key_id)
+        self.val.append(val_id)
+        self.num.append(self._as_num(value))
+        self.stamp.append(row)
+        self.stamp_obj.append(ts)
+        self.ver.append(ver)
+        self.by_owner.setdefault(owner_slot, []).append(slot)
+        return slot
+
+    def purge(self, slot: int) -> None:
+        if slot < 0:
+            return
+        self.stamp.set(slot, self._no_row)
+        self.stamp_obj[slot] = None
+        self.ver[slot] = None
+        self.patch.append(slot)
+
+    def purge_owner(self, owner_slot: int) -> int:
+        """Purge every version row of one owner (re-create / owner GC)."""
+        rows = self.by_owner.pop(owner_slot, [])
+        for r in rows:
+            self.purge(r)
+        return len(rows)
+
+    def compact(self, owner_map: np.ndarray) -> None:
+        """Drop purged rows / rows of dropped owners; remap the rest."""
+        n = self.n
+        if n == 0:
+            self.by_owner = {}
+            self.patch = []
+            return
+        owner = self.owner.view()
+        live = self.stamp.view()[:, 0] != NO_STAMP
+        ow = np.where(owner < owner_map.size, owner_map[owner], -1)
+        live &= ow >= 0
+        keep_l = np.nonzero(live)[0].tolist()
+        drop_l = np.nonzero(~live)[0].tolist()
+        keep = np.asarray(keep_l, np.int64)
+        self.owner.reset_to(ow[keep].astype(np.int32))
+        self.key.reset_to(self.key.view()[keep])
+        self.val.reset_to(self.val.view()[keep])
+        self.num.reset_to(self.num.view()[keep])
+        self.stamp.reset_to(self.stamp.view()[keep])
+        self.stamp_obj = [self.stamp_obj[i] for i in keep_l]
+        for i in drop_l:
+            if self.ver[i] is not None:
+                self.ver[i].slot = -1
+        self.ver = [self.ver[i] for i in keep_l]
+        for new_row, ver in enumerate(self.ver):
+            if ver is not None:
+                ver.slot = new_row
+        self.by_owner = {}
+        for new_row, o in enumerate(self.owner.view().tolist()):
+            self.by_owner.setdefault(o, []).append(new_row)
+        self.patch = []
+
+
+@dataclass
+class CompactionEvent:
+    """One compaction, as seen by a snapshot cache.
+
+    ``v_map`` / ``e_map`` translate pre-compaction slots to
+    post-compaction slots (-1 = dropped); ``old_v_patch`` /
+    ``old_e_patch`` are the FULL pre-compaction patch logs (old
+    numbering) so a consumer that had only read a prefix can recover the
+    unread tail; ``old_n_v`` / ``old_n_e`` are the pre-compaction table
+    sizes."""
+
+    v_map: np.ndarray
+    e_map: np.ndarray
+    old_v_patch: List[int]
+    old_e_patch: List[int]
+    old_n_v: int
+    old_n_e: int
+
+
+#: compact a partition's columns when this fraction of slots is purged
+COMPACT_DEAD_FRAC = 0.25
+#: ... but never bother below this many total slots
+COMPACT_MIN_ROWS = 64
+#: retained CompactionEvents (each holds O(n) maps); consumers that lag
+#: further behind fall back to a cold rebuild
+MAX_COMPACTION_EVENTS = 8
+
 
 class PartitionColumns:
     """Struct-of-arrays mirror of one partition (see module docstring).
 
-    Slots are stable: a vid (or (src, eid) edge key) keeps its slot across
-    delete / GC / re-create; only its stamp rows are patched.  ``v_patch``
-    / ``e_patch`` log every in-place patch (appends are implied by the
-    growth of ``n_v`` / ``n_e``); consumers track their own read offsets.
+    Slots are stable between compactions: a vid (or (src, eid) edge key)
+    keeps its slot across delete / GC / re-create; only its stamp rows
+    are patched.  ``v_patch`` / ``e_patch`` log every in-place patch
+    (appends are implied by the growth of ``n_v`` / ``n_e``); consumers
+    track their own read offsets.  A compaction renumbers slots and
+    resets the logs; consumers catch up through ``events`` (see
+    :class:`CompactionEvent`).
     """
 
     def __init__(self, n_gk: int, intern: Optional[VidIntern] = None) -> None:
@@ -203,10 +420,21 @@ class PartitionColumns:
         self.e_create_stamp: List[Optional[Stamp]] = []
         self.e_delete_stamp: List[Optional[Stamp]] = []
         self.e_slot: Dict[Tuple[int, int], int] = {}  # (src gid, eid) -> slot
+        # property version columns (per-partition intern tables)
+        self.keys = PropIntern()
+        self.vals = PropIntern()
+        self.v_props = _PropTable(self.c)
+        self.e_props = _PropTable(self.c)
         # change log
         self.version = 0
         self.v_patch: List[int] = []
         self.e_patch: List[int] = []
+        # compaction history (consumers remap through these); event
+        # numbering is absolute: total events ever = events_dropped +
+        # len(events), a consumer behind events_dropped must cold-rebuild
+        self.events: List[CompactionEvent] = []
+        self.events_dropped = 0
+        self.n_compactions = 0
 
     @property
     def n_v(self) -> int:
@@ -233,6 +461,9 @@ class PartitionColumns:
             self.v_create_stamp[slot] = ts
             self.v_delete_stamp[slot] = None
             self.v_patch.append(slot)
+            # the dict path replaces the MVVertex, dropping its property
+            # history — mirror that (old versions must not resurface)
+            self.v_props.purge_owner(slot)
         self.version += 1
 
     def vertex_deleted(self, vid: str, ts: Stamp) -> None:
@@ -250,6 +481,7 @@ class PartitionColumns:
         self.v_create_stamp[slot] = None
         self.v_delete_stamp[slot] = None
         self.v_patch.append(slot)
+        self.v_props.purge_owner(slot)
         self.version += 1
 
     # ---- edge events -----------------------------------------------------
@@ -272,6 +504,7 @@ class PartitionColumns:
             self.e_create_stamp[slot] = ts
             self.e_delete_stamp[slot] = None
             self.e_patch.append(slot)
+            self.e_props.purge_owner(slot)   # dict path drops old versions
         self.version += 1
 
     def edge_deleted(self, src: str, eid: int, ts: Stamp) -> None:
@@ -288,6 +521,97 @@ class PartitionColumns:
         self.e_create_stamp[slot] = None
         self.e_delete_stamp[slot] = None
         self.e_patch.append(slot)
+        self.e_props.purge_owner(slot)
+        self.version += 1
+
+    # ---- property events -------------------------------------------------
+    def vertex_prop_set(self, vid: str, key: str, value, ts: Stamp,
+                        ver: Optional[Versioned] = None) -> int:
+        slot = self.v_slot[self.intern.intern(vid)]
+        row = self.v_props.append(slot, self.keys.intern(key),
+                                  self.vals.intern(value), value,
+                                  pack(ts, self.n_gk), ts, ver)
+        self.version += 1
+        return row
+
+    def edge_prop_set(self, src: str, eid: int, key: str, value, ts: Stamp,
+                      ver: Optional[Versioned] = None) -> int:
+        slot = self.e_slot[(self.intern.intern(src), eid)]
+        row = self.e_props.append(slot, self.keys.intern(key),
+                                  self.vals.intern(value), value,
+                                  pack(ts, self.n_gk), ts, ver)
+        self.version += 1
+        return row
+
+    def vertex_prop_purged(self, row: int) -> None:
+        self.v_props.purge(row)
+        self.version += 1
+
+    def edge_prop_purged(self, row: int) -> None:
+        self.e_props.purge(row)
+        self.version += 1
+
+    # ---- GC compaction ---------------------------------------------------
+    def dead_fraction(self) -> float:
+        n = self.n_v + self.n_e
+        if n == 0:
+            return 0.0
+        dead = int((self.v_create.view()[:, 0] == NO_STAMP).sum()) \
+            + int((self.e_create.view()[:, 0] == NO_STAMP).sum())
+        return dead / n
+
+    def maybe_compact(self, dead_frac: float = COMPACT_DEAD_FRAC,
+                      min_rows: int = COMPACT_MIN_ROWS) -> bool:
+        if self.n_v + self.n_e < min_rows \
+                or self.dead_fraction() <= dead_frac:
+            return False
+        self.compact()
+        return True
+
+    def compact(self) -> None:
+        """Drop every purged (all-``NO_STAMP``) slot and renumber.
+
+        Row order is preserved, so snapshot compaction ordering is
+        unaffected; the old→new maps plus the pre-compaction patch logs
+        are appended to ``events`` for cache remapping."""
+        v_live = self.v_create.view()[:, 0] != NO_STAMP
+        e_live = self.e_create.view()[:, 0] != NO_STAMP
+        v_map = np.where(v_live, np.cumsum(v_live) - 1, -1).astype(np.int64)
+        e_map = np.where(e_live, np.cumsum(e_live) - 1, -1).astype(np.int64)
+        self.events.append(CompactionEvent(
+            v_map=v_map, e_map=e_map,
+            old_v_patch=self.v_patch, old_e_patch=self.e_patch,
+            old_n_v=self.n_v, old_n_e=self.n_e))
+        while len(self.events) > MAX_COMPACTION_EVENTS:
+            self.events.pop(0)
+            self.events_dropped += 1
+        vk = np.nonzero(v_live)[0]
+        ek = np.nonzero(e_live)[0]
+        # vertex table
+        self.v_gid.reset_to(self.v_gid.view()[vk])
+        self.v_create.reset_to(self.v_create.view()[vk])
+        self.v_delete.reset_to(self.v_delete.view()[vk])
+        vk_l = vk.tolist()
+        self.v_create_stamp = [self.v_create_stamp[i] for i in vk_l]
+        self.v_delete_stamp = [self.v_delete_stamp[i] for i in vk_l]
+        self.v_slot = {g: int(v_map[s]) for g, s in self.v_slot.items()
+                       if v_map[s] >= 0}
+        # edge table
+        self.e_src.reset_to(self.e_src.view()[ek])
+        self.e_dst.reset_to(self.e_dst.view()[ek])
+        self.e_create.reset_to(self.e_create.view()[ek])
+        self.e_delete.reset_to(self.e_delete.view()[ek])
+        ek_l = ek.tolist()
+        self.e_create_stamp = [self.e_create_stamp[i] for i in ek_l]
+        self.e_delete_stamp = [self.e_delete_stamp[i] for i in ek_l]
+        self.e_slot = {k: int(e_map[s]) for k, s in self.e_slot.items()
+                       if e_map[s] >= 0}
+        # property tables follow their owners
+        self.v_props.compact(v_map)
+        self.e_props.compact(e_map)
+        self.v_patch = []
+        self.e_patch = []
+        self.n_compactions += 1
         self.version += 1
 
 
@@ -348,11 +672,14 @@ class MVGraphPartition:
         self._cols(ts).edge_deleted(src, eid, ts)
 
     def set_vertex_prop(self, vid: str, key: str, value, ts: Stamp) -> None:
-        self.vertices[vid].props.setdefault(key, []).append(Versioned(value, ts))
+        ver = Versioned(value, ts)
+        self.vertices[vid].props.setdefault(key, []).append(ver)
+        ver.slot = self._cols(ts).vertex_prop_set(vid, key, value, ts, ver)
 
     def set_edge_prop(self, src: str, eid: int, key: str, value, ts: Stamp) -> None:
-        self.vertices[src].out_edges[eid].props.setdefault(key, []).append(
-            Versioned(value, ts))
+        ver = Versioned(value, ts)
+        self.vertices[src].out_edges[eid].props.setdefault(key, []).append(ver)
+        ver.slot = self._cols(ts).edge_prop_set(src, eid, key, value, ts, ver)
 
     # ---- snapshot read path (node programs at T_prog) --------------------
     def vertex_at(self, vid: str, at: Stamp, refine=None) -> Optional[MVVertex]:
@@ -412,14 +739,22 @@ class MVGraphPartition:
                     keep = [ver for i, ver in enumerate(versions)
                             if i == len(versions) - 1
                             or not compare(versions[i + 1].ts, horizon) is Order.BEFORE]
+                    if cols is not None:
+                        kept = set(map(id, keep))
+                        for ver in versions:
+                            if id(ver) not in kept:
+                                cols.vertex_prop_purged(ver.slot)
                     n += len(versions) - len(keep)
                     v.props[key] = keep
         for vid in dead_v:
             if cols is not None:
+                # edge/vertex purge also purges their property rows
                 for eid in self.vertices[vid].out_edges:
                     cols.edge_purged(vid, eid)
                 cols.vertex_purged(vid)
             del self.vertices[vid]
+        if cols is not None:
+            cols.maybe_compact()
         return n
 
     # ---- stats ------------------------------------------------------------

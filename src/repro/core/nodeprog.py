@@ -13,12 +13,37 @@ vertex against the snapshot at the program's stamp ``T_prog``:
 
 Programs are registered in :data:`REGISTRY` so shards can execute by name
 (the C++ Weaver ships program code to servers; we ship a name).
+
+Frontier plan / fallback contract
+---------------------------------
+A program may additionally register a **vectorized** implementation:
+
+* ``@frontier_impl(name)`` — ``frontier_step(plan, frontier, state,
+  ctx)`` executes a whole per-shard frontier in one batched step against
+  the columnar snapshot slice (:class:`repro.core.frontier.ShardPlan`);
+* ``@frontier_root(name)`` — packs the root ``[(vid, params), ...]``
+  entries into a :class:`repro.core.frontier.Frontier` (returning None
+  rejects the batch, e.g. heterogeneous per-entry params);
+* ``frontier_ok(params)`` — a pure predicate on the root params; False
+  forces the scalar path (e.g. an unhashable edge-filter constant).
+
+The shard picks the path per query: batched iff a ``frontier_step``
+exists AND the root packs cleanly — a deterministic function of
+``(name, root entries)``, so all shards of one query agree.  Programs
+without a vectorized form (``clustering``, ``get_edges``) transparently
+fall back to the scalar interpreter (:func:`run_entries_scalar`), which
+is also the equivalence oracle: both paths must produce identical
+reduced results at the same stamp.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .frontier import Frontier, ensure_state
 
 
 @dataclass
@@ -69,6 +94,11 @@ class NodeProgram:
     name: str
     fn: Callable[[NodeView, object, ProgContext], None]
     reduce: Callable[[List[object]], object] = lambda xs: xs
+    # vectorized path (see module docstring): step over a ShardPlan,
+    # root packer, and params-acceptance predicate
+    frontier_step: Optional[Callable] = None
+    pack_root: Optional[Callable] = None
+    frontier_ok: Callable[[object], bool] = lambda params: True
 
 
 REGISTRY: Dict[str, NodeProgram] = {}
@@ -79,6 +109,103 @@ def register(name: str, reduce: Optional[Callable] = None):
         REGISTRY[name] = NodeProgram(name, fn, reduce or (lambda xs: xs))
         return fn
     return deco
+
+
+def frontier_impl(name: str):
+    """Attach a vectorized ``frontier_step(plan, frontier, state, ctx)``
+    to an already-registered program."""
+    def deco(fn):
+        REGISTRY[name].frontier_step = fn
+        return fn
+    return deco
+
+
+def frontier_root(name: str):
+    """Attach the root packer ``pack_root(entries, intern) -> Frontier|None``."""
+    def deco(fn):
+        REGISTRY[name].pack_root = fn
+        return fn
+    return deco
+
+
+def _uniform_params(entries) -> Optional[dict]:
+    """The shared root params dict, or None if entries disagree (the
+    batched path needs ONE meta per frontier)."""
+    if not entries:
+        return None
+    p0 = entries[0][1]
+    if p0 is not None and not isinstance(p0, dict):
+        return None
+    for _, p in entries[1:]:
+        try:
+            same = bool(p == p0)
+        except (TypeError, ValueError):   # e.g. ndarray values: ambiguous
+            return None
+        if not same:
+            return None
+    return {} if p0 is None else p0
+
+
+def _pack_simple(entries, intern, meta: Optional[dict] = None,
+                 vals=None) -> Optional[Frontier]:
+    params = _uniform_params(entries)
+    if params is None:
+        return None
+    gids = np.asarray([intern.intern(vid) for vid, _ in entries], np.int64)
+    m = dict(params)
+    if meta:
+        m.update(meta)
+    return Frontier(gids=gids, vals=vals, depth=params.get("depth", 0),
+                    meta=m)
+
+
+def run_entries_scalar(partition, prog: NodeProgram, entries, stamp,
+                       refine, states: Dict[str, dict], cost):
+    """The per-vertex interpreter (seed semantics), shared by the shard
+    event loop and the synchronous drivers.
+
+    Returns ``(emits, outputs, service)``; ``service`` charges
+    ``prog_vertex``/``prog_revisit`` per entry plus ``prog_edge`` per
+    adjacency slot iff the program actually reads ``node.out_edges``.
+    """
+    service = 0.0
+    emits: List[Tuple[str, object]] = []
+    outputs: List[object] = []
+    for vid, params in entries:
+        v = partition.vertex_at(vid, stamp, refine)
+        # re-deliveries to an already-visited vertex are a hash-map
+        # probe, not a full visit (the C++ system dispatches straight
+        # into the per-query state)
+        revisit = vid in states
+        service += cost.prog_revisit if revisit else cost.prog_vertex
+        if v is None:
+            continue
+
+        # LAZY edge materialization: edges are scanned (and charged)
+        # only if the program actually reads node.out_edges — a
+        # visited-check that returns early touches no adjacency.
+        charge = {"edges": 0.0}
+
+        def load_edges(v=v, charge=charge):
+            edges = partition.out_edges_at(v.vid, stamp, refine)
+            charge["edges"] = cost.prog_edge * len(v.out_edges)
+            eviews = []
+            for e in edges:
+                eprops = {k: partition.prop_at(vs, stamp, refine)
+                          for k, vs in e.props.items()}
+                eviews.append(EdgeView(e.eid, e.dst, eprops))
+            return eviews
+
+        vprops = {k: partition.prop_at(vs, stamp, refine)
+                  for k, vs in v.props.items()}
+        node = NodeView(vid, load_edges, vprops,
+                        states.setdefault(vid, {}))
+        ctx = ProgContext(stamp)
+        prog.fn(node, params, ctx)
+        service += charge["edges"]
+        emits.extend(ctx.emits)
+        outputs.extend(ctx.outputs)
+    return emits, outputs, service
 
 
 # ---------------------------------------------------------------------------
@@ -195,3 +322,209 @@ def sssp(node: NodeView, params, ctx: ProgContext) -> None:
         w = e.prop("weight", 1.0)
         ctx.emit(e.dst, dict(params, dist=dist + w,
                              depth=params.get("depth", 0) + 1))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized frontier implementations (repro.core.frontier executes
+# these over per-shard columnar snapshot slices; results are identical
+# to the scalar forms above at the same stamp).
+# ---------------------------------------------------------------------------
+
+def _segment_min(values: np.ndarray, keys: np.ndarray):
+    """Per-destination min via the sorted-segment kernel ops."""
+    from repro.kernels.segment_mp import ops as smp
+    order = np.argsort(keys, kind="stable")
+    return smp.segment_reduce_sorted(values[order], keys[order], "min")
+
+
+@frontier_root("get_node")
+@frontier_root("count_edges")
+def _degree_root(entries, intern):
+    return _pack_simple(entries, intern)
+
+
+@frontier_impl("get_node")
+def _get_node_step(plan, fr, state, ctx) -> None:
+    vis = plan.vertex_visible(fr.gids)
+    g = fr.gids[vis]
+    deg = plan.out_degree(g)
+    ctx.charge(n_visit=len(fr), n_edges=int(deg.sum()))
+    for gid, d in zip(g.tolist(), deg.tolist()):
+        ctx.output({"id": ctx.vid(gid), "n_edges": int(d)})
+
+
+@frontier_impl("count_edges")
+def _count_edges_step(plan, fr, state, ctx) -> None:
+    vis = plan.vertex_visible(fr.gids)
+    deg = plan.out_degree(fr.gids[vis])
+    ctx.charge(n_visit=len(fr), n_edges=int(deg.sum()))
+    for d in deg.tolist():
+        ctx.output(int(d))
+
+
+def _traverse_ok(params) -> bool:
+    if not (params is None or isinstance(params, dict)):
+        return False
+    want = (params or {}).get("edge_property")
+    if want is None:
+        return True
+    try:
+        hash(want[1])
+    except (TypeError, IndexError, KeyError):
+        return False
+    return True
+
+
+REGISTRY["traverse"].frontier_ok = _traverse_ok
+
+
+@frontier_root("traverse")
+def _traverse_root(entries, intern):
+    params = _uniform_params(entries)
+    if params is None or not _traverse_ok(params):
+        return None
+    return _pack_simple(entries, intern)
+
+
+def _edge_filter(plan, pos: np.ndarray, want) -> np.ndarray:
+    """Positions whose edge satisfies ``prop(key) == value`` at T_prog."""
+    key, val = want[0], want[1]
+    ids, _ = plan.edge_prop(key)
+    sel = ids[pos]
+    if val is None:             # absent property reads as None
+        m = sel == -1
+        wid = plan.value_id(None)
+        if wid >= 0:
+            m |= sel == wid
+        return m
+    wid = plan.value_id(val)
+    if wid < 0:                 # value never stored here: nothing matches
+        return np.zeros(sel.shape, bool)
+    return sel == wid
+
+
+@frontier_impl("traverse")
+def _traverse_step(plan, fr, state, ctx) -> None:
+    visited = ensure_state(state, "visited", len(ctx.intern.vids),
+                           False, bool)
+    seen = visited[fr.gids]
+    ctx.charge(n_visit=int((~seen).sum()), n_revisit=int(seen.sum()))
+    g = np.unique(fr.gids[plan.vertex_visible(fr.gids)])
+    new = g[~visited[g]]
+    if new.size == 0:
+        return
+    visited[new] = True
+    for vid in ctx.vids_of(new):
+        ctx.output(vid)
+    maxd = fr.meta.get("max_depth")
+    if maxd is not None and fr.depth >= maxd:
+        return
+    pos, _, ln = plan.gather_edges(new)
+    ctx.charge(n_edges=int(ln.sum()))
+    want = fr.meta.get("edge_property")
+    if want is not None:
+        pos = pos[_edge_filter(plan, pos, want)]
+    dst = plan.edst[pos]
+    if dst.size:
+        ctx.emit(np.unique(dst))
+
+
+@frontier_root("reachable")
+def _reachable_root(entries, intern):
+    params = _uniform_params(entries)
+    if not params or "target" not in params:
+        return None
+    return _pack_simple(entries, intern)
+
+
+@frontier_impl("reachable")
+def _reachable_step(plan, fr, state, ctx) -> None:
+    visited = ensure_state(state, "visited", len(ctx.intern.vids),
+                           False, bool)
+    seen = visited[fr.gids]
+    ctx.charge(n_visit=int((~seen).sum()), n_revisit=int(seen.sum()))
+    g = np.unique(fr.gids[plan.vertex_visible(fr.gids)])
+    tgid = ctx.intern.ids.get(fr.meta["target"], -2)
+    if np.any(g == tgid):       # target check precedes the visited check
+        ctx.output(True)
+        g = g[g != tgid]        # ... and the target never expands
+    new = g[~visited[g]]
+    if new.size == 0:
+        return
+    visited[new] = True
+    pos, _, ln = plan.gather_edges(new)
+    ctx.charge(n_edges=int(ln.sum()))
+    if pos.size:
+        ctx.emit(np.unique(plan.edst[pos]))
+
+
+@frontier_root("sssp")
+def _sssp_root(entries, intern):
+    params = _uniform_params(entries)
+    if not params or "target" not in params:
+        return None
+    fr = _pack_simple(entries, intern)
+    if fr is not None:
+        fr.vals = np.full(len(fr), float(params.get("dist", 0.0)))
+    return fr
+
+
+@frontier_impl("sssp")
+def _sssp_step(plan, fr, state, ctx) -> None:
+    dist = ensure_state(state, "dist", len(ctx.intern.vids),
+                        np.inf, np.float64)
+    vis = plan.vertex_visible(fr.gids)
+    ctx.charge(n_visit=len(fr))
+    g, d = fr.gids[vis], fr.vals[vis]
+    uniq, dmin = _segment_min(d, g)           # best offer per vertex
+    imp = dmin < dist[uniq]                   # strict: `best <= dist` prunes
+    g2, d2 = uniq[imp], dmin[imp]
+    if g2.size == 0:
+        return
+    dist[g2] = d2
+    tgid = ctx.intern.ids.get(fr.meta["target"], -2)
+    at_t = g2 == tgid
+    for dv in d2[at_t].tolist():
+        ctx.output(dv)
+    if fr.depth >= fr.meta.get("max_depth", 16):
+        return
+    exp, de = g2[~at_t], d2[~at_t]
+    pos, src_idx, ln = plan.gather_edges(exp)
+    ctx.charge(n_edges=int(ln.sum()))
+    if pos.size == 0:
+        return
+    ids, num = plan.edge_prop("weight")
+    w = np.where(ids[pos] >= 0, num[pos], 1.0)
+    nd, nv = _segment_min(de[src_idx] + w, plan.edst[pos])
+    ctx.emit(nd, nv)
+
+
+@frontier_root("block_render")
+def _block_render_root(entries, intern):
+    params = _uniform_params(entries)
+    if params is None:
+        return None
+    return _pack_simple(entries, intern, meta={"hop": params.get("hop", 0)})
+
+
+@frontier_impl("block_render")
+def _block_render_step(plan, fr, state, ctx) -> None:
+    vis = plan.vertex_visible(fr.gids)
+    g = fr.gids[vis]                 # duplicates preserved: the scalar
+    ctx.charge(n_visit=len(fr))      # path outputs once per delivery
+    if fr.meta.get("hop", 0) == 0:
+        pos, _, ln = plan.gather_edges(g)
+        ctx.charge(n_edges=int(ln.sum()))
+        if pos.size:
+            m = _edge_filter(plan, pos, ("type", "contains"))
+            dst = plan.edst[pos][m]
+            if dst.size:
+                ctx.emit(dst, meta={"hop": 1})
+    else:
+        deg = plan.out_degree(g)
+        ctx.charge(n_edges=int(deg.sum()))
+        vids_arr, _ = plan.vertex_prop_of(g, "value")
+        for gid, d, vi in zip(g.tolist(), deg.tolist(), vids_arr.tolist()):
+            ctx.output({"tx": ctx.vid(gid),
+                        "value": plan.value_of(int(vi)),
+                        "n_out": int(d)})

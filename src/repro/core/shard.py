@@ -17,6 +17,23 @@ obeys the refinable-timestamp order:
   grouped per destination shard, with coordinator-side termination
   counting.
 
+Frontier-batched execution (plan / fallback contract)
+-----------------------------------------------------
+Programs with a registered ``frontier_step`` (see ``repro.core.
+nodeprog``) run **batched**: the shard materializes a
+:class:`~repro.core.frontier.ShardPlan` — a sorted-CSR snapshot slice of
+its own ``PartitionColumns`` at ``T_prog``, cached per
+(columns.version, stamp) so every hop of a multi-hop query reuses it —
+and executes the whole delivered frontier in one vectorized step.  The
+next hop is exchanged as ONE packed :class:`~repro.core.frontier.
+Frontier` message per destination shard (O(shards) messages per hop)
+instead of one ``(dst, params)`` entry per emitted vertex.  The path is
+chosen per query from ``(name, root entries)`` — deterministic, so all
+shards agree — and everything else (programs without a vectorized form,
+heterogeneous root params, unhashable filter constants, or
+``use_frontier=False``) falls back to the scalar per-vertex interpreter
+``nodeprog.run_entries_scalar``, which remains the semantic oracle.
+
 Time model: the shard is a single-threaded server; each item charges a
 service time from :class:`~repro.core.gatekeeper.CostModel`, and each
 *uncached* oracle interaction stalls the loop by ``oracle_rtt``.
@@ -29,9 +46,10 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .clock import Order, Stamp, compare
+from .frontier import Frontier, ShardPlan, _route_gids, execute_step
 from .gatekeeper import CostModel
 from .mvgraph import MVGraphPartition, VidIntern
-from .nodeprog import REGISTRY, EdgeView, NodeView, ProgContext
+from .nodeprog import REGISTRY, run_entries_scalar
 from .oracle import KIND_PROG, KIND_TX, OracleServer
 from .simulation import Simulator
 
@@ -47,7 +65,8 @@ class Shard:
     def __init__(self, sim: Simulator, sid: int, n_gk: int,
                  oracle: OracleServer, cost: CostModel,
                  directory: Callable[[str], Optional[int]],
-                 intern: Optional[VidIntern] = None):
+                 intern: Optional[VidIntern] = None,
+                 use_frontier: bool = True):
         self.sim = sim
         sim.register(self)
         self.sid = sid
@@ -59,6 +78,9 @@ class Shard:
         # across partitions in the columnar snapshot path
         self.intern = intern if intern is not None else VidIntern()
         self.partition = MVGraphPartition(n_gk, self.intern)
+        self.use_frontier = use_frontier
+        self._plan: Optional[ShardPlan] = None     # per-(version, stamp)
+        self._plan_built_rows = 0                  # pending service charge
         self.queues: Dict[int, deque] = {g: deque() for g in range(n_gk)}
         self._expected_seq: Dict[int, int] = {g: 0 for g in range(n_gk)}
         self._stash: Dict[int, Dict[int, tuple]] = {g: {} for g in range(n_gk)}
@@ -317,71 +339,141 @@ class Shard:
                 raise
         return self.cost.shard_op * max(1, len(ops))
 
+    def _refine_batch(self, stamps: List[Stamp], at: Stamp) -> Dict:
+        """ONE oracle round trip for a batch of stamps truly concurrent
+        with ``at``; returns {stamp.key(): True iff stamp ≺ at}.  Uses
+        (and fills) the pairwise order cache, charging ``oracle_rtt``
+        only when at least one pair is unknown."""
+        out: Dict = {}
+        missing: List[Stamp] = []
+        for s in stamps:
+            hit = self._order_cache.get((s.key(), at.key()))
+            if hit is None:
+                missing.append(s)
+            else:
+                self.sim.counters.oracle_cache_hits += 1
+                out[s.key()] = hit is Order.BEFORE
+        if missing:
+            self.sim.counters.oracle_calls += 1
+            self._stall += self.cost.oracle_rtt
+            chain = self.oracle.oracle.order_events(
+                missing + [at], [KIND_TX] * len(missing) + [KIND_PROG])
+            pos = {k: i for i, k in enumerate(chain)}
+            p_at = pos[at.key()]
+            for s in missing:
+                before = pos[s.key()] < p_at
+                o = Order.BEFORE if before else Order.AFTER
+                self._order_cache[(s.key(), at.key())] = o
+                self._order_cache[(at.key(), s.key())] = (
+                    Order.AFTER if before else Order.BEFORE)
+                out[s.key()] = before
+        return out
+
+    def _frontier_plan(self, stamp: Stamp) -> ShardPlan:
+        """Cached sorted-CSR snapshot slice at ``stamp``.
+
+        Reused when the partition columns are unchanged AND (same stamp,
+        or the cached plan is *settled* — every stamp in the columns
+        strictly precedes its build stamp, so visibility is identical at
+        every later stamp).  The settled case is the point-read hot
+        path: a quiescent shard serves get_node/count_edges streams from
+        ONE plan instead of rebuilding per query stamp.  A rebuild
+        charges ``prog_plan_row`` per column row to simulated service
+        (``_plan_built_rows`` is drained by ``_exec_prog``)."""
+        cols = self.partition.columns
+        plan = self._plan
+        if plan is not None and plan.version == cols.version:
+            if plan.at.key() == stamp.key():
+                return plan
+            if plan.settled and compare(plan.at, stamp) in (
+                    Order.BEFORE, Order.EQUAL):
+                return plan
+        plan = ShardPlan(cols, stamp, self.n_gk,
+                         refine_batch=lambda ss, at=stamp:
+                         self._refine_batch(ss, at))
+        self._plan = plan
+        self._plan_built_rows += plan.built_rows
+        return plan
+
+    def _frontier_of(self, name: str, entries) -> Optional[Frontier]:
+        """Batched-path decision per delivery: already-packed frontiers
+        stay batched; root entry lists pack iff the program has a
+        vectorized step and accepts the (uniform) root params."""
+        if isinstance(entries, Frontier):
+            return entries
+        if not self.use_frontier:
+            return None
+        prog = REGISTRY[name]
+        if prog.frontier_step is None or prog.pack_root is None:
+            return None
+        if entries and not prog.frontier_ok(entries[0][1]):
+            return None
+        return prog.pack_root(entries, self.intern)
+
     def _exec_prog(self, prog_id: int, delivery_id, name: str, stamp: Stamp,
-                   entries: List[Tuple[str, object]], coordinator) -> float:
+                   entries, coordinator) -> float:
         prog = REGISTRY[name]
         states = self.prog_states.setdefault(prog_id, {})
-        refine = lambda a, b: self._order(a, b, KIND_TX, KIND_PROG)
-        service = 0.0
-        emits: List[Tuple[str, object]] = []
-        outputs: List[object] = []
-        for vid, params in entries:
-            v = self.partition.vertex_at(vid, stamp, refine)
-            # re-deliveries to an already-visited vertex are a hash-map
-            # probe, not a full visit (the C++ system dispatches straight
-            # into the per-query state)
-            revisit = vid in states
-            service += (self.cost.prog_revisit if revisit
-                        else self.cost.prog_vertex)
-            if v is None:
-                continue
-
-            # LAZY edge materialization: edges are scanned (and charged)
-            # only if the program actually reads node.out_edges — a
-            # visited-check that returns early touches no adjacency.
-            charge = {"edges": 0.0}
-
-            def load_edges(v=v, charge=charge):
-                edges = self.partition.out_edges_at(v.vid, stamp, refine)
-                charge["edges"] = self.cost.prog_edge * len(v.out_edges)
-                eviews = []
-                for e in edges:
-                    eprops = {k: self.partition.prop_at(vs, stamp, refine)
-                              for k, vs in e.props.items()}
-                    eviews.append(EdgeView(e.eid, e.dst, eprops))
-                return eviews
-
-            vprops = {k: self.partition.prop_at(vs, stamp, refine)
-                      for k, vs in v.props.items()}
-            node = NodeView(vid, load_edges, vprops,
-                            states.setdefault(vid, {}))
-            ctx = ProgContext(stamp)
-            prog.fn(node, params, ctx)
-            service += charge["edges"]
-            emits.extend(ctx.emits)
-            outputs.extend(ctx.outputs)
-        # group scatter by destination shard (one message per shard; §2.3)
-        by_shard: Dict[int, List[Tuple[str, object]]] = {}
-        for dst_vid, params in emits:
-            sid = self.directory(dst_vid)
-            if sid is None:
-                continue
-            by_shard.setdefault(sid, []).append((dst_vid, params))
+        frontier = self._frontier_of(name, entries)
         children = []
-        for sid, ent in by_shard.items():
-            self.sim.counters.shard_hops += 1
-            child_id = (self.sid, self._next_delivery())
-            children.append(child_id)
-            target = self.peers[sid]
-            self.sim.send(self, target, target.deliver_prog, prog_id, child_id,
-                          name, stamp, ent, coordinator,
-                          nbytes=64 + 48 * len(ent))
+        if frontier is not None:
+            # ---- batched path: one vectorized step over the shard plan
+            plan = self._frontier_plan(stamp)
+            outputs, nxt, service = execute_step(
+                plan, prog, frontier,
+                states.setdefault("__frontier__", {}), self.intern,
+                self.cost)
+            if self._plan_built_rows:     # charge the (vectorized) build
+                service += self.cost.prog_plan_row * self._plan_built_rows
+                self._plan_built_rows = 0
+            n_entries = len(frontier)
+            self.sim.counters.prog_entries_delivered += n_entries
+            if nxt is not None:
+                for sid, (gids, vals) in self._route(nxt).items():
+                    self.sim.counters.shard_hops += 1
+                    child_id = (self.sid, self._next_delivery())
+                    children.append(child_id)
+                    target = self.peers[sid]
+                    out_fr = Frontier(gids, vals, nxt.depth, nxt.meta)
+                    self.sim.send(self, target, target.deliver_prog,
+                                  prog_id, child_id, name, stamp, out_fr,
+                                  coordinator, nbytes=out_fr.nbytes())
+        else:
+            # ---- scalar fallback: per-vertex interpreter
+            refine = lambda a, b: self._order(a, b, KIND_TX, KIND_PROG)
+            emits, outputs, service = run_entries_scalar(
+                self.partition, prog, entries, stamp, refine, states,
+                self.cost)
+            n_entries = len(entries)
+            self.sim.counters.prog_entries_delivered += n_entries
+            # group scatter by destination shard (one message per shard;
+            # §2.3) — but one ENTRY per emitted vertex
+            by_shard: Dict[int, List[Tuple[str, object]]] = {}
+            for dst_vid, params in emits:
+                sid = self.directory(dst_vid)
+                if sid is None:
+                    continue
+                by_shard.setdefault(sid, []).append((dst_vid, params))
+            for sid, ent in by_shard.items():
+                self.sim.counters.shard_hops += 1
+                child_id = (self.sid, self._next_delivery())
+                children.append(child_id)
+                target = self.peers[sid]
+                self.sim.send(self, target, target.deliver_prog, prog_id,
+                              child_id, name, stamp, ent, coordinator,
+                              nbytes=64 + 48 * len(ent))
         # termination detection: announced/reported delivery-id sets at the
         # coordinator (premature-zero-safe, unlike naive credit counting)
         self.sim.send(self, coordinator, coordinator.report, prog_id,
                       delivery_id, children, outputs,
+                      frontier is not None, n_entries,
                       nbytes=64 + 32 * len(outputs))
         return service
+
+    def _route(self, fr: Frontier) -> Dict[int, tuple]:
+        """Split a next-hop frontier by destination shard (shared groupby
+        with the synchronous driver)."""
+        return _route_gids(fr.gids, fr.vals, self.intern, self.directory)
 
     def _next_delivery(self) -> int:
         self._delivery_ctr = getattr(self, "_delivery_ctr", 0) + 1

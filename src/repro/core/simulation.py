@@ -66,6 +66,9 @@ class Counters:
     lock_aborts: int = 0           # 2PL deadlock aborts
     barriers: int = 0              # BSP baseline
     shard_hops: int = 0
+    frontier_batches: int = 0      # batched node-program deliveries
+    scalar_deliveries: int = 0     # per-vertex node-program deliveries
+    prog_entries_delivered: int = 0  # total (vertex, params) entries
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)

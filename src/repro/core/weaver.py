@@ -31,6 +31,14 @@ class ProgCoordinator:
     Uses announced/reported delivery-id sets: a program completes when the
     two sets are equal (safe against reports arriving before their
     parent's announcement).
+
+    Each report also says whether the delivery executed **batched** (one
+    packed frontier per destination shard, ``repro.core.frontier``) and
+    how many entries it carried; the coordinator aggregates these into
+    the global counters (``frontier_batches`` / ``scalar_deliveries``)
+    and keeps the per-program totals in ``last_prog_stats`` so
+    benchmarks can show the per-hop message collapse: O(shards) packed
+    messages instead of O(emitted vertices) entries.
     """
 
     def __init__(self, sim: Simulator):
@@ -41,18 +49,21 @@ class ProgCoordinator:
         self.on_complete: Dict[int, Callable] = {}
         self.shards: List[Shard] = []
         self.weaver = None
+        self.last_prog_stats: dict = {}
 
     def begin(self, prog_id: int, name: str, stamp: Stamp,
               root_ids: List[tuple]) -> None:
         st = self.active.setdefault(prog_id, {
             "announced": set(), "reported": set(), "outputs": [],
             "name": name, "stamp": stamp, "t0": self.sim.now,
+            "batches": 0, "scalar": 0, "entries": 0,
         })
         st["announced"].update(root_ids)
         self._maybe_finish(prog_id)
 
     def report(self, prog_id: int, delivery_id, children: List[tuple],
-               outputs: List[object]) -> None:
+               outputs: List[object], batched: bool = False,
+               n_entries: int = 0) -> None:
         if prog_id in self.done:
             return
         st = self.active.get(prog_id)
@@ -62,6 +73,13 @@ class ProgCoordinator:
         st["announced"].update(children)
         st["announced"].add(delivery_id)
         st["outputs"].extend(outputs)
+        if batched:
+            st["batches"] += 1
+            self.sim.counters.frontier_batches += 1
+        elif n_entries:
+            st["scalar"] += 1
+            self.sim.counters.scalar_deliveries += 1
+        st["entries"] += n_entries
         self._maybe_finish(prog_id)
 
     def _maybe_finish(self, prog_id: int) -> None:
@@ -73,6 +91,11 @@ class ProgCoordinator:
             prog = REGISTRY[st["name"]]
             result = prog.reduce(st["outputs"])
             latency = self.sim.now - st["t0"]
+            self.last_prog_stats = {
+                "name": st["name"], "batches": st["batches"],
+                "scalar_deliveries": st["scalar"],
+                "entries": st["entries"],
+            }
             for sh in self.shards:
                 sh.finish_prog(prog_id)
             if self.weaver is not None:
@@ -89,6 +112,7 @@ class WeaverConfig:
     tau: float = 1e-3            # vector-clock announce period (§3.3)
     tau_nop: float = 0.5e-3      # NOP period (§4.1)
     gc_period: float = 50e-3     # distributed GC cadence (§4.5)
+    frontier_progs: bool = True  # batched node-program execution path
     seed: int = 0
     cost: CostModel = field(default_factory=CostModel)
     network: NetworkModel = field(default_factory=NetworkModel)
@@ -111,7 +135,8 @@ class Weaver:
         self.intern = VidIntern()       # deployment-wide vid interning
         self.shards: List[Shard] = [
             Shard(self.sim, s, cfg.n_gatekeepers, self.oracle, cfg.cost,
-                  self.store.shard_of, intern=self.intern)
+                  self.store.shard_of, intern=self.intern,
+                  use_frontier=cfg.frontier_progs)
             for s in range(cfg.n_shards)
         ]
         for gk in self.gatekeepers:
@@ -246,7 +271,8 @@ class Weaver:
             old = self.shards[sid]
             old.stop()
             nu = Shard(self.sim, sid, self.cfg.n_gatekeepers, self.oracle,
-                       self.cfg.cost, self.store.shard_of, intern=self.intern)
+                       self.cfg.cost, self.store.shard_of, intern=self.intern,
+                       use_frontier=self.cfg.frontier_progs)
             nu.recover_from(self.store.recover_shard(sid))
             self.shards[sid] = nu
             for sh in self.shards:

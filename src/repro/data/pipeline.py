@@ -11,10 +11,15 @@ builds refinable timestamps for.
 Batches ride the columnar snapshot engine: the first batch pays a cold
 columnar build, every later batch is a **delta refresh** that only
 re-evaluates the stamps the writers touched since the previous batch
-(O(changed), see ``analytics.SnapshotEngine``), and the edge arrays come
-back CSR-sorted so downstream segment reductions can claim sorted
-indices.  ``snapshot_stats()`` exposes the engine's cold/delta counters
-for monitoring the hit rate under a write workload.
+(O(changed), see ``analytics.SnapshotEngine``).  Edges are emitted in
+the snapshot's **CSC (dst-major) orientation** with the padding
+sentinel (``pad_nodes - 1``, the maximum index) appended last, so
+``edge_dst`` is globally non-decreasing and every dst-keyed segment
+reduction downstream can claim ``indices_are_sorted=True`` — flip it on
+for the whole model with ``repro.models.mp.set_sorted_indices(True)``
+when training exclusively from this pipeline.  ``snapshot_stats()``
+exposes the engine's cold/delta counters for monitoring the hit rate
+under a write workload.
 """
 
 from __future__ import annotations
@@ -96,9 +101,10 @@ class DynamicGraphPipeline:
         mask[:n] = 1.0
         pe = self.pad_edges - len(ga.edge_src)
         dead = self.pad_nodes - 1
-        src = np.concatenate([ga.edge_src,
+        # CSC orientation + max-index padding tail => dst is sorted
+        src = np.concatenate([ga.csc_src,
                               np.full(pe, dead, np.int32)])
-        dst = np.concatenate([ga.edge_dst,
+        dst = np.concatenate([ga.csc_dst,
                               np.full(pe, dead, np.int32)])
         return SnapshotBatch(
             x=x, edge_src=src, edge_dst=dst, labels=labels,

@@ -1,14 +1,23 @@
-"""Layout preparation + public wrapper for the segment_mp kernel.
+"""Layout preparation + public wrappers for the segment_mp kernel.
 
 ``pack_edges`` converts a dst-sorted edge list into the block-ELL layout
 the kernel wants: for each destination-node block, its edges padded to a
 whole number of ``block_e`` tiles; every block padded to the max tile
 count (regular grid).  Pad slots carry src=0 / dst=-1.
+
+``segment_reduce_sorted`` is the scalar sibling used by the
+frontier-batched node-program runtime (``repro.core.frontier``) for
+per-hop neighbour aggregation: it reduces values over *pre-sorted*
+segment keys, returning the compressed ``(unique_keys, reduced)`` form a
+frontier exchange wants (the next hop's packed frontier IS the unique
+key set).  On CPU it is a ``reduceat`` over the sorted runs; off-CPU it
+routes through ``jax.ops.segment_*`` with ``indices_are_sorted=True`` —
+the same sortedness contract the block-ELL kernel exploits.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +56,59 @@ def pack_edges(edge_src: np.ndarray, edge_dst: np.ndarray, n_nodes: int,
         src_packed[b * cap: b * cap + m] = src[lo:hi]
         dst_packed[b * cap: b * cap + m] = dst[lo:hi]
     return src_packed, dst_packed, n_pad
+
+
+_REDUCERS = {
+    "min": (np.minimum, "segment_min"),
+    "max": (np.maximum, "segment_max"),
+    "sum": (np.add, "segment_sum"),
+}
+
+
+def segment_starts(keys: np.ndarray) -> np.ndarray:
+    """Run starts of a sorted key array: positions where a new segment
+    begins (``keys`` must be non-decreasing)."""
+    if keys.size == 0:
+        return np.zeros(0, np.int64)
+    return np.flatnonzero(np.r_[True, keys[1:] != keys[:-1]])
+
+
+def segment_reduce_sorted(values: np.ndarray, keys: np.ndarray,
+                          op: str = "min",
+                          use_jax: Optional[bool] = None):
+    """Reduce ``values`` over equal runs of the SORTED ``keys``.
+
+    Returns ``(unique_keys, reduced)`` — compressed form, one entry per
+    distinct key in ascending order.  ``use_jax=None`` picks the jax
+    segment op (``indices_are_sorted=True``) off-CPU and the numpy
+    ``ufunc.reduceat`` fast path on CPU; pass True/False to force.
+    """
+    ufunc, seg_name = _REDUCERS[op]
+    values = np.asarray(values)
+    keys = np.asarray(keys)
+    if keys.size == 0:
+        return keys, values[:0]
+    if use_jax is None:
+        use_jax = jax.default_backend() != "cpu"
+    starts = segment_starts(keys)
+    uniq = keys[starts]
+    if not use_jax:
+        return uniq, ufunc.reduceat(values, starts)
+    # dense segment ids from the run starts, then the sorted segment op
+    seg_ids = np.cumsum(np.r_[False, keys[1:] != keys[:-1]])
+    fn = getattr(jax.ops, seg_name)
+    out = fn(jnp.asarray(values), jnp.asarray(seg_ids),
+             num_segments=int(uniq.size), indices_are_sorted=True)
+    return uniq, np.asarray(out)
+
+
+def segment_count_sorted(keys: np.ndarray):
+    """(unique_keys, run_lengths) of a sorted key array."""
+    keys = np.asarray(keys)
+    if keys.size == 0:
+        return keys, np.zeros(0, np.int64)
+    starts = segment_starts(keys)
+    return keys[starts], np.diff(np.r_[starts, keys.size])
 
 
 def segment_matmul_reduce(x: jnp.ndarray, w: jnp.ndarray,

@@ -6,6 +6,18 @@ GNN/message-passing layers all route through these helpers built on
 system.  ``use_pallas`` switches the hot gather->reduce path to the
 fused Pallas kernel (``repro.kernels.segment_mp``) where shapes allow;
 the jnp path is the semantic reference.
+
+Sorted segment ids
+------------------
+Snapshots from the columnar engine arrive CSR/CSC-sorted, and the
+dynamic-graph pipeline now feeds batches in CSC (dst-major) orientation
+— so the dst-keyed scatters can claim ``indices_are_sorted=True`` and
+skip XLA's scatter sort.  Every helper takes ``sorted_ids`` (static at
+trace time); :func:`set_sorted_indices` flips the module default for
+callers whose call sites are buried in jitted model code (e.g. the
+dynamic-pipeline trainer, whose batches are ALWAYS dst-sorted).  The
+claim is an optimization contract: passing unsorted ids with the flag
+set is undefined behaviour, exactly as in ``jax.ops``.
 """
 
 from __future__ import annotations
@@ -14,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 _USE_PALLAS = False
+_SORTED_DEFAULT = False
 
 
 def set_use_pallas(flag: bool) -> None:
@@ -21,47 +34,67 @@ def set_use_pallas(flag: bool) -> None:
     _USE_PALLAS = flag
 
 
+def set_sorted_indices(flag: bool) -> None:
+    """Module default for ``sorted_ids`` (read at trace time)."""
+    global _SORTED_DEFAULT
+    _SORTED_DEFAULT = flag
+
+
+def _sorted(flag: bool) -> bool:
+    return bool(flag or _SORTED_DEFAULT)
+
+
 def gather_src(x: jnp.ndarray, edge_src: jnp.ndarray) -> jnp.ndarray:
     return x[edge_src]
 
 
 def scatter_sum(messages: jnp.ndarray, edge_dst: jnp.ndarray,
-                n_nodes: int) -> jnp.ndarray:
-    return jax.ops.segment_sum(messages, edge_dst, num_segments=n_nodes)
+                n_nodes: int, sorted_ids: bool = False) -> jnp.ndarray:
+    return jax.ops.segment_sum(messages, edge_dst, num_segments=n_nodes,
+                               indices_are_sorted=_sorted(sorted_ids))
 
 
-def scatter_mean(messages, edge_dst, n_nodes: int):
-    s = scatter_sum(messages, edge_dst, n_nodes)
+def scatter_mean(messages, edge_dst, n_nodes: int, sorted_ids: bool = False):
+    s = scatter_sum(messages, edge_dst, n_nodes, sorted_ids)
     cnt = jax.ops.segment_sum(jnp.ones((messages.shape[0],), messages.dtype),
-                              edge_dst, num_segments=n_nodes)
+                              edge_dst, num_segments=n_nodes,
+                              indices_are_sorted=_sorted(sorted_ids))
     return s / jnp.maximum(cnt, 1.0)[:, None]
 
 
-def scatter_max(messages, edge_dst, n_nodes: int):
-    return jax.ops.segment_max(messages, edge_dst, num_segments=n_nodes)
+def scatter_max(messages, edge_dst, n_nodes: int, sorted_ids: bool = False):
+    return jax.ops.segment_max(messages, edge_dst, num_segments=n_nodes,
+                               indices_are_sorted=_sorted(sorted_ids))
 
 
-def scatter_min(messages, edge_dst, n_nodes: int):
-    return jax.ops.segment_min(messages, edge_dst, num_segments=n_nodes)
+def scatter_min(messages, edge_dst, n_nodes: int, sorted_ids: bool = False):
+    return jax.ops.segment_min(messages, edge_dst, num_segments=n_nodes,
+                               indices_are_sorted=_sorted(sorted_ids))
 
 
-def degree(edge_dst: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
+def degree(edge_dst: jnp.ndarray, n_nodes: int,
+           sorted_ids: bool = False) -> jnp.ndarray:
     return jax.ops.segment_sum(jnp.ones_like(edge_dst, dtype=jnp.float32),
-                               edge_dst, num_segments=n_nodes)
+                               edge_dst, num_segments=n_nodes,
+                               indices_are_sorted=_sorted(sorted_ids))
 
 
 def segment_softmax(logits: jnp.ndarray, segments: jnp.ndarray,
-                    n_segments: int) -> jnp.ndarray:
+                    n_segments: int, sorted_ids: bool = False) -> jnp.ndarray:
     """Softmax over variable-size groups (GAT edge attention)."""
-    mx = jax.ops.segment_max(logits, segments, num_segments=n_segments)
+    srt = _sorted(sorted_ids)
+    mx = jax.ops.segment_max(logits, segments, num_segments=n_segments,
+                             indices_are_sorted=srt)
     mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
     ex = jnp.exp(logits - mx[segments])
-    den = jax.ops.segment_sum(ex, segments, num_segments=n_segments)
+    den = jax.ops.segment_sum(ex, segments, num_segments=n_segments,
+                              indices_are_sorted=srt)
     return ex / jnp.maximum(den[segments], 1e-16)
 
 
 def propagate_matmul(x: jnp.ndarray, w: jnp.ndarray, edge_src: jnp.ndarray,
-                     edge_dst: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
+                     edge_dst: jnp.ndarray, n_nodes: int,
+                     dst_sorted: bool = False) -> jnp.ndarray:
     """Fused gather -> matmul -> scatter-sum: y[v] = sum_{(u,v)} (x[u] @ w).
 
     This is the SpMM-regime hot path; with ``set_use_pallas(True)`` it runs
@@ -72,4 +105,4 @@ def propagate_matmul(x: jnp.ndarray, w: jnp.ndarray, edge_src: jnp.ndarray,
         return smp_ops.segment_matmul_reduce(x, w, edge_src, edge_dst,
                                              n_nodes)
     msgs = gather_src(x, edge_src) @ w
-    return scatter_sum(msgs, edge_dst, n_nodes)
+    return scatter_sum(msgs, edge_dst, n_nodes, sorted_ids=dst_sorted)
