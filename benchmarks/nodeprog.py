@@ -18,10 +18,23 @@ section runs ``traverse`` through the full simulator (two Weaver
 deployments, ``frontier_progs`` on/off) to report the simulated-time
 and message/entry counters.
 
+A third section measures **write churn**: with ~0.5% of edges mutated
+between program hops (stamps after ``T_prog`` — invisible by snapshot
+isolation), the delta-refreshed plans must keep the batched path fast
+where forced cold rebuilds collapse it: plan maintenance ≥5x faster at
+equal stamps with bit-identical results (``write_churn.*`` in the
+payload), and the simulator section asserts same-(prog, stamp) delivery
+coalescing keeps per-hop executions O(active shards).
+
 Writes ``BENCH_nodeprog.json`` at the repo root (plus the usual
 results/bench copy) with median seconds, speedups, entry/message
-reductions, and the equivalence bit.  The acceptance bar for this PR is
-``speedup.traverse_multi_hop >= 3``.
+reductions, and the equivalence bit.  The acceptance bars are
+``speedup.traverse_multi_hop >= 3`` (PR 2) and
+``write_churn.*.plan_speedup >= 5`` with churn-run results identical to
+the forced-cold baseline (PR 3).
+
+``REPRO_BENCH_SMOKE=1`` (or ``benchmarks.run --smoke``) shrinks the
+graph and iteration counts for CI.
 """
 
 from __future__ import annotations
@@ -41,8 +54,10 @@ from .common import save_result
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-N_USERS = 20_000
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+N_USERS = 4_000 if SMOKE else 20_000
 AVG_DEG = 5
+CHURN_FRAC = 0.005        # ≤1% of edges mutated between hops
 
 
 class _StampGen:
@@ -77,12 +92,14 @@ def _build(seed: int = 0):
     vertices = sorted({v for e in edges for v in e})
     for v in vertices:
         part_of(v).create_vertex(v, sg.next())
+    made = []
     for s, d in edges:
         e = part_of(s).create_edge(s, d, sg.next())
         # deterministic 1..4 weight so sssp exercises the prop columns
         part_of(s).set_edge_prop(s, e.eid, "weight",
                                  float(1 + (e.eid % 4)), sg.next())
-    return w, sg, vertices, len(edges)
+        made.append((s, e.eid))
+    return w, sg, vertices, made
 
 
 def _median(f, iters: int) -> float:
@@ -94,8 +111,36 @@ def _median(f, iters: int) -> float:
     return float(np.median(ts))
 
 
+def _churner(w, sg, vertices, live_edges, frac, seed=11):
+    """Per-hop mutator: deletes/creates ~frac of the edge set with
+    stamps AFTER the query stamp (invisible at T_prog, but every
+    mutation bumps the owning shard's column version)."""
+    rng = np.random.default_rng(seed)
+    part_of = lambda vid: w.shards[w.store.place(vid)].partition
+    k = max(2, int(len(live_edges) * frac))
+
+    def churn(hop):
+        for _ in range(k // 2):
+            s, eid = live_edges[int(rng.integers(0, len(live_edges)))]
+            e = part_of(s).vertices[s].out_edges.get(eid)
+            if e is not None and e.delete_ts is None:
+                part_of(s).delete_edge(s, eid, sg.next())
+        for _ in range(k // 2):
+            a, b = rng.integers(0, len(vertices), 2)
+            if a == b:
+                continue
+            s, d = str(vertices[a]), str(vertices[b])
+            e = part_of(s).create_edge(s, d, sg.next())
+            part_of(s).set_edge_prop(s, e.eid, "weight",
+                                     float(1 + (e.eid % 4)), sg.next())
+            live_edges.append((s, e.eid))
+
+    return churn
+
+
 def main() -> None:
-    w, sg, vertices, n_edges = _build()
+    w, sg, vertices, live_edges = _build()
+    n_edges = len(live_edges)
     place = lambda vid: w.store.place(vid)
     rng = np.random.default_rng(1)
     seeds = [str(v) for v in rng.choice(vertices, 8, replace=False)]
@@ -133,17 +178,92 @@ def main() -> None:
         / max(1, msgstats["frontier"][q]["entries"])
         for q in queries}
 
+    # ---- write churn: delta-refreshed plans vs forced cold rebuilds ------
+    # ~0.5% of edges mutated between EVERY hop (stamps after the query
+    # stamp), so each hop finds every shard's columns.version moved.
+    # plan_delta=True patches the plans in place; plan_delta=False is
+    # PR 2's behaviour — a cold rebuild per shard per hop.  Results must
+    # be bit-identical (snapshot isolation at the fixed query stamp).
+    # both rooted at seeds[0] — verified multi-hop by the section above
+    # (other seeds may have 0 out-degree on the smoke-sized graph)
+    churn_queries = {
+        "traverse_multi_hop": ("traverse", [(seeds[0], {"depth": 0})]),
+        "sssp": ("sssp", [(seeds[0], {"target": seeds[3],
+                                      "max_depth": 32})]),
+    }
+    at2 = sg.query()
+    write_churn: dict = {"frac": CHURN_FRAC}
+    churn_ok = True
+    iters = 2 if SMOKE else 3
+    for qname, (prog, entries) in churn_queries.items():
+        acc = {m: {"walls": [], "plans": [], "steady": [], "last": None}
+               for m in ("delta", "cold")}
+        # modes INTERLEAVED (order alternating per iteration): every
+        # run's churn permanently grows the graph, so running one mode's
+        # iterations first would hand the other a larger edge set and
+        # bias the ratio
+        for it in range(iters):
+            order = [("delta", True), ("cold", False)]
+            if it % 2:
+                order.reverse()
+            for mode, delta in order:
+                churn = _churner(w, sg, vertices, live_edges, CHURN_FRAC,
+                                 seed=17 * (it + 1) + (0 if delta else 7))
+                t0 = time.perf_counter()
+                r, st = F.run_local(w, prog, entries, at2,
+                                    use_frontier=True, shard_of=place,
+                                    on_hop=churn, plan_delta=delta)
+                a = acc[mode]
+                a["walls"].append(time.perf_counter() - t0)
+                a["plans"].append(st["plan_seconds"])
+                # hop 1 = the initial per-shard builds, identical work
+                # in both modes; hops 2+ isolate refresh-vs-rebuild
+                a["steady"].append(sum(st["plan_seconds_by_hop"][1:]))
+                a["last"] = (r, st)
+        res = {}
+        for mode, a in acc.items():
+            r, st = a["last"]
+            res[mode] = {
+                "seconds": float(np.median(a["walls"])),
+                "plan_seconds": float(np.median(a["plans"])),
+                "plan_seconds_steady": float(np.median(a["steady"])),
+                "plan_cold": st["plan_cold"],
+                "plan_delta": st["plan_delta"],
+                "plan_rows": st["plan_rows"],
+                "hops": st["hops"],
+                "result": r,
+            }
+        identical = res["delta"]["result"] == res["cold"]["result"]
+        churn_ok &= identical
+        # the patch-consumption counter proves refreshes were delta
+        churn_ok &= res["delta"]["plan_delta"] > 0
+        churn_ok &= res["delta"]["plan_cold"] <= len(w.shards)
+        plan_speedup = (res["cold"]["plan_seconds_steady"]
+                        / max(res["delta"]["plan_seconds_steady"], 1e-9))
+        query_speedup = (res["cold"]["seconds"]
+                         / max(res["delta"]["seconds"], 1e-9))
+        for mode in res:
+            res[mode].pop("result")
+        write_churn[qname] = {
+            **res,
+            "plan_speedup": plan_speedup,
+            "query_speedup": query_speedup,
+            "identical": bool(identical),
+        }
+
     # ---- through the simulator: counters + simulated latency ------------
-    def sim_side(frontier_on: bool):
-        ww = Weaver(WeaverConfig(n_gatekeepers=2, n_shards=4, seed=3,
-                                 frontier_progs=frontier_on))
+    def sim_side(frontier_on: bool, n_shards: int = 4, n: int = 400,
+                 m: int = 2400, coalesce: bool = True):
+        ww = Weaver(WeaverConfig(n_gatekeepers=2, n_shards=n_shards,
+                                 seed=3, frontier_progs=frontier_on,
+                                 frontier_coalesce=coalesce))
         rng2 = np.random.default_rng(7)
         tx = ww.begin_tx()
-        for i in range(400):
+        for i in range(n):
             tx.create_vertex(f"s{i}")
         seen = set()
-        for _ in range(2400):
-            a, b = rng2.integers(0, 400, 2)
+        for _ in range(m):
+            a, b = rng2.integers(0, n, 2)
             if a != b and (a, b) not in seen:
                 seen.add((a, b))
                 tx.create_edge(f"s{a}", f"s{b}")
@@ -158,14 +278,25 @@ def main() -> None:
             "sim_latency_ms": lat * 1e3,
             "wall_s": wall,
             "frontier_batches": c["frontier_batches"],
+            "frontier_coalesced": c["frontier_coalesced"],
             "scalar_deliveries": c["scalar_deliveries"],
             "entries_delivered": c["prog_entries_delivered"],
             "shard_hops": c["shard_hops"],
+            "plan_cold_builds": c["plan_cold_builds"],
         }
 
     sim_frontier = sim_side(True)
     sim_scalar = sim_side(False)
     equivalent &= sim_frontier["result_size"] == sim_scalar["result_size"]
+
+    # ---- coalescing: many source shards per hop, executions O(shards) ---
+    co_shards = 8
+    sim_co_on = sim_side(True, n_shards=co_shards, coalesce=True)
+    sim_co_off = sim_side(True, n_shards=co_shards, coalesce=False)
+    coalesce_ok = (sim_co_on["result_size"] == sim_co_off["result_size"]
+                   and sim_co_on["frontier_coalesced"] > 0
+                   and sim_co_on["frontier_batches"]
+                   < sim_co_off["frontier_batches"])
 
     payload = {
         "graph": {"n_vertices": len(vertices), "n_edges": n_edges},
@@ -173,22 +304,48 @@ def main() -> None:
         "speedup": speedup,
         "entry_reduction": entry_reduction,
         "messages": msgstats,
-        "simulator": {"frontier": sim_frontier, "scalar": sim_scalar},
+        "write_churn": write_churn,
+        "simulator": {"frontier": sim_frontier, "scalar": sim_scalar,
+                      "coalesce_on": sim_co_on, "coalesce_off": sim_co_off},
         "equivalent": bool(equivalent),
+        "churn_identical": bool(churn_ok),
+        "coalesce_ok": bool(coalesce_ok),
+        "smoke": SMOKE,
     }
     for q, s in speedup.items():
         print(f"nodeprog,speedup_{q},{s:.2f}")
     for q, r in entry_reduction.items():
         print(f"nodeprog,entry_reduction_{q},{r:.2f}")
+    for q in churn_queries:
+        print(f"nodeprog,churn_plan_speedup_{q},"
+              f"{write_churn[q]['plan_speedup']:.2f}")
+        print(f"nodeprog,churn_query_speedup_{q},"
+              f"{write_churn[q]['query_speedup']:.2f}")
     print(f"nodeprog,sim_entries_frontier,"
           f"{sim_frontier['entries_delivered']}")
     print(f"nodeprog,sim_entries_scalar,{sim_scalar['entries_delivered']}")
+    print(f"nodeprog,coalesced_executions_saved,"
+          f"{sim_co_off['frontier_batches'] - sim_co_on['frontier_batches']}")
     print(f"nodeprog,equivalent,{int(equivalent)}")
-    with open(os.path.join(REPO_ROOT, "BENCH_nodeprog.json"), "w") as f:
-        json.dump(payload, f, indent=1)
-    save_result("nodeprog", payload)
+    if SMOKE:        # CI: keep the full-run numbers at the repo root
+        save_result("nodeprog_smoke", payload)
+    else:
+        with open(os.path.join(REPO_ROOT, "BENCH_nodeprog.json"), "w") as f:
+            json.dump(payload, f, indent=1)
+        save_result("nodeprog", payload)
     if not equivalent:
         raise AssertionError("frontier/scalar results diverged")
+    if not churn_ok:
+        raise AssertionError("write-churn delta/cold results diverged "
+                             "or plans did not delta-refresh")
+    min_plan_speedup = min(write_churn[q]["plan_speedup"]
+                           for q in churn_queries)
+    if not SMOKE and min_plan_speedup < 5.0:
+        raise AssertionError(
+            f"plan delta refresh only {min_plan_speedup:.1f}x over forced "
+            "cold rebuild (bar: 5x)")
+    if not coalesce_ok:
+        raise AssertionError("frontier coalescing ineffective")
 
 
 if __name__ == "__main__":

@@ -14,15 +14,27 @@ Prints ``name,metric,value`` CSV lines (simulated time; deterministic).
 A benchmark that raises is reported, the remaining modules still run,
 and the harness exits non-zero at the end — failures are loud, never
 silently skipped.
+
+``--smoke`` (used by ``scripts/ci.sh``) sets ``REPRO_BENCH_SMOKE=1``
+(modules shrink their graph sizes / iteration counts) and runs only the
+snapshot + nodeprog modules — a minutes-scale end-to-end check that the
+data-plane benchmarks still build, run, and meet their equivalence
+bits.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    if smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
     from . import (block_query, coordination, nodeprog, roofline,
                    scalability, snapshot, social, traversal)
 
@@ -31,6 +43,8 @@ def main() -> None:
                ("social", social), ("traversal", traversal),
                ("scalability", scalability),
                ("coordination", coordination), ("roofline", roofline)]
+    if smoke:
+        modules = [("snapshot", snapshot), ("nodeprog", nodeprog)]
     t00 = time.time()
     failures = []
     for name, mod in modules:

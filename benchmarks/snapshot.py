@@ -38,7 +38,8 @@ from .common import save_result
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-N_USERS = 20_000
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+N_USERS = 4_000 if SMOKE else 20_000
 AVG_DEG = 5
 
 
@@ -158,6 +159,9 @@ def main() -> None:
     for k, v in payload["speedup"].items():
         print(f"snapshot,{k},{v:.2f}")
     print(f"snapshot,equivalent,{int(ok)}")
+    if SMOKE:        # CI: equivalence/asserts ran; keep the full-run
+        save_result("snapshot_smoke", payload)   # numbers at repo root
+        return
     with open(os.path.join(REPO_ROOT, "BENCH_snapshot.json"), "w") as f:
         json.dump(payload, f, indent=1)
     save_result("snapshot", payload)

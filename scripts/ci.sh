@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite, then the benchmark harness in smoke
+# mode.  Exits non-zero on ANY failure (pytest failure, benchmark
+# exception, or equivalence-bit regression — benchmarks/run.py already
+# exits 1 if any module raises).
+#
+# Usage: scripts/ci.sh            # from anywhere; cd's to the repo root
+# Deps:  requirements-dev.txt (pinned); jax/numpy come with the image.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1 pytest ==="
+python -m pytest -x -q
+
+echo "=== benchmarks (smoke) ==="
+python -m benchmarks.run --smoke
+
+echo "=== CI OK ==="

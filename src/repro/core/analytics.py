@@ -165,6 +165,29 @@ def _sort_key(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
     return (src.astype(np.int64) << 32) | dst.astype(np.int64)
 
 
+def remap_slots(smap: np.ndarray, slots: np.ndarray) -> np.ndarray:
+    """Translate slot ids through a CompactionEvent old→new map.
+
+    Out-of-range and already-dropped ids map to -1 (the row can never be
+    visible again).  Shared by the global snapshot cache and the
+    per-shard frontier plans — both consume the same
+    :class:`~repro.core.mvgraph.CompactionEvent` log.
+    """
+    s = np.asarray(slots, np.int64)
+    out = np.full(s.shape, -1, np.int64)
+    ok = (s >= 0) & (s < smap.size)
+    out[ok] = smap[s[ok]]
+    return out
+
+
+def patch_tail(patch: list, cursor: int, n0: int) -> np.ndarray:
+    """Unread pre-compaction patch-log tail, restricted to the consumer's
+    already-consumed rows (``slot < n0``; later slots ride along with the
+    append batch)."""
+    tail = {s for s in patch[cursor:] if s < n0}
+    return np.asarray(sorted(tail), np.int64)
+
+
 def _merge_patch(key: np.ndarray, rem_key: np.ndarray,
                  add_key: np.ndarray) -> np.ndarray:
     """Patch a sorted key multiset by sorted-merge delete+insert.
@@ -506,12 +529,12 @@ class SnapshotEngine:
         nv0, ne0, lv0, le0, ev0 = self.consumed[si]
         for ev in cols.events[ev0 - cols.events_dropped:]:
             # (a) unread patch tail, old numbering -> engine global rows
-            tail_v = sorted({s for s in ev.old_v_patch[lv0:] if s < nv0})
-            if tail_v:
-                ch_v.append(self.v_slot2row[si][np.asarray(tail_v, np.int64)])
-            tail_e = sorted({s for s in ev.old_e_patch[le0:] if s < ne0})
-            if tail_e:
-                ch_e.append(self.e_slot2row[si][np.asarray(tail_e, np.int64)])
+            tail_v = patch_tail(ev.old_v_patch, lv0, nv0)
+            if tail_v.size:
+                ch_v.append(self.v_slot2row[si][tail_v])
+            tail_e = patch_tail(ev.old_e_patch, le0, ne0)
+            if tail_e.size:
+                ch_e.append(self.e_slot2row[si][tail_e])
             # (b) remap cached slot pointers of this shard's rows
             for shard_of, slot_of, s2r, smap, n0 in (
                     (self.v_shard, self.v_slot, self.v_slot2row, ev.v_map,
@@ -520,11 +543,8 @@ class SnapshotEngine:
                      ne0)):
                 mrows = np.nonzero(shard_of == si)[0]
                 if mrows.size:
-                    old = slot_of[mrows].astype(np.int64)
-                    ns = np.full(old.shape, -1, np.int64)
-                    ok = old >= 0
-                    ns[ok] = smap[old[ok]]
-                    slot_of[mrows] = ns.astype(np.int32)
+                    slot_of[mrows] = remap_slots(
+                        smap, slot_of[mrows]).astype(np.int32)
                 old_s2r = s2r[si]
                 nmap = smap[:n0]
                 keep = nmap >= 0

@@ -13,9 +13,16 @@ against the stamped columns the partition already maintains
   timeline-oracle cache in ONE request), the visible out-edges sorted by
   ``(src gid, dst gid)``, and lazily-materialized latest-visible
   property columns per key (edge filters, weights, vertex values).
-  Plans are cached per (columns.version, stamp) — every hop of a
-  multi-hop program reuses one plan, and concurrent writes invalidate it
-  because every column mutation bumps ``version``.
+  Plans survive write traffic: instead of rebuilding whenever
+  ``PartitionColumns.version`` bumps, :meth:`ShardPlan.refresh`
+  delta-consumes the partition's patch logs and
+  :class:`~repro.core.mvgraph.CompactionEvent` remaps — the same
+  O(changed) contract the global ``SnapshotEngine`` has — re-evaluating
+  only changed and unsettled stamps (at most one incremental oracle
+  round trip) and splicing the sorted-CSR slice in place.  A cold
+  rebuild happens only on first contact, when the compaction-event
+  history no longer covers the plan's cursor, or when the new query
+  stamp does not dominate the plan stamp.
 * :class:`Frontier` — the packed exchange unit: a gid array plus an
   optional per-entry float payload (e.g. sssp distances) and a shared
   ``meta`` dict.  Shards exchange ONE such message per destination shard
@@ -79,13 +86,64 @@ def _before_rows(rows: np.ndarray, q: np.ndarray) -> np.ndarray:
     return np.array(analytics._before_batch(rows, q))
 
 
+def _edge_key(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """Packed (src << 32 | dst) sort keys — the engine's convention."""
+    from . import analytics
+    return analytics._sort_key(src, dst)
+
+
+def _remap_ids(smap: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Translate a sorted-unique slot-id set through a compaction map,
+    dropping dead slots."""
+    from . import analytics
+    r = analytics.remap_slots(smap, ids)
+    return np.unique(r[r >= 0])
+
+
+def _merge_unsettled(old: np.ndarray, ids: np.ndarray,
+                     mask: np.ndarray) -> np.ndarray:
+    """Replace the membership of ``ids`` in the sorted-unique unsettled
+    set ``old`` according to ``mask``."""
+    return np.union1d(np.setdiff1d(old, ids, assume_unique=True), ids[mask])
+
+
 class ShardPlan:
     """Sorted-CSR snapshot slice of ONE partition at one stamp.
 
     ``refine_batch(stamps) -> {stamp.key(): bool}`` resolves stamps that
-    are truly concurrent with ``at`` (True = before the program); the
-    shard passes a closure over its oracle cache so a plan build costs at
-    most one oracle round trip.
+    are truly concurrent with ``at`` (True = before the program); all
+    concurrent stamps of a build — create/delete AND property versions —
+    are queued and resolved in ONE such call, so a plan build (or delta
+    refresh) costs at most one oracle round trip.
+
+    Delta refresh contract
+    ----------------------
+    A plan records consume cursors into its partition's change feed
+    (``PartitionColumns.cursor()`` + the per-``_PropTable`` cursors).
+    :meth:`refresh` brings the plan up to date at O(changed) stamp work
+    instead of an O(V+E) rebuild:
+
+    * in-place stamp patches (delete / GC purge / re-create) are read
+      from the ``v_patch`` / ``e_patch`` / prop ``patch`` tails;
+    * appended rows extend the visibility arrays and the gid→slot map;
+    * :class:`~repro.core.mvgraph.CompactionEvent` entries remap every
+      cached slot pointer (CSR ``eslot``, unsettled sets, visibility
+      arrays) to the post-compaction numbering, recovering the unread
+      pre-compaction patch tails; a consumer whose cursor lags the
+      bounded event history returns False — the caller MUST then build a
+      fresh plan (a stale *settled* plan is no longer trustworthy: the
+      missed patches may have changed visibility at every stamp);
+    * the stamp may advance (``plan.at ≼ at``): previously *unsettled*
+      rows (present stamps not strictly vector-before the old stamp) are
+      re-evaluated at the new stamp, everything settled is reused as-is;
+    * changed rows' keep-decisions are spliced into the sorted CSR slice
+      by ``np.delete`` / ``np.insert`` (O(changed) decisions + one
+      memcpy), and cached property views are patched per affected owner.
+
+    ``settled`` means NO unsettled rows remain anywhere (vertex, edge or
+    property stamps) — visibility is then identical at every later
+    stamp, and the shard may serve later query stamps from this plan
+    without refreshing (point-read hot path).
     """
 
     def __init__(self, cols, at: Stamp, n_gk: int,
@@ -97,21 +155,34 @@ class ShardPlan:
         self.q = clock.pack(at, n_gk)
         self._refine_batch = refine_batch
         self._prop_cache: Dict[Tuple[str, str], tuple] = {}
-        # settled: every stamp present in the columns (incl. property
-        # versions) is strictly vector-before ``at`` — then visibility is
-        # identical at EVERY later stamp, and the shard may reuse this
-        # plan for new queries without rebuilding (point-read hot path).
-        self._all_before = True
         #: rows evaluated by this build (simulated-cost accounting)
         self.built_rows = (cols.n_v + cols.n_e
                            + cols.v_props.n + cols.e_props.n)
+        #: rows re-evaluated by the latest :meth:`refresh`
+        self.last_refresh_rows = 0
+        # change-feed consume cursors (see class docstring)
+        self._consumed = cols.cursor()
+        self._p_consumed = {"v": cols.v_props.cursor(),
+                            "e": cols.e_props.cursor()}
 
-        nv = cols.n_v
-        v_create = cols.v_create.view()
-        v_delete = cols.v_delete.view()
-        cb = self._vis_half(v_create, cols.v_create_stamp)
-        db = self._vis_half(v_delete, cols.v_delete_stamp)
-        self.v_visible = cb & ~db if nv else np.zeros(0, bool)
+        nv, ne = cols.n_v, cols.n_e
+        pend: List[tuple] = []
+        vc, vd = cols.v_create.view(), cols.v_delete.view()
+        cb = self._eval(vc, cols.v_create_stamp, pend)
+        db = self._eval(vd, cols.v_delete_stamp, pend)
+        ec, ed = cols.e_create.view(), cols.e_delete.view()
+        ecb = self._eval(ec, cols.e_create_stamp, pend)
+        edb = self._eval(ed, cols.e_delete_stamp, pend)
+        # property stamps are evaluated eagerly (one bool per version
+        # row) — the per-key views are derived lazily from these masks
+        # with no further oracle traffic
+        self._p_before = {
+            t: self._eval(pt.stamp.view(), pt.stamp_obj, pend)
+            for t, pt in (("v", cols.v_props), ("e", cols.e_props))}
+        self._resolve(pend)
+
+        self.v_visible = (cb & ~db) if nv else np.zeros(0, bool)
+        self.e_vis = (ecb & ~edb) if ne else np.zeros(0, bool)
 
         # gid -> vertex slot (dense over the intern table seen so far)
         gids = cols.v_gid.view()
@@ -120,59 +191,340 @@ class ShardPlan:
         self._slot_of[gids] = np.arange(nv, dtype=np.int64)
 
         # visible out-edges of visible sources, sorted by (src, dst) gid
-        ne = cols.n_e
         if ne:
-            ecb = self._vis_half(cols.e_create.view(), cols.e_create_stamp)
-            edb = self._vis_half(cols.e_delete.view(), cols.e_delete_stamp)
-            e_vis = ecb & ~edb
             src = cols.e_src.view().astype(np.int64)
             sslot = np.where(src < self._slot_of.size,
                              self._slot_of[np.minimum(src,
                                                       self._slot_of.size - 1)],
                              -1)
-            keep = e_vis & (sslot >= 0)
+            keep = self.e_vis & (sslot >= 0)
             keep[keep] &= self.v_visible[sslot[keep]]
+            self.e_keep = keep
             rows = np.nonzero(keep)[0]
             dst = cols.e_dst.view().astype(np.int64)[rows]
-            order = np.lexsort((dst, src[rows]))
+            key = _edge_key(src[rows], dst)
+            order = np.argsort(key, kind="stable")
+            self._ekey = key[order]
             self.esrc = src[rows][order]
             self.edst = dst[order]
             self.eslot = rows[order]          # edge slot per CSR position
         else:
+            self.e_keep = np.zeros(0, bool)
+            self._ekey = np.zeros(0, np.int64)
             self.esrc = np.zeros(0, np.int64)
             self.edst = np.zeros(0, np.int64)
             self.eslot = np.zeros(0, np.int64)
 
-        # fold the property stamps into the settledness check eagerly
-        # (prop arrays themselves stay lazy per key)
-        for pt in (cols.v_props, cols.e_props):
-            if pt.n:
-                rows = pt.stamp.view()
-                raw = _before_rows(rows, self.q)
-                self._all_before &= bool(
-                    np.all(raw | (rows[:, 0] == NO_STAMP)))
-        self.settled = self._all_before
+        # rows whose visibility can still change as the stamp advances
+        self.v_unsettled = np.nonzero(self._unsett(vc, vd, cb, db))[0]
+        self.e_unsettled = np.nonzero(self._unsett(ec, ed, ecb, edb))[0]
+        self.p_unsettled = {}
+        for t, pt in (("v", cols.v_props), ("e", cols.e_props)):
+            rows = pt.stamp.view()
+            pres = rows[:, 0] != NO_STAMP if pt.n else np.zeros(0, bool)
+            self.p_unsettled[t] = np.nonzero(pres & ~self._p_before[t])[0]
+        self._recheck_settled()
 
     # ------------------------------------------------------------ visibility
-    def _vis_half(self, rows: np.ndarray, stamp_of: List) -> np.ndarray:
+    @staticmethod
+    def _unsett(create_rows, delete_rows, cb, db) -> np.ndarray:
+        if create_rows.shape[0] == 0:
+            return np.zeros(0, bool)
+        return (((create_rows[:, 0] != NO_STAMP) & ~cb)
+                | ((delete_rows[:, 0] != NO_STAMP) & ~db))
+
+    def _recheck_settled(self) -> None:
+        self.settled = not (self.v_unsettled.size or self.e_unsettled.size
+                            or self.p_unsettled["v"].size
+                            or self.p_unsettled["e"].size)
+
+    def _eval(self, rows: np.ndarray, stamp_of, pend: List[tuple],
+              ids: Optional[np.ndarray] = None) -> np.ndarray:
+        """rows ≺ q, queueing truly-concurrent stamps on ``pend`` for the
+        single batched resolution.  ``ids`` maps local row positions back
+        to table slots when ``rows`` is a gathered subset."""
         if rows.shape[0] == 0:
             return np.zeros(0, bool)
         out = _before_rows(rows, self.q)
-        # a present stamp not strictly vector-before q can flip at a
-        # later query stamp: the plan is then stamp-specific
-        self._all_before &= bool(np.all(out | (rows[:, 0] == NO_STAMP)))
         if self._refine_batch is not None:
-            cand = np.nonzero(clock.concurrent_mask_np(rows, self.q))[0]
-            if cand.size:
-                pend = [(int(i), stamp_of[int(i)]) for i in cand
-                        if stamp_of[int(i)] is not None
-                        and compare(stamp_of[int(i)], self.at)
-                        is Order.CONCURRENT]
-                if pend:
-                    got = self._refine_batch([s for _, s in pend])
-                    for i, s in pend:
-                        out[i] = got[s.key()]
+            for li in np.nonzero(
+                    clock.concurrent_mask_np(rows, self.q))[0].tolist():
+                s = stamp_of[li if ids is None else int(ids[li])]
+                if s is not None and compare(s, self.at) is Order.CONCURRENT:
+                    pend.append((out, li, s))
         return out
+
+    def _resolve(self, pend: List[tuple]) -> None:
+        """ONE oracle round trip for every queued concurrent stamp."""
+        if not pend:
+            return
+        got = self._refine_batch([s for _, _, s in pend])
+        for arr, i, s in pend:
+            arr[i] = bool(got[s.key()])
+
+    # --------------------------------------------------------- delta refresh
+    def _consume_compactions(self, ch_v: List[np.ndarray],
+                             ch_e: List[np.ndarray]) -> Tuple[int, int]:
+        """Catch up with column compactions (cursor known to be covered
+        by the event history).  Remaps every cached slot pointer to the
+        new numbering and recovers the unread pre-compaction patch
+        tails into ``ch_v`` / ``ch_e``.  Returns the consume cursors in
+        post-compaction numbering."""
+        from . import analytics
+        cols = self.cols
+        nv0, ne0, lv0, le0, ev0 = self._consumed
+        for ev in cols.events[ev0 - cols.events_dropped:]:
+            ch_v.append(analytics.patch_tail(ev.old_v_patch, lv0, nv0))
+            ch_e.append(analytics.patch_tail(ev.old_e_patch, le0, ne0))
+            lv0 = le0 = 0
+            v_kept = ev.v_map[:nv0] >= 0
+            e_kept = ev.e_map[:ne0] >= 0
+            self.v_visible = self.v_visible[v_kept]
+            self.e_vis = self.e_vis[e_kept]
+            self.e_keep = self.e_keep[e_kept]
+            # CSR slice: renumber eslot, drop edges the compaction killed
+            new_slot = analytics.remap_slots(ev.e_map, self.eslot)
+            dead = np.nonzero(new_slot < 0)[0]
+            if dead.size:
+                self._ekey = np.delete(self._ekey, dead)
+                self.esrc = np.delete(self.esrc, dead)
+                self.edst = np.delete(self.edst, dead)
+                new_slot = np.delete(new_slot, dead)
+            self.eslot = new_slot
+            self.v_unsettled = _remap_ids(ev.v_map, self.v_unsettled)
+            self.e_unsettled = _remap_ids(ev.e_map, self.e_unsettled)
+            for lst, smap in ((ch_v, ev.v_map), (ch_e, ev.e_map)):
+                for i in range(len(lst)):
+                    lst[i] = _remap_ids(smap, lst[i])
+            nv0 = int(v_kept.sum())
+            ne0 = int(e_kept.sum())
+        # vertex slots renumbered: rebuild the gid -> slot map (gids are
+        # stable, so this is pure integer scatter, no stamp work)
+        gids = self.cols.v_gid.view()
+        top = int(gids.max()) + 1 if cols.n_v else 1
+        self._slot_of = np.full(top, -1, np.int64)
+        self._slot_of[gids] = np.arange(cols.n_v, dtype=np.int64)
+        # property rows renumber without a recorded map: caches are
+        # dropped and the stamp masks re-read below (compactions are
+        # rare; the common delta path never lands here)
+        self._prop_cache = {}
+        return nv0, ne0
+
+    def refresh(self, at: Stamp,
+                refine_batch: Optional[Callable] = None) -> bool:
+        """Delta-consume column changes (optionally advancing the plan
+        stamp to a later ``at``).  Returns False when a cold rebuild is
+        required: the compaction-event history no longer covers this
+        plan's cursor, or ``at`` does not dominate the plan stamp.  On
+        True, the plan is exactly equal to ``ShardPlan(cols, at, ...)``
+        built fresh (same visibility, same CSR edge multiset, same
+        property views), and ``last_refresh_rows`` holds the number of
+        rows whose stamps were re-evaluated."""
+        cols = self.cols
+        o = compare(self.at, at)
+        if o not in (Order.EQUAL, Order.BEFORE):
+            return False
+        if self._consumed[4] < cols.events_dropped:
+            return False
+        if refine_batch is not None:
+            self._refine_batch = refine_batch
+        stamp_moved = o is Order.BEFORE
+        self.at = at
+        self.q = clock.pack(at, self.n_gk)
+
+        ch_v: List[np.ndarray] = []
+        ch_e: List[np.ndarray] = []
+        compacted = self._consumed[4] < cols.events_dropped + len(cols.events)
+        if compacted:
+            nv0, ne0 = self._consume_compactions(ch_v, ch_e)
+            lv0 = le0 = 0
+        else:
+            nv0, ne0, lv0, le0, _ = self._consumed
+        from . import analytics
+        if len(cols.v_patch) > lv0:
+            ch_v.append(analytics.patch_tail(cols.v_patch, lv0, nv0))
+        if len(cols.e_patch) > le0:
+            ch_e.append(analytics.patch_tail(cols.e_patch, le0, ne0))
+        nv, ne = cols.n_v, cols.n_e
+        if nv > nv0:
+            self.v_visible = np.concatenate(
+                [self.v_visible, np.zeros(nv - nv0, bool)])
+            new_gids = cols.v_gid.view()[nv0:nv].astype(np.int64)
+            top = int(new_gids.max()) + 1
+            if top > self._slot_of.size:
+                self._slot_of = np.concatenate(
+                    [self._slot_of,
+                     np.full(top - self._slot_of.size, -1, np.int64)])
+            self._slot_of[new_gids] = np.arange(nv0, nv, dtype=np.int64)
+            ch_v.append(np.arange(nv0, nv, dtype=np.int64))
+        if ne > ne0:
+            self.e_vis = np.concatenate(
+                [self.e_vis, np.zeros(ne - ne0, bool)])
+            self.e_keep = np.concatenate(
+                [self.e_keep, np.zeros(ne - ne0, bool)])
+            ch_e.append(np.arange(ne0, ne, dtype=np.int64))
+
+        cat = lambda parts: (np.unique(np.concatenate(parts)) if parts
+                             else np.zeros(0, np.int64))
+        ids_v, ids_e = cat(ch_v), cat(ch_e)
+        if stamp_moved:
+            ids_v = np.union1d(ids_v, self.v_unsettled)
+            ids_e = np.union1d(ids_e, self.e_unsettled)
+        p_ids: Dict[str, np.ndarray] = {}
+        for t, pt in (("v", cols.v_props), ("e", cols.e_props)):
+            if compacted:
+                self._p_before[t] = np.zeros(pt.n, bool)
+                self.p_unsettled[t] = np.zeros(0, np.int64)
+                ids = np.arange(pt.n, dtype=np.int64)
+            else:
+                n0, lp0 = self._p_consumed[t]
+                chp: List[np.ndarray] = []
+                if len(pt.patch) > lp0:
+                    chp.append(analytics.patch_tail(pt.patch, lp0, n0))
+                if pt.n > n0:
+                    self._p_before[t] = np.concatenate(
+                        [self._p_before[t], np.zeros(pt.n - n0, bool)])
+                    chp.append(np.arange(n0, pt.n, dtype=np.int64))
+                ids = cat(chp)
+                if stamp_moved:
+                    ids = np.union1d(ids, self.p_unsettled[t])
+            p_ids[t] = ids
+            self._p_consumed[t] = pt.cursor()
+
+        # ---- evaluate every changed/unsettled row, ONE oracle pass -----
+        pend: List[tuple] = []
+        vc = cols.v_create.view()[ids_v]
+        vd = cols.v_delete.view()[ids_v]
+        cb = self._eval(vc, cols.v_create_stamp, pend, ids=ids_v)
+        db = self._eval(vd, cols.v_delete_stamp, pend, ids=ids_v)
+        ec = cols.e_create.view()[ids_e]
+        ed = cols.e_delete.view()[ids_e]
+        ecb = self._eval(ec, cols.e_create_stamp, pend, ids=ids_e)
+        edb = self._eval(ed, cols.e_delete_stamp, pend, ids=ids_e)
+        p_eval = {}
+        for t, pt in (("v", cols.v_props), ("e", cols.e_props)):
+            p_eval[t] = self._eval(pt.stamp.view()[p_ids[t]], pt.stamp_obj,
+                                   pend, ids=p_ids[t])
+        self._resolve(pend)
+
+        # ---- apply: vertices ------------------------------------------
+        old_v = self.v_visible[ids_v]
+        new_v = cb & ~db
+        self.v_visible[ids_v] = new_v
+        self.v_unsettled = _merge_unsettled(
+            self.v_unsettled, ids_v, self._unsett(vc, vd, cb, db))
+        flipped = ids_v[new_v != old_v]
+
+        # ---- apply: edges (keep = visible edge of visible source) -----
+        self.e_vis[ids_e] = ecb & ~edb
+        self.e_unsettled = _merge_unsettled(
+            self.e_unsettled, ids_e, self._unsett(ec, ed, ecb, edb))
+        if flipped.size:
+            # one vectorized membership scan over the int32 src column —
+            # O(E) memcpy-class, NOT stamp work (same pattern as
+            # SnapshotEngine._refresh); runs only when a vertex flipped
+            fg = cols.v_gid.view()[flipped]
+            cand = np.nonzero(np.isin(cols.e_src.view(), fg))[0]
+            aff = np.union1d(ids_e, cand.astype(np.int64))
+        else:
+            aff = ids_e
+        if aff.size:
+            src = cols.e_src.view()[aff].astype(np.int64)
+            sslot = np.where(src < self._slot_of.size,
+                             self._slot_of[np.minimum(src,
+                                                      self._slot_of.size - 1)],
+                             -1)
+            new_keep = self.e_vis[aff] & (sslot >= 0)
+            new_keep[new_keep] &= self.v_visible[sslot[new_keep]]
+            old_keep = self.e_keep[aff]
+            self.e_keep[aff] = new_keep
+            rem = aff[old_keep & ~new_keep]
+            add = aff[new_keep & ~old_keep]
+            if rem.size:
+                pos = np.nonzero(np.isin(self.eslot, rem))[0]
+                self._ekey = np.delete(self._ekey, pos)
+                self.esrc = np.delete(self.esrc, pos)
+                self.edst = np.delete(self.edst, pos)
+                self.eslot = np.delete(self.eslot, pos)
+            if add.size:
+                asrc = cols.e_src.view()[add].astype(np.int64)
+                adst = cols.e_dst.view()[add].astype(np.int64)
+                akey = _edge_key(asrc, adst)
+                order = np.argsort(akey, kind="stable")
+                akey, asrc = akey[order], asrc[order]
+                adst, aslot = adst[order], add[order]
+                ins = np.searchsorted(self._ekey, akey, side="right")
+                self._ekey = np.insert(self._ekey, ins, akey)
+                self.esrc = np.insert(self.esrc, ins, asrc)
+                self.edst = np.insert(self.edst, ins, adst)
+                self.eslot = np.insert(self.eslot, ins, aslot)
+
+        # consume cursors advance BEFORE the property application: the
+        # per-key views are sized by the consumed owner count, which now
+        # includes this refresh's appends
+        self.version = cols.version
+        self._consumed = cols.cursor()
+
+        # ---- apply: property views ------------------------------------
+        n_prop = 0
+        for t, pt in (("v", cols.v_props), ("e", cols.e_props)):
+            ids = p_ids[t]
+            n_prop += int(ids.size)
+            if ids.size:
+                pb = p_eval[t]
+                self._p_before[t][ids] = pb
+                pres = pt.stamp.view()[ids][:, 0] != NO_STAMP
+                self.p_unsettled[t] = _merge_unsettled(
+                    self.p_unsettled[t], ids, pres & ~pb)
+            # always: cached per-key views must track owner-table growth
+            # even when no property row changed
+            self._refresh_prop_cache(t, pt, ids)
+
+        self._recheck_settled()
+        self.last_refresh_rows = int(ids_v.size + ids_e.size) + n_prop
+        return True
+
+    def _refresh_prop_cache(self, t: str, pt, ids: np.ndarray) -> None:
+        """Patch cached per-key property views for the owners touched by
+        the changed version rows (O(affected owners), not O(key rows))."""
+        cols = self.cols
+        n_owner = self._consumed_owner(t)
+        key_col = pt.key.view()
+        owner_col = pt.owner.view()
+        val_col = pt.val.view()
+        num_col = pt.num.view()
+        pb = self._p_before[t]
+        for ck in list(self._prop_cache):
+            tt, key = ck
+            if tt != t:
+                continue
+            idarr, numarr = self._prop_cache[ck]
+            if idarr.size < n_owner:
+                idarr = np.concatenate(
+                    [idarr, np.full(n_owner - idarr.size, -1, np.int64)])
+                numarr = np.concatenate(
+                    [numarr, np.full(n_owner - numarr.size, np.nan)])
+                self._prop_cache[ck] = (idarr, numarr)
+            kid = cols.keys.lookup(key)
+            if kid < 0:
+                continue
+            aff = ids[key_col[ids] == kid]
+            if aff.size == 0:
+                continue
+            for o in np.unique(owner_col[aff]).tolist():
+                rows_o = np.asarray(pt.by_owner.get(int(o), ()), np.int64)
+                sel = (rows_o[(key_col[rows_o] == kid) & pb[rows_o]]
+                       if rows_o.size else rows_o)
+                if sel.size:        # append order == version order
+                    last = int(sel[-1])
+                    idarr[o] = val_col[last]
+                    numarr[o] = num_col[last]
+                else:
+                    idarr[o] = -1
+                    numarr[o] = np.nan
+
+    def _consumed_owner(self, table: str) -> int:
+        return self._consumed[0] if table == "v" else self._consumed[1]
 
     # ------------------------------------------------------------- lookups
     def vertex_visible(self, gids: np.ndarray) -> np.ndarray:
@@ -210,27 +562,30 @@ class ShardPlan:
 
     # ------------------------------------------------------------ properties
     def _prop_arrays(self, table: str, key: str):
-        """(val_id, num) of the latest visible version per OWNER SLOT."""
+        """(val_id, num) of the latest visible version per OWNER SLOT.
+
+        Derived from the eagerly-maintained per-row ``_p_before`` masks
+        (no oracle traffic here); delta refreshes keep cached entries
+        fresh per affected owner (:meth:`_refresh_prop_cache`)."""
         ck = (table, key)
         hit = self._prop_cache.get(ck)
         if hit is not None:
             return hit
         cols = self.cols
         pt = cols.v_props if table == "v" else cols.e_props
-        n_owner = cols.n_v if table == "v" else cols.n_e
+        n_owner = self._consumed_owner(table)
+        n_rows = self._p_consumed[table][0]
         ids = np.full(n_owner, -1, np.int64)
         num = np.full(n_owner, np.nan)
         kid = cols.keys.lookup(key)
-        if kid >= 0 and pt.n:
-            krows = np.nonzero(pt.key.view() == kid)[0]
+        if kid >= 0 and n_rows:
+            krows = np.nonzero((pt.key.view()[:n_rows] == kid)
+                               & self._p_before[table][:n_rows])[0]
             if krows.size:
-                vis = self._vis_half(pt.stamp.view()[krows],
-                                     [pt.stamp_obj[int(i)] for i in krows])
-                rows = krows[vis]
-                owners = pt.owner.view()[rows].astype(np.int64)
+                owners = pt.owner.view()[krows].astype(np.int64)
                 # ascending row order == version order: last write wins
-                ids[owners] = pt.val.view()[rows]
-                num[owners] = pt.num.view()[rows]
+                ids[owners] = pt.val.view()[krows]
+                num[owners] = pt.num.view()[krows]
         self._prop_cache[ck] = (ids, num)
         return ids, num
 
@@ -252,6 +607,35 @@ class ShardPlan:
 
     def value_of(self, val_id: int):
         return self.cols.vals.vals[val_id] if val_id >= 0 else None
+
+
+def maintain_plan(plan: Optional[ShardPlan], cols, at: Stamp, n_gk: int,
+                  refine_batch: Optional[Callable],
+                  allow_delta: bool = True
+                  ) -> Tuple[ShardPlan, str]:
+    """The three-way plan maintenance policy, shared by the shard event
+    loop (``Shard._frontier_plan``) and the synchronous driver
+    (:func:`run_local`) so benchmarks measure exactly what the
+    simulated system runs.  Returns ``(plan, kind)``:
+
+    * ``"reuse"`` — columns unchanged AND (same stamp, or the plan is
+      settled and the stamp dominates it);
+    * ``"delta"`` — :meth:`ShardPlan.refresh` consumed the change feed
+      (``plan.last_refresh_rows`` holds the re-evaluated row count);
+    * ``"cold"``  — a fresh build (first contact, stamp regression, or
+      the compaction-event history no longer covers the plan's cursor —
+      the stale plan, settled or not, must be discarded).
+    """
+    if plan is not None and plan.cols is cols:
+        same = plan.at.key() == at.key()
+        later = same or compare(plan.at, at) in (Order.BEFORE, Order.EQUAL)
+        if plan.version == cols.version and (
+                same or (plan.settled and later)):
+            return plan, "reuse"
+        if later and allow_delta and plan.refresh(
+                at, refine_batch=refine_batch):
+            return plan, "delta"
+    return ShardPlan(cols, at, n_gk, refine_batch=refine_batch), "cold"
 
 
 def g_len(a: np.ndarray) -> int:
@@ -342,12 +726,24 @@ def ensure_state(state: dict, name: str, n: int, fill, dtype) -> np.ndarray:
 def run_local(weaver, name: str, entries, at: Stamp,
               use_frontier: bool = True,
               shard_of: Optional[Callable[[str], Optional[int]]] = None,
-              refine_oracle: bool = True):
+              refine_oracle: bool = True,
+              on_hop: Optional[Callable[[int], None]] = None,
+              plan_delta: bool = True):
     """Execute program ``name`` at stamp ``at`` synchronously.
 
     Returns ``(result, stats)`` where stats counts hops, messages and
-    delivered entries — the benchmark's message-reduction evidence.
+    delivered entries — the benchmark's message-reduction evidence —
+    plus plan-maintenance accounting: ``plan_cold`` / ``plan_delta``
+    builds, ``plan_rows`` re-evaluated by delta refreshes, and
+    ``plan_seconds`` of wall clock spent building/refreshing plans.
+
+    ``on_hop(hop_index)`` fires after every hop (both paths) — tests and
+    benchmarks use it to commit writes *between* hops; snapshot
+    isolation at ``at`` means results must not change.  ``plan_delta=
+    False`` forces a cold plan rebuild whenever a shard's columns
+    changed (the benchmark's write-churn baseline).
     """
+    import time as _time
     from .nodeprog import REGISTRY, run_entries_scalar
     from .oracle import KIND_PROG, KIND_TX
 
@@ -385,7 +781,9 @@ def run_local(weaver, name: str, entries, at: Stamp,
                     cache[s.key()] = False     # conservative: write after
         return {s.key(): cache[s.key()] for s in stamps}
 
-    stats = {"hops": 0, "messages": 0, "entries": 0, "batches": 0}
+    stats = {"hops": 0, "messages": 0, "entries": 0, "batches": 0,
+             "plan_cold": 0, "plan_delta": 0, "plan_rows": 0,
+             "plan_seconds": 0.0, "plan_seconds_by_hop": []}
     outputs: List[object] = []
 
     batched = (use_frontier and prog.frontier_step is not None
@@ -405,6 +803,7 @@ def run_local(weaver, name: str, entries, at: Stamp,
             pending[sid] = Frontier(gs[0], gs[1], froot.depth, froot.meta)
         while pending:
             stats["hops"] += 1
+            hop_plan = 0.0
             nxt: Dict[int, List[Frontier]] = {}
             for sid, fr in pending.items():
                 stats["messages"] += 1
@@ -412,11 +811,20 @@ def run_local(weaver, name: str, entries, at: Stamp,
                 stats["entries"] += len(fr)
                 sh = shards[sid]
                 cols = sh.partition.columns
-                plan = plans.get(sid)
-                if plan is None or plan.version != cols.version:
-                    plans[sid] = plan = ShardPlan(
-                        cols, at, sh.n_gk,
-                        refine_batch=refine_many if refine_oracle else None)
+                rb = refine_many if refine_oracle else None
+                t0 = _time.perf_counter()
+                plan, kind = maintain_plan(plans.get(sid), cols, at,
+                                           sh.n_gk, rb,
+                                           allow_delta=plan_delta)
+                plans[sid] = plan
+                if kind == "delta":
+                    stats["plan_delta"] += 1
+                    stats["plan_rows"] += plan.last_refresh_rows
+                elif kind == "cold":
+                    stats["plan_cold"] += 1
+                dt = _time.perf_counter() - t0
+                stats["plan_seconds"] += dt
+                hop_plan += dt
                 outs, out_fr, _ = execute_step(
                     plan, prog, fr, states.setdefault(sid, {}),
                     intern, sh.cost)
@@ -429,6 +837,9 @@ def run_local(weaver, name: str, entries, at: Stamp,
                                      out_fr.meta))
             pending = {sid: _merge_frontiers(frs)
                        for sid, frs in nxt.items()}
+            stats["plan_seconds_by_hop"].append(hop_plan)
+            if on_hop is not None:
+                on_hop(stats["hops"])
     else:
         states = {}
         pending_s: Dict[int, list] = {}
@@ -452,6 +863,8 @@ def run_local(weaver, name: str, entries, at: Stamp,
                     if nsid is not None:
                         nxt_s.setdefault(nsid, []).append((vid, params))
             pending_s = nxt_s
+            if on_hop is not None:
+                on_hop(stats["hops"])
 
     return prog.reduce(outputs), stats
 

@@ -267,10 +267,11 @@ class _PropTable:
     number), packed stamp row + original :class:`Stamp` for oracle
     refinement.  Purges (GC / owner re-create) overwrite the stamp row
     with all-``NO_STAMP`` and log the row in ``patch`` — the same
-    delta-refresh contract as ``v_patch``/``e_patch`` (cleared at
-    compaction; reserved for the planned ShardPlan delta refresh, see
-    ROADMAP — current consumers re-evaluate prop visibility per
-    build)."""
+    delta-refresh contract as ``v_patch``/``e_patch``, consumed through
+    :meth:`cursor` by :class:`~repro.core.frontier.ShardPlan` to keep
+    its property views fresh at O(changed).  The log is cleared at
+    compaction (rows renumber without a recorded map), so consumers
+    re-read the table after a :class:`CompactionEvent`."""
 
     def __init__(self, c: int) -> None:
         self.c = c
@@ -288,6 +289,14 @@ class _PropTable:
     @property
     def n(self) -> int:
         return self.owner.n
+
+    def cursor(self) -> List[int]:
+        """Consume cursor ``[n_rows, len(patch)]`` for delta consumers
+        (appends are implied by row growth, in-place purges by the patch
+        log).  The patch log is cleared at compaction — a consumer that
+        observes a new :class:`CompactionEvent` must re-read the whole
+        table (property rows renumber without a recorded map)."""
+        return [self.n, len(self.patch)]
 
     @staticmethod
     def _as_num(value) -> float:
@@ -443,6 +452,16 @@ class PartitionColumns:
     @property
     def n_e(self) -> int:
         return self.e_src.n
+
+    def cursor(self) -> List[int]:
+        """Consume cursor ``[n_v, n_e, len(v_patch), len(e_patch),
+        total_compaction_events]`` — the delta-refresh contract shared by
+        :class:`~repro.core.analytics.SnapshotEngine` and
+        :class:`~repro.core.frontier.ShardPlan`.  A consumer whose stored
+        event count falls behind ``events_dropped`` has lost remap
+        history and must rebuild cold."""
+        return [self.n_v, self.n_e, len(self.v_patch), len(self.e_patch),
+                self.events_dropped + len(self.events)]
 
     # ---- vertex events ---------------------------------------------------
     def vertex_created(self, vid: str, ts: Stamp) -> None:

@@ -99,6 +99,17 @@ class NodeProgram:
     frontier_step: Optional[Callable] = None
     pack_root: Optional[Callable] = None
     frontier_ok: Callable[[object], bool] = lambda params: True
+    #: Whether a shard may MERGE several pending same-(prog, stamp,
+    #: depth) Frontier deliveries into one ``frontier_step`` execution.
+    #: Legal iff the step is invariant under entry concatenation: one
+    #: step over the concatenated frontier must equal running the step
+    #: once per delivery against the same state.  True for every
+    #: built-in — visited-set programs (traverse/reachable) dedup
+    #: internally, label-correcting sssp folds offers with a segment
+    #: min, and per-entry programs (get_node/count_edges/block_render)
+    #: emit one output per delivered entry either way.  A program whose
+    #: step is order- or boundary-sensitive must set this False.
+    coalesce_ok: bool = True
 
 
 REGISTRY: Dict[str, NodeProgram] = {}

@@ -22,17 +22,27 @@ Frontier-batched execution (plan / fallback contract)
 Programs with a registered ``frontier_step`` (see ``repro.core.
 nodeprog``) run **batched**: the shard materializes a
 :class:`~repro.core.frontier.ShardPlan` — a sorted-CSR snapshot slice of
-its own ``PartitionColumns`` at ``T_prog``, cached per
-(columns.version, stamp) so every hop of a multi-hop query reuses it —
-and executes the whole delivered frontier in one vectorized step.  The
-next hop is exchanged as ONE packed :class:`~repro.core.frontier.
-Frontier` message per destination shard (O(shards) messages per hop)
-instead of one ``(dst, params)`` entry per emitted vertex.  The path is
-chosen per query from ``(name, root entries)`` — deterministic, so all
-shards agree — and everything else (programs without a vectorized form,
+its own ``PartitionColumns`` at ``T_prog`` — and executes the whole
+delivered frontier in one vectorized step.  The next hop is exchanged as
+ONE packed :class:`~repro.core.frontier.Frontier` message per
+destination shard (O(shards) messages per hop) instead of one
+``(dst, params)`` entry per emitted vertex.  The path is chosen per
+query from ``(name, root entries)`` — deterministic, so all shards
+agree — and everything else (programs without a vectorized form,
 heterogeneous root params, unhashable filter constants, or
 ``use_frontier=False``) falls back to the scalar per-vertex interpreter
 ``nodeprog.run_entries_scalar``, which remains the semantic oracle.
+
+Two mechanisms keep the batched path fast under live traffic:
+
+* **plan delta refresh** — writes committing between program hops bump
+  ``columns.version``; instead of rebuilding its plan cold, the shard
+  delta-refreshes it from the partition's patch logs / compaction
+  events at O(changed) stamp work (see :meth:`Shard._frontier_plan`);
+* **delivery coalescing** — concurrent same-(prog, stamp) frontier
+  deliveries waiting in ``pending_progs`` are merged into ONE
+  ``frontier_step`` execution per hop per shard, charging the merged
+  service cost once (see :meth:`Shard._coalesce_pending`).
 
 Time model: the shard is a single-threaded server; each item charges a
 service time from :class:`~repro.core.gatekeeper.CostModel`, and each
@@ -46,7 +56,8 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .clock import Order, Stamp, compare
-from .frontier import Frontier, ShardPlan, _route_gids, execute_step
+from .frontier import (Frontier, ShardPlan, _merge_frontiers, _route_gids,
+                       execute_step, maintain_plan)
 from .gatekeeper import CostModel
 from .mvgraph import MVGraphPartition, VidIntern
 from .nodeprog import REGISTRY, run_entries_scalar
@@ -66,7 +77,9 @@ class Shard:
                  oracle: OracleServer, cost: CostModel,
                  directory: Callable[[str], Optional[int]],
                  intern: Optional[VidIntern] = None,
-                 use_frontier: bool = True):
+                 use_frontier: bool = True,
+                 plan_delta: bool = True,
+                 coalesce: bool = True):
         self.sim = sim
         sim.register(self)
         self.sid = sid
@@ -79,7 +92,9 @@ class Shard:
         self.intern = intern if intern is not None else VidIntern()
         self.partition = MVGraphPartition(n_gk, self.intern)
         self.use_frontier = use_frontier
-        self._plan: Optional[ShardPlan] = None     # per-(version, stamp)
+        self.plan_delta = plan_delta     # ShardPlan delta refresh on/off
+        self.coalesce = coalesce         # same-(prog, stamp) merge on/off
+        self._plan: Optional[ShardPlan] = None     # delta-refreshed cache
         self._plan_built_rows = 0                  # pending service charge
         self.queues: Dict[int, deque] = {g: deque() for g in range(n_gk)}
         self._expected_seq: Dict[int, int] = {g: 0 for g in range(n_gk)}
@@ -236,9 +251,11 @@ class Shard:
         idx = self._runnable_prog_index()
         if idx is not None:
             prog = self.pending_progs.pop(idx)
+            extra = self._coalesce_pending(prog) if self.coalesce else []
             service = self._exec_prog(
                 prog["prog_id"], prog["delivery_id"], prog["name"],
-                prog["stamp"], prog["entries"], prog["coordinator"])
+                prog["stamp"], prog["entries"], prog["coordinator"],
+                extra_ids=extra)
             self._finish_after(service + self._stall)
             return
         # 2) transactions: need every queue non-empty (Fig. 6)
@@ -372,28 +389,94 @@ class Shard:
     def _frontier_plan(self, stamp: Stamp) -> ShardPlan:
         """Cached sorted-CSR snapshot slice at ``stamp``.
 
-        Reused when the partition columns are unchanged AND (same stamp,
-        or the cached plan is *settled* — every stamp in the columns
-        strictly precedes its build stamp, so visibility is identical at
-        every later stamp).  The settled case is the point-read hot
-        path: a quiescent shard serves get_node/count_edges streams from
-        ONE plan instead of rebuilding per query stamp.  A rebuild
-        charges ``prog_plan_row`` per column row to simulated service
-        (``_plan_built_rows`` is drained by ``_exec_prog``)."""
+        Reused as-is when the partition columns are unchanged AND (same
+        stamp, or the cached plan is *settled* — every stamp in the
+        columns strictly precedes its build stamp, so visibility is
+        identical at every later stamp).  The settled case is the
+        point-read hot path: a quiescent shard serves
+        get_node/count_edges streams from ONE plan.
+
+        When writes committed since the last build (``version`` moved),
+        the plan is **delta-refreshed** (:meth:`ShardPlan.refresh`):
+        patch-log tails and compaction remaps are consumed at O(changed)
+        stamp work, so write traffic between program hops no longer
+        degrades the batched path to cold rebuilds.  A cold rebuild
+        happens only when (a) there is no plan for these columns yet,
+        (b) the query stamp does not dominate the plan stamp (plans only
+        move forward), or (c) the columns' bounded compaction-event
+        history no longer covers the plan's cursor — in which case the
+        stale plan (settled or not) is DISCARDED, never reused for later
+        stamps.  Service cost: a cold build charges ``prog_plan_row``
+        per column row, a delta refresh the same rate per re-evaluated
+        row (``_plan_built_rows`` is drained by ``_exec_prog``)."""
         cols = self.partition.columns
-        plan = self._plan
-        if plan is not None and plan.version == cols.version:
-            if plan.at.key() == stamp.key():
-                return plan
-            if plan.settled and compare(plan.at, stamp) in (
-                    Order.BEFORE, Order.EQUAL):
-                return plan
-        plan = ShardPlan(cols, stamp, self.n_gk,
-                         refine_batch=lambda ss, at=stamp:
-                         self._refine_batch(ss, at))
+        ctr = self.sim.counters
+        plan, kind = maintain_plan(
+            self._plan, cols, stamp, self.n_gk,
+            lambda ss, at=stamp: self._refine_batch(ss, at),
+            allow_delta=self.plan_delta)
         self._plan = plan
-        self._plan_built_rows += plan.built_rows
+        if kind == "delta":
+            ctr.plan_delta_refreshes += 1
+            ctr.plan_rows_refreshed += plan.last_refresh_rows
+            self._plan_built_rows += plan.last_refresh_rows
+        elif kind == "cold":
+            ctr.plan_cold_builds += 1
+            self._plan_built_rows += plan.built_rows
         return plan
+
+    def _coalesce_pending(self, prog: dict) -> List:
+        """Merge every waiting same-(prog, stamp) Frontier delivery into
+        ``prog``'s execution; returns the absorbed delivery ids.
+
+        Without this, N source shards emitting to this shard in one hop
+        queue N separate executions of the SAME program step — the event
+        loop pays O(source shards) per hop per shard.  Merging
+        concatenates the packed frontiers into ONE ``frontier_step``
+        (O(1) executions per hop per shard) and charges the merged
+        service cost once; the absorbed deliveries still report to the
+        coordinator (empty, zero-entry reports) so termination counting
+        is unaffected.
+
+        Merging is legal only within one hop of one query: same prog_id,
+        same stamp, same depth and identical meta (programs may rewrite
+        meta between hops, e.g. ``block_render``), same payload
+        presence, and only for programs whose ``coalesce_ok`` asserts
+        step-concatenation invariance (see ``nodeprog.NodeProgram``).
+        The runnable check already passed for ``prog``; queue-clearing
+        state is shared per (shard, stamp), so every absorbed delivery
+        was runnable too."""
+        base = prog["entries"]
+        if not isinstance(base, Frontier):
+            return []
+        if not REGISTRY[prog["name"]].coalesce_ok:
+            return []
+        merged = [base]
+        extra: List = []
+        keep: List[dict] = []
+        for p in self.pending_progs:
+            e = p["entries"]
+            mergeable = (p["prog_id"] == prog["prog_id"]
+                         and p["name"] == prog["name"]
+                         and p["stamp"].key() == prog["stamp"].key()
+                         and isinstance(e, Frontier)
+                         and e.depth == base.depth
+                         and (e.vals is None) == (base.vals is None))
+            if mergeable:
+                try:
+                    mergeable = bool(e.meta == base.meta)
+                except (TypeError, ValueError):   # exotic meta: keep apart
+                    mergeable = False
+            if mergeable:
+                merged.append(e)
+                extra.append(p["delivery_id"])
+            else:
+                keep.append(p)
+        if extra:
+            self.pending_progs = keep
+            prog["entries"] = _merge_frontiers(merged)
+            self.sim.counters.frontier_coalesced += len(extra)
+        return extra
 
     def _frontier_of(self, name: str, entries) -> Optional[Frontier]:
         """Batched-path decision per delivery: already-packed frontiers
@@ -411,7 +494,8 @@ class Shard:
         return prog.pack_root(entries, self.intern)
 
     def _exec_prog(self, prog_id: int, delivery_id, name: str, stamp: Stamp,
-                   entries, coordinator) -> float:
+                   entries, coordinator, extra_ids: Optional[List] = None
+                   ) -> float:
         prog = REGISTRY[name]
         states = self.prog_states.setdefault(prog_id, {})
         frontier = self._frontier_of(name, entries)
@@ -468,6 +552,13 @@ class Shard:
                       delivery_id, children, outputs,
                       frontier is not None, n_entries,
                       nbytes=64 + 32 * len(outputs))
+        # deliveries absorbed by coalescing: their entries/outputs/children
+        # were charged to the merged execution above; they still must
+        # report so the coordinator's delivery-id sets close (zero-entry,
+        # non-batched reports: counters see ONE execution)
+        for did in (extra_ids or ()):
+            self.sim.send(self, coordinator, coordinator.report, prog_id,
+                          did, [], [], False, 0, nbytes=32)
         return service
 
     def _route(self, fr: Frontier) -> Dict[int, tuple]:

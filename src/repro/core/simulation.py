@@ -66,9 +66,14 @@ class Counters:
     lock_aborts: int = 0           # 2PL deadlock aborts
     barriers: int = 0              # BSP baseline
     shard_hops: int = 0
-    frontier_batches: int = 0      # batched node-program deliveries
+    frontier_batches: int = 0      # batched node-program EXECUTIONS
     scalar_deliveries: int = 0     # per-vertex node-program deliveries
     prog_entries_delivered: int = 0  # total (vertex, params) entries
+    frontier_coalesced: int = 0    # same-(prog, stamp) deliveries merged
+    #                                into another delivery's execution
+    plan_cold_builds: int = 0      # ShardPlan built from scratch
+    plan_delta_refreshes: int = 0  # ShardPlan patched in place
+    plan_rows_refreshed: int = 0   # rows re-evaluated by delta refreshes
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)

@@ -113,6 +113,8 @@ class WeaverConfig:
     tau_nop: float = 0.5e-3      # NOP period (§4.1)
     gc_period: float = 50e-3     # distributed GC cadence (§4.5)
     frontier_progs: bool = True  # batched node-program execution path
+    frontier_plan_delta: bool = True  # delta-refresh ShardPlans on writes
+    frontier_coalesce: bool = True    # merge same-(prog, stamp) deliveries
     seed: int = 0
     cost: CostModel = field(default_factory=CostModel)
     network: NetworkModel = field(default_factory=NetworkModel)
@@ -136,7 +138,9 @@ class Weaver:
         self.shards: List[Shard] = [
             Shard(self.sim, s, cfg.n_gatekeepers, self.oracle, cfg.cost,
                   self.store.shard_of, intern=self.intern,
-                  use_frontier=cfg.frontier_progs)
+                  use_frontier=cfg.frontier_progs,
+                  plan_delta=cfg.frontier_plan_delta,
+                  coalesce=cfg.frontier_coalesce)
             for s in range(cfg.n_shards)
         ]
         for gk in self.gatekeepers:
@@ -272,7 +276,9 @@ class Weaver:
             old.stop()
             nu = Shard(self.sim, sid, self.cfg.n_gatekeepers, self.oracle,
                        self.cfg.cost, self.store.shard_of, intern=self.intern,
-                       use_frontier=self.cfg.frontier_progs)
+                       use_frontier=self.cfg.frontier_progs,
+                       plan_delta=self.cfg.frontier_plan_delta,
+                       coalesce=self.cfg.frontier_coalesce)
             nu.recover_from(self.store.recover_shard(sid))
             self.shards[sid] = nu
             for sh in self.shards:

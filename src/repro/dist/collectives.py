@@ -1,11 +1,26 @@
 """Explicit shard_map collectives (MoE all-to-all, hierarchical grad
 sync, cross-pod allreduce).
 
-Only the single-device-correct entry points are provided here; the
-multi-device shard_map bodies are gated until the distributed runtime
-lands (tracked in ROADMAP "Open items").  Callers already guard on
-``dist.get_mesh() is not None`` plus config flags, so the default smoke
-and tier-1 paths never reach the gated branches.
+Overflow semantics of the MoE all-to-all (parity with the jit-level
+scatter path)
+-------------------------------------------------------------------
+The jit-level scatter path (``models/moe.moe_block``) drops (token,
+slot) pairs per **global expert** once the expert's capacity ``C`` is
+full, in global flattened ``(T, k)`` order.  The all-to-all dispatch
+only sees device-local tokens, so a naive local capacity check drops a
+*different* set of pairs under overflow.  ``moe_alltoall_block`` now
+reproduces the scatter semantics exactly (``overflow="global"``, the
+default): each device computes its tokens' **global** position inside
+their expert with one extra all-gather of the per-expert local counts
+(an ``(n_devices, E)`` int32 exchange — negligible next to the
+activation all-to-alls) and applies the same ``pos < capacity`` cut.
+The wire buffer ``c_dev`` is then clamped to the static bound
+``min(t_loc*k, e_loc*capacity)`` so no kept pair can secondarily
+overflow a (source device, destination shard) slab.  The legacy
+per-(source device, destination shard) drop rule survives behind
+``overflow="local"`` for callers that prefer a smaller wire buffer over
+drop parity; any other value, or ``overflow="global"`` without a
+``capacity``, is an explicit config error raised at trace time.
 """
 
 from __future__ import annotations
@@ -13,13 +28,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-_GATE_MSG = ("repro.dist.collectives.{name} requires the multi-device "
-             "shard_map runtime, which is not wired up in this build; "
-             "run with the jit-level variant (default config) instead")
-
 
 def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
-                      c_dev, local_capacity_factor=2.0):
+                      c_dev, local_capacity_factor=2.0, capacity=None,
+                      overflow="global"):
     """Expert-parallel MoE dispatch via explicit all-to-all.
 
     Tokens are sharded over (dp axes, 'model'); the expert axis of the
@@ -30,10 +42,13 @@ def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
     buffers with ONE all_to_all each way, and combines locally with its
     own router weights — so only token activations cross the wire.
 
-    Capacity semantics: drops are per (source device, destination shard)
-    at ``max(c_dev, ceil(t_loc*k*local_capacity_factor/n_model))``, vs
-    the scatter path's per-global-expert capacity; with ample capacity
-    (no drops) both paths agree elementwise.
+    Capacity semantics (see module docstring): ``overflow="global"``
+    (default) drops per global expert at ``capacity`` exactly like the
+    scatter path — elementwise-equal outputs in and out of the overflow
+    regime; ``overflow="local"`` keeps the legacy per-(source device,
+    destination shard) drop at ``max(c_dev, ceil(t_loc*k*
+    local_capacity_factor/n_model))``, which agrees with the scatter
+    path only when capacity is ample.
     """
     import math
 
@@ -51,9 +66,26 @@ def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
     n_dp = int(math.prod(int(mesh.shape[a]) for a in dp_names)) \
         if dp_names else 1
     t_loc = int(xf.shape[0]) // (n_dp * n_model)
-    c_dev = max(int(c_dev),
-                math.ceil(t_loc * int(top_k)
-                          * float(local_capacity_factor) / n_model))
+    if overflow == "global":
+        if capacity is None:
+            raise ValueError(
+                "moe_alltoall_block(overflow='global') needs the global "
+                "per-expert `capacity` used by the scatter path; pass it, "
+                "or opt into the divergent overflow='local' semantics")
+        # every kept pair must fit its (source device, dest shard) slab:
+        # a device keeps at most min(its local pairs, e_loc*capacity)
+        # pairs for one destination shard — a STATIC bound, so parity
+        # needs no runtime assertion
+        c_dev = max(int(c_dev),
+                    min(t_loc * int(top_k), e_loc * int(capacity)))
+    elif overflow == "local":
+        c_dev = max(int(c_dev),
+                    math.ceil(t_loc * int(top_k)
+                              * float(local_capacity_factor) / n_model))
+    else:
+        raise ValueError(f"unknown overflow mode {overflow!r} "
+                         "(expected 'global' or 'local')")
+    n_tok_dev = n_dp * n_model
 
     def body(xf_l, logits_l, wg, wu, wd):
         t_loc, d = xf_l.shape
@@ -65,13 +97,44 @@ def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
         flat_e = idx.reshape(-1)                        # (N = t_loc*k,)
         n = flat_e.shape[0]
         dest = flat_e // e_loc
-        order = jnp.argsort(dest)
-        dest_sorted = dest[order]
-        starts = jnp.searchsorted(
-            dest_sorted, jnp.arange(n_model, dtype=dest_sorted.dtype))
-        pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[dest_sorted]
-        pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
-        keep = pos < c_dev
+        # local position of each pair inside its expert (stable sort:
+        # ties keep local flattened (token, slot) order)
+        order_e = jnp.argsort(flat_e)
+        e_sorted = flat_e[order_e]
+        starts_e = jnp.searchsorted(
+            e_sorted, jnp.arange(e, dtype=e_sorted.dtype))
+        pos_e_sorted = jnp.arange(n, dtype=jnp.int32) - starts_e[e_sorted]
+        pos_e = jnp.zeros((n,), jnp.int32).at[order_e].set(pos_e_sorted)
+
+        if overflow == "global":
+            # exclusive prefix of per-expert counts over all devices in
+            # global token order: device rank = row-major index over the
+            # token sharding axes, matching the (dp..., model) layout of
+            # the global token array
+            counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+            all_counts = jax.lax.all_gather(counts, tok_axes)
+            all_counts = all_counts.reshape(n_tok_dev, e)
+            my = jnp.int32(0)
+            for a in tok_axes:
+                my = my * int(mesh.shape[a]) + jax.lax.axis_index(a)
+            mask = (jnp.arange(n_tok_dev, dtype=jnp.int32)
+                    < my)[:, None].astype(jnp.int32)
+            prefix = jnp.sum(all_counts * mask, axis=0)   # (e,)
+            keep = prefix[flat_e] + pos_e < capacity      # == scatter path
+        else:
+            keep = jnp.ones((n,), bool)                   # cut per-dest below
+
+        # position among the KEPT pairs of each destination shard
+        d2 = jnp.where(keep, dest, n_model)               # dropped -> tail
+        order_d = jnp.argsort(d2)
+        d2s = d2[order_d]
+        starts_d = jnp.searchsorted(
+            d2s, jnp.arange(n_model, dtype=d2s.dtype))
+        pos_d_sorted = (jnp.arange(n, dtype=jnp.int32)
+                        - starts_d[jnp.minimum(d2s, n_model - 1)])
+        pos = jnp.zeros((n,), jnp.int32).at[order_d].set(pos_d_sorted)
+        if overflow == "local":
+            keep = pos < c_dev
         pos_c = jnp.where(keep, pos, c_dev)             # overflow slot
         token_of = jnp.repeat(jnp.arange(t_loc, dtype=jnp.int32), k)
 
@@ -110,13 +173,26 @@ def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
         xf, logits, w_gate, w_up, w_down)
 
 
+def _pod_mean(x32, compress: bool):
+    """fp32 mean over the 'pod' axis, optionally int8-compressed for the
+    slow DCN link — the shared cross-pod hop of ``grad_sync`` and
+    ``cross_pod_allreduce``."""
+    if compress:
+        from repro.optim.compress import dequantize_int8, quantize_int8
+        q, s = quantize_int8(x32)
+        return jax.lax.pmean(dequantize_int8(q, s), "pod")
+    return jax.lax.pmean(x32, "pod")
+
+
 def grad_sync(mesh, grads, int8_cross_pod: bool = False):
     """Hierarchical gradient mean over the data-parallel axes.
 
     In-pod (``data``) reduction runs in fp32; the cross-pod hop (the slow
     DCN link) optionally quantizes its summand to int8 with per-tensor
-    scales (``optim.compress``) before reducing.  Tensor-parallel
-    (``model``) gradients are already replicated and untouched.
+    scales (``optim.compress``) before reducing — via the same
+    :func:`_pod_mean` body that backs :func:`cross_pod_allreduce`.
+    Tensor-parallel (``model``) gradients are already replicated and
+    untouched.
     """
     if mesh is None or all(int(s) == 1 for s in mesh.shape.values()):
         return grads
@@ -136,13 +212,7 @@ def grad_sync(mesh, grads, int8_cross_pod: bool = False):
             if in_pod:
                 x32 = jax.lax.pmean(x32, in_pod)
             if "pod" in dp:
-                if int8_cross_pod:
-                    from repro.optim.compress import (dequantize_int8,
-                                                      quantize_int8)
-                    q, s = quantize_int8(x32)
-                    x32 = jax.lax.pmean(dequantize_int8(q, s), "pod")
-                else:
-                    x32 = jax.lax.pmean(x32, "pod")
+                x32 = _pod_mean(x32, int8_cross_pod)
             return x32.astype(x.dtype)
 
         return jax.tree_util.tree_map(one, g)
@@ -150,9 +220,27 @@ def grad_sync(mesh, grads, int8_cross_pod: bool = False):
     return shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=P())(grads)
 
 
-def cross_pod_allreduce(mesh, x, compress: bool = False):
-    """Mean-allreduce over the 'pod' axis (gated off single-device)."""
+def cross_pod_allreduce(mesh, x, compress: bool = False, in_spec=None):
+    """Mean-allreduce of one tensor over the 'pod' axis.
+
+    The standalone form of ``grad_sync``'s cross-pod hop (same
+    :func:`_pod_mean` body, so the two cannot drift): use it to average
+    metrics, EMA shadows, or other per-pod state that does not ride the
+    gradient pytree.  ``in_spec`` is the tensor's PartitionSpec (default
+    replicated); the output keeps the same spec, with the value averaged
+    across pods.  Identity on meshes without a 'pod' axis (or pod=1).
+    """
     if mesh is None or "pod" not in mesh.axis_names \
             or int(mesh.shape["pod"]) == 1:
         return x
-    raise NotImplementedError(_GATE_MSG.format(name="cross_pod_allreduce"))
+    from jax.sharding import PartitionSpec as P
+
+    from . import shard_map
+
+    spec = in_spec if in_spec is not None else P()
+
+    def body(xl):
+        return _pod_mean(xl.astype(jnp.float32), compress).astype(x.dtype)
+
+    return shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                     check_vma=False)(x)

@@ -55,6 +55,13 @@ class MoEConfig:
     # "scatter": jit-level capacity dispatch (baseline);
     # "a2a": shard_map expert-parallel all-to-all (§Perf variant)
     moe_impl: str = "scatter"
+    # a2a overflow semantics: "global" matches the scatter path's
+    # per-global-expert drops exactly (wire buffer clamped to the
+    # no-secondary-drop bound — up to ~n_model/local_capacity_factor
+    # larger all-to-alls); "local" keeps the smaller per-(source
+    # device, dest shard) buffer but diverges from scatter under
+    # overflow.  See repro.dist.collectives.moe_alltoall_block.
+    a2a_overflow: str = "global"
 
 
 def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16) -> Param:
@@ -191,9 +198,13 @@ def _moe_a2a(p: Param, x: jnp.ndarray, cfg: MoEConfig, mesh
     t_loc = t // (dp * n_model)
     c_dev = max(8, int(-(-t_loc * cfg.top_k * cfg.capacity_factor
                          // n_model) // 8 * 8 + 8))
+    # global per-expert capacity == the scatter path's, so the two
+    # implementations drop the SAME (token, slot) pairs under overflow
+    # (cfg.a2a_overflow="local" opts back into the smaller wire buffer)
     y = collectives.moe_alltoall_block(
         xf, logits, p["w_gate"], p["w_up"], p["w_down"], mesh,
-        cfg.top_k, c_dev,
+        cfg.top_k, c_dev, capacity=capacity(t, cfg),
+        overflow=cfg.a2a_overflow,
         local_capacity_factor=max(2.0, cfg.capacity_factor))
     if "shared" in p:
         y = y + mlp_block(p["shared"], xf)

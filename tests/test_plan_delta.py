@@ -1,0 +1,449 @@
+"""Frontier plans under write traffic: ShardPlan delta refresh must be
+indistinguishable from a cold rebuild (randomized churn incl. GC and
+compaction), programs must survive transactions committing BETWEEN hops
+(snapshot isolation + delta plans, never cold rebuilds on the happy
+path), same-(prog, stamp) deliveries must coalesce at the shard, and a
+plan cache lagging the bounded compaction-event history must fall back
+cold — including invalidating *settled* plans.  Seeded-random, tier-1."""
+
+import numpy as np
+import pytest
+
+from repro.core import Weaver, WeaverConfig
+from repro.core import analytics as A
+from repro.core import frontier as F
+from repro.core.analytics import SnapshotEngine
+from repro.core.clock import Stamp
+from repro.core.mvgraph import MVGraphPartition
+
+
+class _Stamps:
+    """Totally-ordered synthetic stamps (round-robin gatekeepers)."""
+
+    def __init__(self, n_gk):
+        self.n_gk = n_gk
+        self.clock = [0] * n_gk
+        self.i = 0
+
+    def next(self):
+        g = self.i % self.n_gk
+        self.i += 1
+        self.clock[g] += 1
+        return Stamp(0, tuple(self.clock), g, self.clock[g])
+
+    def query(self):
+        g = self.i % self.n_gk
+        self.i += 1
+        self.clock = [c + 1 for c in self.clock]
+        return Stamp(0, tuple(self.clock), g, self.clock[g])
+
+
+def make_weaver(seed=0, n_shards=3, **kw):
+    return Weaver(WeaverConfig(n_gatekeepers=2, n_shards=n_shards,
+                               gc_period=0, seed=seed, **kw))
+
+
+def mutate_partition(rng, p, sg, live, edges, round_i):
+    """One churn round against a single MVGraphPartition."""
+    for _ in range(int(rng.integers(5, 25))):
+        op = rng.integers(0, 100)
+        if op < 25 or not live:
+            vid = f"v{round_i}_{rng.integers(0, 1 << 30)}"
+            if vid in live:
+                continue
+            p.create_vertex(vid, sg.next())
+            live.append(vid)
+        elif op < 55:
+            s, d = str(rng.choice(live)), str(rng.choice(live))
+            e = p.create_edge(s, d, sg.next())
+            edges.append((s, e.eid))
+            if rng.random() < 0.5:
+                p.set_edge_prop(s, e.eid, "weight",
+                                float(rng.integers(1, 5)), sg.next())
+            if rng.random() < 0.3:
+                p.set_edge_prop(s, e.eid, "rel",
+                                str(rng.choice(["F", "G"])), sg.next())
+        elif op < 70 and edges:
+            s, eid = edges[int(rng.integers(0, len(edges)))]
+            if s not in live:
+                continue
+            e = p.vertices[s].out_edges.get(eid)
+            if e is not None and e.delete_ts is None:
+                p.delete_edge(s, eid, sg.next())
+        elif op < 82 and live:
+            vid = str(rng.choice(live))
+            p.set_vertex_prop(vid, "value", int(rng.integers(0, 9)),
+                              sg.next())
+        elif len(live) > 2:
+            vid = str(rng.choice(live))
+            p.delete_vertex(vid, sg.next())
+            live.remove(vid)
+
+
+class TestPlanRefreshEqualsCold:
+    """ShardPlan.refresh == fresh ShardPlan at the same stamp, for every
+    derived structure, under randomized churn + GC + compaction and
+    advancing stamps."""
+
+    def _assert_equal(self, warm, cold, tag):
+        assert np.array_equal(warm.v_visible, cold.v_visible), tag
+        assert np.array_equal(warm.e_vis, cold.e_vis), tag
+        assert np.array_equal(warm.e_keep, cold.e_keep), tag
+        # CSR: same (src, dst, slot) multiset, src-sorted (parallel-edge
+        # order within equal (src, dst) is unspecified)
+        tw = sorted(zip(warm.esrc.tolist(), warm.edst.tolist(),
+                        warm.eslot.tolist()))
+        tc = sorted(zip(cold.esrc.tolist(), cold.edst.tolist(),
+                        cold.eslot.tolist()))
+        assert tw == tc, tag
+        if warm.esrc.size:
+            assert np.all(np.diff(warm.esrc) >= 0), tag
+        assert warm.settled == cold.settled, tag
+        for t in ("v", "e"):
+            assert np.array_equal(warm._p_before[t], cold._p_before[t]), tag
+        for table, key in (("e", "weight"), ("e", "rel"), ("v", "value")):
+            iw, nw = warm._prop_arrays(table, key)
+            ic, nc = cold._prop_arrays(table, key)
+            assert np.array_equal(iw, ic), (tag, table, key)
+            assert np.array_equal(np.isnan(nw), np.isnan(nc)), tag
+            assert np.array_equal(nw[~np.isnan(nw)], nc[~np.isnan(nc)]), tag
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_randomized_churn(self, seed):
+        rng = np.random.default_rng(seed)
+        p = MVGraphPartition(2)
+        sg = _Stamps(2)
+        live, edges = [], []
+        mutate_partition(rng, p, sg, live, edges, 0)
+        at = sg.query()
+        warm = F.ShardPlan(p.columns, at, 2)
+        # populate per-key caches so refreshes must delta-patch them
+        warm._prop_arrays("e", "weight")
+        warm._prop_arrays("v", "value")
+        compactions = 0
+        for r in range(1, 35):
+            mutate_partition(rng, p, sg, live, edges, r)
+            if r % 4 == 0:
+                p.collect(Stamp(0, tuple(sg.clock), -1, 0))
+            if r % 7 == 0 and p.columns.dead_fraction() > 0:
+                p.columns.compact()
+            if r % 3 == 0:
+                at = sg.query()      # advance the stamp sometimes
+            assert warm.refresh(at), (seed, r)
+            cold = F.ShardPlan(p.columns, at, 2)
+            cold._prop_arrays("e", "weight")
+            cold._prop_arrays("v", "value")
+            self._assert_equal(warm, cold, (seed, r))
+            compactions = p.columns.n_compactions
+        assert compactions > 0, "compaction path never exercised"
+
+    def test_refresh_refuses_backward_stamp(self):
+        p = MVGraphPartition(2)
+        sg = _Stamps(2)
+        p.create_vertex("a", sg.next())
+        s1 = sg.query()
+        s2 = sg.query()
+        plan = F.ShardPlan(p.columns, s2, 2)
+        assert not plan.refresh(s1)     # s1 ≺ s2: plans only move forward
+
+
+class TestInterleavedWrites:
+    """Transactions committing between program hops: results must be the
+    snapshot at T_prog (frontier == scalar == analytics), and plans must
+    delta-refresh, not cold-rebuild."""
+
+    def _seed_graph(self, w, sg, rng, n=60, m=260):
+        part = lambda v: w.shards[w.store.place(v)].partition
+        vids = [f"u{i}" for i in range(n)]
+        for v in vids:
+            part(v).create_vertex(v, sg.next())
+        eids = []
+        seen = set()
+        for _ in range(m):
+            a, b = rng.integers(0, n, 2)
+            if a == b or (a, b) in seen:
+                continue
+            seen.add((a, b))
+            e = part(vids[a]).create_edge(vids[a], vids[b], sg.next())
+            part(vids[a]).set_edge_prop(vids[a], e.eid, "weight",
+                                        float(1 + (e.eid % 4)), sg.next())
+            eids.append((vids[a], e.eid, vids[b]))
+        return vids, eids
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_on_hop_churn_frontier_scalar_analytics(self, seed):
+        rng = np.random.default_rng(seed)
+        w = make_weaver(seed, n_shards=4)
+        sg = _Stamps(2)
+        vids, eids = self._seed_graph(w, sg, rng)
+        part = lambda v: w.shards[w.store.place(v)].partition
+        at = sg.query()
+        place = lambda vid: w.store.place(vid)
+
+        def churn(hop):
+            """~1% of edges mutated between hops, stamps AFTER the query
+            stamp — invisible at T_prog by snapshot isolation."""
+            for _ in range(3):
+                s, eid, _ = eids[int(rng.integers(0, len(eids)))]
+                e = part(s).vertices[s].out_edges.get(eid)
+                if e is not None and e.delete_ts is None:
+                    part(s).delete_edge(s, eid, sg.next())
+            for _ in range(3):
+                a, b = rng.integers(0, len(vids), 2)
+                if a != b:
+                    e = part(vids[a]).create_edge(vids[a], vids[b],
+                                                  sg.next())
+                    eids.append((vids[a], e.eid, vids[b]))
+                    part(vids[a]).set_edge_prop(
+                        vids[a], e.eid, "weight", 2.0, sg.next())
+
+        src, tgt = vids[0], vids[7]
+        # analytics reference BEFORE any churn (churn is invisible at
+        # `at`, so it must also match the post-churn runs)
+        ga = SnapshotEngine(w).snapshot(at)
+        lv = np.asarray(A.bfs_levels_ga(ga, [ga.index[src]]))
+        want = sorted(ga.vids[i] for i in np.nonzero(lv < A.INF)[0])
+
+        r_delta, st_delta = F.run_local(
+            w, "traverse", [(src, {"depth": 0})], at, use_frontier=True,
+            shard_of=place, on_hop=churn, plan_delta=True)
+        r_cold, st_cold = F.run_local(
+            w, "traverse", [(src, {"depth": 0})], at, use_frontier=True,
+            shard_of=place, on_hop=churn, plan_delta=False)
+        r_scalar, _ = F.run_local(
+            w, "traverse", [(src, {"depth": 0})], at, use_frontier=False,
+            shard_of=place)
+        assert r_delta == r_cold == r_scalar == want
+        # the patch-consumption counter proves refreshes were DELTA:
+        # at most one cold build per shard, the rest consumed patches
+        assert st_delta["plan_cold"] <= len(w.shards)
+        assert st_delta["plan_delta"] > 0
+        assert st_delta["plan_rows"] > 0
+        # the forced-cold baseline rebuilt beyond the initial builds
+        assert st_cold["plan_cold"] > st_delta["plan_cold"]
+        assert st_cold["plan_delta"] == 0
+
+        # sssp through the same churn (prop columns delta-refreshed too)
+        q = [(src, {"target": tgt, "max_depth": 64})]
+        d_delta, st2 = F.run_local(w, "sssp", q, at, use_frontier=True,
+                                   shard_of=place, on_hop=churn)
+        d_scalar, _ = F.run_local(w, "sssp", q, at, use_frontier=False,
+                                  shard_of=place)
+        assert d_delta == d_scalar
+        assert st2["plan_delta"] > 0
+
+    @pytest.mark.parametrize("seed", [5])
+    def test_simulator_interleaved_schedule(self, seed):
+        """Randomized schedule of committed transactions between
+        programs through the full simulator.  During churn, each
+        deployment's result must equal the engine snapshot at the
+        program's OWN stamp (write stamps concurrent with T_prog are
+        refined per deployment, so frontier and scalar deployments may
+        legitimately serialize the same history differently — their
+        results are only directly comparable on a quiescent graph,
+        asserted at the end).  The shard plan caches must delta-refresh
+        across the write traffic (cold builds bounded by shard count)."""
+        rng = np.random.default_rng(seed)
+        cfgs = dict(n_gatekeepers=2, n_shards=4, seed=seed)
+        w_f = Weaver(WeaverConfig(frontier_progs=True, **cfgs))
+        w_s = Weaver(WeaverConfig(frontier_progs=False, **cfgs))
+        n = 50
+
+        def do_tx(build):
+            for w in (w_f, w_s):
+                tx = w.begin_tx()
+                build(tx)
+                assert w.run_tx(tx).ok
+
+        do_tx(lambda tx: [tx.create_vertex(f"u{i}") for i in range(n)])
+        seen = set()
+
+        def fresh_pairs(k=6):
+            """One precomputed batch, applied IDENTICALLY to both
+            deployments."""
+            out = []
+            for _ in range(k):
+                a, b = rng.integers(0, n, 2)
+                if a != b and (a, b) not in seen:
+                    seen.add((a, b))
+                    out.append((f"u{a}", f"u{b}"))
+            return out
+
+        def wr(tx):
+            for a, b in pairs:
+                tx.create_edge(a, b)
+
+        def reference(w, src, stamp):
+            ga = A.snapshot_arrays(w, stamp)
+            if src not in ga.index:
+                return [src] if any(
+                    src in sh.partition.vertices for sh in w.shards) \
+                    else []
+            lv = np.asarray(A.bfs_levels_ga(ga, [ga.index[src]]))
+            return sorted(ga.vids[i] for i in np.nonzero(lv < A.INF)[0])
+
+        pairs = fresh_pairs(20)
+        do_tx(wr)
+        for round_i in range(8):
+            seen_r = set(seen)
+            pairs = fresh_pairs()
+            do_tx(wr)
+            src = f"u{int(rng.integers(0, n))}"
+            for w in (w_f, w_s):
+                r, stamp, _ = w.run_program(
+                    "traverse", [(src, {"depth": 0})], timeout=60.0)
+                assert r == reference(w, src, stamp), (round_i, src)
+            assert seen_r != seen      # writes really interleaved
+        # quiescent graph: now the two deployments must agree exactly
+        for w in (w_f, w_s):
+            w.settle(50e-3)
+        r_f, _, _ = w_f.run_program("traverse", [("u0", {"depth": 0})],
+                                    timeout=60.0)
+        r_s, _, _ = w_s.run_program("traverse", [("u0", {"depth": 0})],
+                                    timeout=60.0)
+        assert r_f == r_s
+        c = w_f.counters()
+        assert c["plan_delta_refreshes"] > 0, "delta path never used"
+        # cold builds only on first contact per shard (plus rare
+        # stamp-regression rebuilds); far fewer than one per query
+        assert c["plan_cold_builds"] <= 2 * len(w_f.shards)
+
+
+class TestCoalescing:
+    """Same-(prog, stamp) frontier deliveries waiting at a shard merge
+    into ONE execution; results and termination are unchanged."""
+
+    def _social(self, w, n=120, m=900, seed=0):
+        rng = np.random.default_rng(seed)
+        tx = w.begin_tx()
+        for i in range(n):
+            tx.create_vertex(f"u{i}")
+        seen = set()
+        for _ in range(m):
+            a, b = rng.integers(0, n, 2)
+            if a != b and (a, b) not in seen:
+                seen.add((a, b))
+                tx.create_edge(f"u{a}", f"u{b}")
+        assert w.run_tx(tx).ok
+
+    def test_merged_executions_same_results(self):
+        cfgs = dict(n_gatekeepers=2, n_shards=6, seed=9)
+        w_on = Weaver(WeaverConfig(frontier_coalesce=True, **cfgs))
+        w_off = Weaver(WeaverConfig(frontier_coalesce=False, **cfgs))
+        w_s = Weaver(WeaverConfig(frontier_progs=False, **cfgs))
+        for w in (w_on, w_off, w_s):
+            self._social(w)
+        results = {}
+        for name, w in (("on", w_on), ("off", w_off), ("scalar", w_s)):
+            r, _, _ = w.run_program("traverse", [("u0", {"depth": 0})],
+                                    timeout=60.0)
+            results[name] = r
+        assert results["on"] == results["off"] == results["scalar"]
+        assert len(results["on"]) > 20
+        c_on, c_off = w_on.counters(), w_off.counters()
+        assert c_on["frontier_coalesced"] > 0
+        assert c_off["frontier_coalesced"] == 0
+        # frontier_batches counts EXECUTIONS: with many source shards
+        # per hop, coalescing collapses them to O(active shards) per hop
+        assert c_on["frontier_batches"] < c_off["frontier_batches"]
+
+    def test_sssp_coalesces_with_payload(self):
+        """Payload-carrying frontiers (sssp dists) merge too — the
+        segment-min inside the step folds the concatenated offers."""
+        cfgs = dict(n_gatekeepers=2, n_shards=6, seed=3)
+        w_on = Weaver(WeaverConfig(frontier_coalesce=True, **cfgs))
+        w_s = Weaver(WeaverConfig(frontier_progs=False, **cfgs))
+        for w in (w_on, w_s):
+            self._social(w, seed=4)
+        ent = [("u0", {"target": "u97", "max_depth": 64})]
+        r_on, _, _ = w_on.run_program("sssp", ent, timeout=60.0)
+        r_s, _, _ = w_s.run_program("sssp", ent, timeout=60.0)
+        assert r_on == r_s
+        assert w_on.counters()["frontier_coalesced"] > 0
+
+
+class TestCompactionLag:
+    """A plan cache lagging the bounded (8-event) CompactionEvent
+    history must rebuild cold — and never keep serving a stale settled
+    plan across stamps."""
+
+    def test_run_local_compacts_between_hops(self):
+        """>8 forced compactions between hops: the mid-query refresh
+        fails, the fallback rebuilds cold, results stay == scalar."""
+        rng = np.random.default_rng(2)
+        w = make_weaver(2, n_shards=3)
+        sg = _Stamps(2)
+        part = lambda v: w.shards[w.store.place(v)].partition
+        vids = [f"u{i}" for i in range(40)]
+        for v in vids:
+            part(v).create_vertex(v, sg.next())
+        for _ in range(180):
+            a, b = rng.integers(0, 40, 2)
+            if a != b:
+                part(vids[a]).create_edge(vids[a], vids[b], sg.next())
+        at = sg.query()
+        place = lambda vid: w.store.place(vid)
+
+        def compact_storm(hop):
+            # churn (stamps after `at`, invisible) + >8 compactions per
+            # shard: every plan's event cursor falls off the history
+            for _ in range(3):
+                a, b = rng.integers(0, 40, 2)
+                if a != b:
+                    part(vids[a]).create_edge(vids[a], vids[b], sg.next())
+            for sh in w.shards:
+                for _ in range(9):
+                    sh.partition.columns.compact()
+
+        r_f, st = F.run_local(w, "traverse", [(vids[0], {"depth": 0})],
+                              at, use_frontier=True, shard_of=place,
+                              on_hop=compact_storm)
+        r_s, _ = F.run_local(w, "traverse", [(vids[0], {"depth": 0})],
+                             at, use_frontier=False, shard_of=place)
+        assert r_f == r_s
+        assert st["hops"] > 1, "graph too small to span hops"
+        # the storm forced cold fallbacks beyond the initial builds
+        assert st["plan_cold"] > len(w.shards)
+
+    def test_settled_plan_invalidated_by_lagged_history(self):
+        """A SETTLED plan (reusable across stamps on a quiet shard) must
+        be discarded — not reused — when writes + >8 compactions race
+        past its cursor."""
+        w = make_weaver(1, n_shards=1)
+        sh = w.shards[0]
+        sg = _Stamps(2)
+        p = sh.partition
+        p.create_vertex("a", sg.next())
+        p.create_vertex("b", sg.next())
+        e = p.create_edge("a", "b", sg.next())
+        s1 = sg.query()
+        plan1 = sh._frontier_plan(s1)
+        assert plan1.settled
+        assert sh._frontier_plan(sg.query()) is plan1   # settled reuse
+        # a visible-at-later-stamps delete, then blow the event history
+        p.delete_edge("a", e.eid, sg.next())
+        for _ in range(9):
+            p.columns.compact()
+        assert p.columns.events_dropped > 0
+        s3 = sg.query()
+        plan3 = sh._frontier_plan(s3)
+        assert plan3 is not plan1, "stale settled plan reused"
+        # and the new plan sees the delete
+        gid = np.asarray([w.intern.ids["a"]], np.int64)
+        assert int(plan3.out_degree(gid)[0]) == 0
+        assert int(plan1.out_degree(np.asarray(
+            [w.intern.ids["a"]], np.int64))[0]) == 1   # the stale view
+        c = w.sim.counters
+        assert c.plan_cold_builds >= 2
+
+    def test_refresh_fails_cleanly_when_history_dropped(self):
+        p = MVGraphPartition(2)
+        sg = _Stamps(2)
+        p.create_vertex("x", sg.next())
+        at = sg.query()
+        plan = F.ShardPlan(p.columns, at, 2)
+        p.create_vertex("y", sg.next())
+        for _ in range(9):
+            p.columns.compact()
+        assert p.columns.events_dropped > 0
+        assert not plan.refresh(sg.query())
