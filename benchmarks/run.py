@@ -4,6 +4,7 @@ Prints ``name,metric,value`` CSV lines (simulated time; deterministic).
 
   snapshot       — snapshot materialization: columnar cold/delta vs seed
   nodeprog       — frontier-batched vs per-vertex node programs
+  writepath      — group-commit write engine vs per-tx commits
   block_query    — Fig. 7 / Table 2 (CoinGraph vs relational explorer)
   social         — Fig. 9 / Fig. 10 (TAO mix, Weaver vs 2PL)
   traversal      — Fig. 11 (node programs vs BSP sync/async)
@@ -17,9 +18,11 @@ silently skipped.
 
 ``--smoke`` (used by ``scripts/ci.sh``) sets ``REPRO_BENCH_SMOKE=1``
 (modules shrink their graph sizes / iteration counts) and runs only the
-snapshot + nodeprog modules — a minutes-scale end-to-end check that the
-data-plane benchmarks still build, run, and meet their equivalence
-bits.
+snapshot + nodeprog + writepath + coordination modules — a
+minutes-scale end-to-end check that the data-plane benchmarks still
+build, run, and meet their equivalence bits (coordination rides along
+so the tau sweep's aggressive-concurrency corner — the historical
+oracle ``CycleError`` — stays covered in CI).
 """
 
 from __future__ import annotations
@@ -36,15 +39,18 @@ def main(argv=None) -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     from . import (block_query, coordination, nodeprog, roofline,
-                   scalability, snapshot, social, traversal)
+                   scalability, snapshot, social, traversal, writepath)
 
     modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
+               ("writepath", writepath),
                ("block_query", block_query),
                ("social", social), ("traversal", traversal),
                ("scalability", scalability),
                ("coordination", coordination), ("roofline", roofline)]
     if smoke:
-        modules = [("snapshot", snapshot), ("nodeprog", nodeprog)]
+        modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
+                   ("writepath", writepath),
+                   ("coordination", coordination)]
     t00 = time.time()
     failures = []
     for name, mod in modules:

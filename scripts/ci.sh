@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 test suite, then the benchmark harness in smoke
-# mode.  Exits non-zero on ANY failure (pytest failure, benchmark
-# exception, or equivalence-bit regression — benchmarks/run.py already
-# exits 1 if any module raises).
+# mode (snapshot + nodeprog + writepath + coordination — the last one
+# covers the tau sweep's aggressive-concurrency corner, the historical
+# oracle CycleError).  Exits non-zero on ANY failure (pytest failure,
+# benchmark exception, or equivalence-bit regression — benchmarks/run.py
+# already exits 1 if any module raises).
 #
 # Usage: scripts/ci.sh            # from anywhere; cd's to the repo root
 # Deps:  requirements-dev.txt (pinned); jax/numpy come with the image.

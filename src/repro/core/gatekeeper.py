@@ -13,6 +13,24 @@ Responsibilities:
   queues are never empty (progress under light load);
 * forward node programs (stamped, unexecuted) to the shards owning their
   start vertices.
+
+Group commit (``WeaverConfig.write_group_commit > 0``)
+------------------------------------------------------
+Transactions arriving within one admission window (``group_window``
+seconds, capped at ``group_max``) are stamped in ONE ``_serve`` round
+(each tx still gets its own fresh, unique ``(gk, ctr)`` stamp) and ship
+to the backing store as ONE batch: :meth:`Gatekeeper._at_store_batch`
+validates every write-set with one vectorized
+:class:`~repro.core.writepath.LastUpdateTable` compare, resolves the
+truly-concurrent residue with ONE batched oracle round trip, commits
+through :meth:`BackingStore.apply_batch` (one durability point), and
+forwards ONE packed :class:`~repro.core.writepath.WriteBatch` per
+destination shard per window.  The batch applies in stamp order, so
+same-vertex writers inside a window serialize by stamp while
+independent writers commit together; a transaction that must retry
+(stamped behind an executed write, or a refinement cycle) rejoins the
+NEXT window with a fresh stamp — semantics identical to the per-tx
+path, which remains the oracle (``write_group_commit = 0``).
 """
 
 from __future__ import annotations
@@ -24,6 +42,8 @@ from .clock import Order, Stamp, compare, merge
 from .oracle import KIND_TX, CycleError, OracleServer
 from .simulation import PeriodicTimer, Simulator
 from .store import BackingStore
+from .writepath import (OK, RETRY, WriteBatch, classify_write_sets,
+                        refine_commit)
 
 
 @dataclass
@@ -44,6 +64,14 @@ class CostModel:
     prog_plan_row: float = 0.01e-6     # frontier-plan (re)build, per column
                                        # row — one vectorized visibility +
                                        # sort pass, ~10ns/row amortized
+    gk_batch_tx: float = 2.0e-6        # per-tx CPU inside a group-commit
+                                       # flush: stamping is one vector-
+                                       # clock tick and validation/route
+                                       # run vectorized over the whole
+                                       # window, so the per-request parse/
+                                       # dispatch overhead (gk_stamp) is
+                                       # paid once per window instead of
+                                       # once per tx
     bsp_update: float = 3.0e-6         # GraphLab engine overhead per vertex
                                        # update (scheduler + state commit;
                                        # OSDI'12 reports ~0.1-0.3M
@@ -58,7 +86,8 @@ MAX_RETRIES = 16
 class Gatekeeper:
     def __init__(self, sim: Simulator, gid: int, n_gk: int,
                  store: BackingStore, oracle: OracleServer,
-                 cost: CostModel, tau: float, tau_nop: float):
+                 cost: CostModel, tau: float, tau_nop: float,
+                 group_window: float = 0.0, group_max: int = 64):
         self.sim = sim
         sim.register(self)
         self.gid = gid
@@ -78,6 +107,12 @@ class Gatekeeper:
         self.tau_nop = tau_nop
         self._timers: List[PeriodicTimer] = []
         self._busy_until = 0.0
+        # group-commit admission (0 = per-tx path)
+        self.group_window = group_window
+        self.group_max = max(1, group_max)
+        self._group: List[Tuple] = []       # (client, ops, reply, retries, t)
+        self._group_flush_pending = False
+        self._group_gen = 0                 # invalidates stale window timers
 
     # -- wiring ---------------------------------------------------------------
     def start(self, peers: List["Gatekeeper"], shards: List[object]) -> None:
@@ -97,6 +132,12 @@ class Gatekeeper:
         self.alive = False
         for t in self._timers:
             t.cancel()
+        # transactions admitted to a still-open group window die with
+        # the server, exactly like per-tx messages in flight to a dead
+        # gatekeeper: unreplied clients time out and resubmit to a
+        # backup (§4.3).  The window just widens that loss — up to
+        # group_max accepted-but-unflushed txs (ROADMAP follow-up).
+        self._group.clear()
 
     def _serve(self, service: float, fn, *args) -> None:
         """Serialize request handling: the gatekeeper is a single-threaded
@@ -159,6 +200,17 @@ class Gatekeeper:
         if t_submit is None:
             t_submit = self.sim.now
 
+        if self.group_window > 0:
+            # ---- group-commit admission: join the open window --------
+            self._group.append((client, ops, reply, retries, t_submit))
+            if len(self._group) >= self.group_max:
+                self._flush_group()
+            elif not self._group_flush_pending:
+                self._group_flush_pending = True
+                self.sim.schedule(self.group_window, self._flush_timer,
+                                  self._group_gen)
+            return
+
         def _go() -> None:
             stamp = self._tick()
             # one RPC to the backing store carrying the whole transaction
@@ -168,6 +220,42 @@ class Gatekeeper:
                           retries, t_submit, nbytes=nbytes)
 
         self._serve(self.cost.gk_stamp, _go)
+
+    def _flush_timer(self, gen: int) -> None:
+        """Window deadline.  A timer armed for a window that a
+        max-count trigger already flushed must NOT fire into the next
+        window (it would systematically shorten windows under load);
+        the generation check makes it a no-op."""
+        if gen == self._group_gen:
+            self._flush_group()
+
+    def _flush_group(self) -> None:
+        """Close the admission window: stamp every pending tx in ONE
+        serve round and ship the batch to the store as one message.
+
+        Serve cost is ``gk_stamp`` once (parse/dispatch, amortized) plus
+        ``gk_batch_tx`` per additional transaction; each tx still gets
+        its own fresh ``_tick()`` stamp inside the serve callback, so
+        stamp order == admission order == batch apply order."""
+        self._group_flush_pending = False
+        self._group_gen += 1
+        if not self.alive or not self._group:
+            return
+        batch, self._group = self._group, []
+        if self.paused:                 # re-buffer through the epoch barrier
+            for tx in batch:
+                self._pause_buffer.append((self.submit_tx, tx))
+            return
+
+        def _go() -> None:
+            stamped = [(client, ops, self._tick(), reply, retries, t_submit)
+                       for client, ops, reply, retries, t_submit in batch]
+            nbytes = 64 + sum(64 + 48 * len(t[1]) for t in stamped)
+            self.sim.send(self, self.store, self._at_store_batch, stamped,
+                          nbytes=nbytes)
+
+        self._serve(self.cost.gk_stamp
+                    + self.cost.gk_batch_tx * (len(batch) - 1), _go)
 
     def _at_store(self, client, ops, stamp, reply, retries, t_submit) -> None:
         """Runs at the backing store: validate last-update stamps, then
@@ -181,14 +269,8 @@ class Gatekeeper:
                 continue
             o = compare(upd, stamp)
             if o is Order.AFTER:           # T_tx ≺ T_upd -> retry, fresh stamp
-                cnt.tx_retried += 1
-                if retries + 1 > MAX_RETRIES:
-                    cnt.tx_aborted += 1
-                    self.sim.send(self.store, client, reply, False,
-                                  "too many retries", stamp, nbytes=64)
-                    return
-                self.sim.send(self.store, self, self._resubmit, client, ops,
-                              reply, retries + 1, t_submit, nbytes=64)
+                self._retry_or_abort((client, ops, stamp, reply, retries,
+                                      t_submit))
                 return
             if o is Order.CONCURRENT:      # T_upd ≈ T_tx -> refine via oracle
                 needs_refine.append(upd)
@@ -227,9 +309,10 @@ class Gatekeeper:
                         self.oracle.oracle.create_event(stamp)
                         self.oracle.oracle.assert_order(upd.key(), stamp.key())
                 except CycleError:
-                    cnt.tx_retried += 1
-                    self.sim.send(self.store, self, self._resubmit, client, ops,
-                                  reply, retries + 1, t_submit, nbytes=64)
+                    # same retry bound as the T_tx ≺ T_upd branch (and
+                    # as the group path)
+                    self._retry_or_abort((client, ops, stamp, reply,
+                                          retries, t_submit))
                     return
                 _commit()
             self.sim.schedule(self.cost.oracle_rtt + service, _refined)
@@ -238,6 +321,93 @@ class Gatekeeper:
 
     def _resubmit(self, client, ops, reply, retries, t_submit) -> None:
         self.submit_tx(client, ops, reply, retries, t_submit)
+
+    # -- group commit (§4.1/§4.4 batched; see module docstring) ---------------
+    def _at_store_batch(self, batch: List[Tuple]) -> None:
+        """Runs at the backing store: validate the whole window's
+        write-sets with one vectorized ``LastUpdateTable`` compare,
+        refine the truly-concurrent residue in ONE oracle round trip,
+        group-commit the survivors (one durability point), and forward
+        ONE packed ``WriteBatch`` per destination shard."""
+        cnt = self.sim.counters
+        cnt.tx_batches += 1
+        cnt.tx_batch_size_sum += len(batch)
+        stamps = [t[2] for t in batch]
+        write_sets = [BackingStore.write_set(t[1]) for t in batch]
+        verdicts, rows = classify_write_sets(self.store.last_updates,
+                                             write_sets, stamps)
+        cnt.conflict_rows_checked += rows
+        live: List[int] = []
+        pending_refine: List[Tuple[int, Stamp, List[Stamp]]] = []
+        for i, v in enumerate(verdicts):
+            if v.status == RETRY:      # T_tx ≺ T_upd: fresh stamp, next window
+                self._retry_or_abort(batch[i])
+            else:
+                live.append(i)
+                if v.concurrent:
+                    pending_refine.append((i, stamps[i], v.concurrent))
+
+        total_ops = sum(len(batch[i][1]) for i in live)
+        service = self.cost.store_op * max(1, total_ops)
+
+        def _commit(live_idx: List[int]) -> None:
+            results = self.store.apply_batch(
+                [(batch[i][1], stamps[i]) for i in live_idx])
+            by_shard: Dict[int, List[Tuple[Stamp, List[dict]]]] = {}
+            for i, (ok, err, fwd) in zip(live_idx, results):
+                client, ops, stamp, reply = batch[i][:4]
+                if not ok:             # logical error: this tx only
+                    cnt.tx_aborted += 1
+                    self.sim.send(self.store, client, reply, False, err,
+                                  stamp, nbytes=64)
+                    continue
+                cnt.tx_committed += 1
+                # reply after the group's durability point (§4.4 part 2)
+                self.sim.send(self.store, client, reply, True, None, stamp,
+                              nbytes=64)
+                per: Dict[int, List[dict]] = {}
+                for sid, op in fwd:
+                    per.setdefault(sid, []).append(op)
+                for sid, slice_ops in per.items():
+                    by_shard.setdefault(sid, []).append((stamp, slice_ops))
+            # ONE packed WriteBatch per destination shard per window,
+            # items in stamp order (= admission order)
+            for sid, items in by_shard.items():
+                self._seq[sid] += 1
+                shard = self.shards[sid]
+                wb = WriteBatch(items)
+                self.sim.send(self, shard, shard.enqueue, self.gid,
+                              self._seq[sid], wb.stamp, "txbatch", wb,
+                              nbytes=wb.nbytes())
+
+        if pending_refine:
+            # ONE batched oracle round trip for the whole residue
+            cnt.oracle_calls += 1
+
+            def _refined() -> None:
+                failed = set(refine_commit(self.oracle.oracle,
+                                           pending_refine))
+                for i in failed:         # cycle: retry with a fresh stamp
+                    self._retry_or_abort(batch[i])
+                _commit([i for i in live if i not in failed])
+
+            self.sim.schedule(self.cost.oracle_rtt + service, _refined)
+        else:
+            self.sim.schedule(service, _commit, live)
+
+    def _retry_or_abort(self, tx: Tuple) -> None:
+        """Shared retry bookkeeping (per-tx AND group paths): count the
+        retry, then resubmit with a fresh stamp or abort past the
+        bound."""
+        client, ops, stamp, reply, retries, t_submit = tx
+        self.sim.counters.tx_retried += 1
+        if retries + 1 > MAX_RETRIES:
+            self.sim.counters.tx_aborted += 1
+            self.sim.send(self.store, client, reply, False,
+                          "too many retries", stamp, nbytes=64)
+            return
+        self.sim.send(self.store, self, self._resubmit, client, ops,
+                      reply, retries + 1, t_submit, nbytes=64)
 
     # -- node programs (§4.2) ------------------------------------------------------
     def submit_program(self, coordinator, prog_name: str,

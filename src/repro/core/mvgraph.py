@@ -188,17 +188,28 @@ class _GrowRows:
         self.n = 0
         self.buf = np.empty((cap, c), np.int32)
 
-    def _grow(self) -> None:
-        nu = np.empty((max(2 * self.buf.shape[0], 64), self.c), np.int32)
-        nu[:self.n] = self.buf[:self.n]
-        self.buf = nu
+    def _reserve(self, k: int) -> None:
+        if self.n + k > self.buf.shape[0]:
+            nu = np.empty((max(2 * self.buf.shape[0], self.n + k, 64),
+                           self.c), np.int32)
+            nu[:self.n] = self.buf[:self.n]
+            self.buf = nu
 
     def append(self, row: np.ndarray) -> int:
-        if self.n == self.buf.shape[0]:
-            self._grow()
+        self._reserve(1)
         self.buf[self.n] = row
         self.n += 1
         return self.n - 1
+
+    def extend(self, rows: np.ndarray) -> int:
+        """Append a whole (K, C) block in one memcpy; returns the first
+        new row index (group-commit bulk apply)."""
+        k = rows.shape[0]
+        self._reserve(k)
+        self.buf[self.n:self.n + k] = rows
+        start = self.n
+        self.n += k
+        return start
 
     def set(self, i: int, row: np.ndarray) -> None:
         self.buf[i] = row
@@ -215,7 +226,9 @@ class _GrowRows:
 
 
 class _GrowInts:
-    """Growable (N,) int32 vector with amortized O(1) appends."""
+    """Growable (N,) int32 vector with amortized O(1) appends (the
+    reallocation policy is dtype-agnostic, so the float subclass only
+    overrides its buffer)."""
 
     __slots__ = ("n", "buf")
 
@@ -223,14 +236,28 @@ class _GrowInts:
         self.n = 0
         self.buf = np.empty((cap,), np.int32)
 
-    def append(self, x: int) -> int:
-        if self.n == self.buf.shape[0]:
-            nu = np.empty((max(2 * self.buf.shape[0], 64),), np.int32)
+    def _reserve(self, k: int) -> None:
+        if self.n + k > self.buf.shape[0]:
+            nu = np.empty((max(2 * self.buf.shape[0], self.n + k, 64),),
+                          self.buf.dtype)
             nu[:self.n] = self.buf[:self.n]
             self.buf = nu
+
+    def append(self, x) -> int:
+        self._reserve(1)
         self.buf[self.n] = x
         self.n += 1
         return self.n - 1
+
+    def extend(self, xs: np.ndarray) -> int:
+        """Append a (K,) block in one memcpy; returns the first new
+        index."""
+        k = xs.shape[0]
+        self._reserve(k)
+        self.buf[self.n:self.n + k] = xs
+        start = self.n
+        self.n += k
+        return start
 
     def view(self) -> np.ndarray:
         return self.buf[:self.n]
@@ -249,15 +276,6 @@ class _GrowFloats(_GrowInts):
         self.n = 0
         self.buf = np.empty((cap,), np.float64)
 
-    def append(self, x: float) -> int:
-        if self.n == self.buf.shape[0]:
-            nu = np.empty((max(2 * self.buf.shape[0], 64),), np.float64)
-            nu[:self.n] = self.buf[:self.n]
-            self.buf = nu
-        self.buf[self.n] = x
-        self.n += 1
-        return self.n - 1
-
 
 class _PropTable:
     """Append-only property-version columns for one owner table.
@@ -271,7 +289,15 @@ class _PropTable:
     :meth:`cursor` by :class:`~repro.core.frontier.ShardPlan` to keep
     its property views fresh at O(changed).  The log is cleared at
     compaction (rows renumber without a recorded map), so consumers
-    re-read the table after a :class:`CompactionEvent`."""
+    re-read the table after a :class:`CompactionEvent`.
+
+    Group-commit batch mode (:meth:`begin_batch` / :meth:`end_batch`):
+    appends between the two calls are buffered in Python lists (slot
+    numbering assigned eagerly, so same-batch purges still resolve) and
+    flushed as ONE column extend + ONE patch-log extend — a
+    :class:`WriteBatch` applies with one stamp-matrix append per table
+    instead of one per op.  Consumers never observe the open batch: the
+    shard applies a batch atomically within one simulator event."""
 
     def __init__(self, c: int) -> None:
         self.c = c
@@ -285,6 +311,7 @@ class _PropTable:
         self.ver: List[Optional["Versioned"]] = []   # backrefs for remap
         self.by_owner: Dict[int, List[int]] = {}
         self.patch: List[int] = []
+        self._batch: Optional[dict] = None     # open bulk-append buffer
 
     @property
     def n(self) -> int:
@@ -311,11 +338,20 @@ class _PropTable:
     def append(self, owner_slot: int, key_id: int, val_id: int,
                value, row: np.ndarray, ts: Stamp,
                ver: Optional["Versioned"] = None) -> int:
-        slot = self.owner.append(owner_slot)
-        self.key.append(key_id)
-        self.val.append(val_id)
-        self.num.append(self._as_num(value))
-        self.stamp.append(row)
+        b = self._batch
+        if b is None:
+            slot = self.owner.append(owner_slot)
+            self.key.append(key_id)
+            self.val.append(val_id)
+            self.num.append(self._as_num(value))
+            self.stamp.append(row)
+        else:
+            slot = b["base"] + len(b["owner"])
+            b["owner"].append(owner_slot)
+            b["key"].append(key_id)
+            b["val"].append(val_id)
+            b["num"].append(self._as_num(value))
+            b["stamp"].append(row)
         self.stamp_obj.append(ts)
         self.ver.append(ver)
         self.by_owner.setdefault(owner_slot, []).append(slot)
@@ -324,10 +360,32 @@ class _PropTable:
     def purge(self, slot: int) -> None:
         if slot < 0:
             return
-        self.stamp.set(slot, self._no_row)
+        b = self._batch
+        if b is not None and slot >= b["base"]:   # row still buffered
+            b["stamp"][slot - b["base"]] = self._no_row
+        else:
+            self.stamp.set(slot, self._no_row)
         self.stamp_obj[slot] = None
         self.ver[slot] = None
-        self.patch.append(slot)
+        (self.patch if b is None else b["patch"]).append(slot)
+
+    # ---- group-commit bulk append (see class docstring) ------------------
+    def begin_batch(self) -> None:
+        assert self._batch is None, "nested property batch"
+        self._batch = {"base": self.n, "owner": [], "key": [], "val": [],
+                       "num": [], "stamp": [], "patch": []}
+
+    def end_batch(self) -> None:
+        b = self._batch
+        self._batch = None
+        if b["owner"]:
+            self.owner.extend(np.asarray(b["owner"], np.int32))
+            self.key.extend(np.asarray(b["key"], np.int32))
+            self.val.extend(np.asarray(b["val"], np.int32))
+            self.num.extend(np.asarray(b["num"], np.float64))
+            self.stamp.extend(np.stack(b["stamp"]))
+        if b["patch"]:
+            self.patch.extend(b["patch"])
 
     def purge_owner(self, owner_slot: int) -> int:
         """Purge every version row of one owner (re-create / owner GC)."""
@@ -444,6 +502,8 @@ class PartitionColumns:
         self.events: List[CompactionEvent] = []
         self.events_dropped = 0
         self.n_compactions = 0
+        # open group-commit buffer (see begin_batch)
+        self._batch: Optional[dict] = None
 
     @property
     def n_v(self) -> int:
@@ -463,23 +523,90 @@ class PartitionColumns:
         return [self.n_v, self.n_e, len(self.v_patch), len(self.e_patch),
                 self.events_dropped + len(self.events)]
 
+    # ---- group-commit bulk apply -----------------------------------------
+    # Between begin_batch and end_batch, new-slot appends buffer in
+    # Python lists (slots numbered eagerly so same-batch deletes/purges
+    # resolve against the buffer) and in-place patch-log entries buffer
+    # too; end_batch flushes ONE matrix extend per column and ONE
+    # patch-log extend per table — a whole WriteBatch costs one append
+    # instead of one per op.  Consumers never see the open buffer: the
+    # shard applies a batch atomically within one simulator event.
+
+    def begin_batch(self) -> None:
+        assert self._batch is None, "nested column batch"
+        self._batch = {
+            "v_base": self.n_v, "e_base": self.n_e,
+            "v_gid": [], "v_create": [], "v_delete": [],
+            "e_src": [], "e_dst": [], "e_create": [], "e_delete": [],
+            "v_patch": [], "e_patch": [],
+        }
+        self.v_props.begin_batch()
+        self.e_props.begin_batch()
+
+    def end_batch(self) -> None:
+        b = self._batch
+        self._batch = None
+        if b["v_gid"]:
+            self.v_gid.extend(np.asarray(b["v_gid"], np.int32))
+            self.v_create.extend(np.stack(b["v_create"]))
+            self.v_delete.extend(np.stack(b["v_delete"]))
+        if b["e_src"]:
+            self.e_src.extend(np.asarray(b["e_src"], np.int32))
+            self.e_dst.extend(np.asarray(b["e_dst"], np.int32))
+            self.e_create.extend(np.stack(b["e_create"]))
+            self.e_delete.extend(np.stack(b["e_delete"]))
+        if b["v_patch"]:
+            self.v_patch.extend(b["v_patch"])
+        if b["e_patch"]:
+            self.e_patch.extend(b["e_patch"])
+        self.v_props.end_batch()
+        self.e_props.end_batch()
+        self.version += 1
+
+    def _set_row(self, mat: _GrowRows, pend_key: str, base_key: str,
+                 slot: int, row: np.ndarray) -> None:
+        """In-place stamp write that lands in the batch buffer when the
+        slot is still buffered."""
+        b = self._batch
+        if b is not None and slot >= b[base_key]:
+            b[pend_key][slot - b[base_key]] = row
+        else:
+            mat.set(slot, row)
+
+    def _log_patch(self, patch_key: str, slot: int) -> None:
+        b = self._batch
+        if b is not None:
+            b[patch_key].append(slot)
+        elif patch_key == "v_patch":
+            self.v_patch.append(slot)
+        else:
+            self.e_patch.append(slot)
+
     # ---- vertex events ---------------------------------------------------
     def vertex_created(self, vid: str, ts: Stamp) -> None:
         gid = self.intern.intern(vid)
         slot = self.v_slot.get(gid)
         row = pack(ts, self.n_gk)
+        b = self._batch
         if slot is None:
-            self.v_slot[gid] = self.v_gid.append(gid)
-            self.v_create.append(row)
-            self.v_delete.append(self._no_row)
+            if b is None:
+                self.v_slot[gid] = self.v_gid.append(gid)
+                self.v_create.append(row)
+                self.v_delete.append(self._no_row)
+            else:
+                self.v_slot[gid] = b["v_base"] + len(b["v_gid"])
+                b["v_gid"].append(gid)
+                b["v_create"].append(row)
+                b["v_delete"].append(self._no_row)
             self.v_create_stamp.append(ts)
             self.v_delete_stamp.append(None)
         else:  # re-create after delete (slot reuse keeps ordering stable)
-            self.v_create.set(slot, row)
-            self.v_delete.set(slot, self._no_row)
+            self._set_row(self.v_create, "v_create", "v_base", slot, row)
+            self._set_row(self.v_delete, "v_delete", "v_base", slot,
+                          self._no_row)
             self.v_create_stamp[slot] = ts
             self.v_delete_stamp[slot] = None
-            self.v_patch.append(slot)
+            self._log_patch("v_patch", slot)
             # the dict path replaces the MVVertex, dropping its property
             # history — mirror that (old versions must not resurface)
             self.v_props.purge_owner(slot)
@@ -487,19 +614,22 @@ class PartitionColumns:
 
     def vertex_deleted(self, vid: str, ts: Stamp) -> None:
         slot = self.v_slot[self.intern.intern(vid)]
-        self.v_delete.set(slot, pack(ts, self.n_gk))
+        self._set_row(self.v_delete, "v_delete", "v_base", slot,
+                      pack(ts, self.n_gk))
         self.v_delete_stamp[slot] = ts
-        self.v_patch.append(slot)
+        self._log_patch("v_patch", slot)
         self.version += 1
 
     def vertex_purged(self, vid: str) -> None:
         """GC: the slot can never be visible again (all-NO_STAMP rows)."""
         slot = self.v_slot[self.intern.intern(vid)]
-        self.v_create.set(slot, self._no_row)
-        self.v_delete.set(slot, self._no_row)
+        self._set_row(self.v_create, "v_create", "v_base", slot,
+                      self._no_row)
+        self._set_row(self.v_delete, "v_delete", "v_base", slot,
+                      self._no_row)
         self.v_create_stamp[slot] = None
         self.v_delete_stamp[slot] = None
-        self.v_patch.append(slot)
+        self._log_patch("v_patch", slot)
         self.v_props.purge_owner(slot)
         self.version += 1
 
@@ -510,36 +640,48 @@ class PartitionColumns:
         key = (sg, eid)
         slot = self.e_slot.get(key)
         row = pack(ts, self.n_gk)
+        b = self._batch
         if slot is None:
-            self.e_slot[key] = self.e_src.append(sg)
-            self.e_dst.append(dg)
-            self.e_create.append(row)
-            self.e_delete.append(self._no_row)
+            if b is None:
+                self.e_slot[key] = self.e_src.append(sg)
+                self.e_dst.append(dg)
+                self.e_create.append(row)
+                self.e_delete.append(self._no_row)
+            else:
+                self.e_slot[key] = b["e_base"] + len(b["e_src"])
+                b["e_src"].append(sg)
+                b["e_dst"].append(dg)
+                b["e_create"].append(row)
+                b["e_delete"].append(self._no_row)
             self.e_create_stamp.append(ts)
             self.e_delete_stamp.append(None)
         else:
-            self.e_create.set(slot, row)
-            self.e_delete.set(slot, self._no_row)
+            self._set_row(self.e_create, "e_create", "e_base", slot, row)
+            self._set_row(self.e_delete, "e_delete", "e_base", slot,
+                          self._no_row)
             self.e_create_stamp[slot] = ts
             self.e_delete_stamp[slot] = None
-            self.e_patch.append(slot)
+            self._log_patch("e_patch", slot)
             self.e_props.purge_owner(slot)   # dict path drops old versions
         self.version += 1
 
     def edge_deleted(self, src: str, eid: int, ts: Stamp) -> None:
         slot = self.e_slot[(self.intern.intern(src), eid)]
-        self.e_delete.set(slot, pack(ts, self.n_gk))
+        self._set_row(self.e_delete, "e_delete", "e_base", slot,
+                      pack(ts, self.n_gk))
         self.e_delete_stamp[slot] = ts
-        self.e_patch.append(slot)
+        self._log_patch("e_patch", slot)
         self.version += 1
 
     def edge_purged(self, src: str, eid: int) -> None:
         slot = self.e_slot[(self.intern.intern(src), eid)]
-        self.e_create.set(slot, self._no_row)
-        self.e_delete.set(slot, self._no_row)
+        self._set_row(self.e_create, "e_create", "e_base", slot,
+                      self._no_row)
+        self._set_row(self.e_delete, "e_delete", "e_base", slot,
+                      self._no_row)
         self.e_create_stamp[slot] = None
         self.e_delete_stamp[slot] = None
-        self.e_patch.append(slot)
+        self._log_patch("e_patch", slot)
         self.e_props.purge_owner(slot)
         self.version += 1
 
@@ -593,6 +735,7 @@ class PartitionColumns:
         Row order is preserved, so snapshot compaction ordering is
         unaffected; the old→new maps plus the pre-compaction patch logs
         are appended to ``events`` for cache remapping."""
+        assert self._batch is None, "compaction inside an open batch"
         v_live = self.v_create.view()[:, 0] != NO_STAMP
         e_live = self.e_create.view()[:, 0] != NO_STAMP
         v_map = np.where(v_live, np.cumsum(v_live) - 1, -1).astype(np.int64)
@@ -699,6 +842,44 @@ class MVGraphPartition:
         ver = Versioned(value, ts)
         self.vertices[src].out_edges[eid].props.setdefault(key, []).append(ver)
         ver.slot = self._cols(ts).edge_prop_set(src, eid, key, value, ts, ver)
+
+    # ---- op-dict dispatch (shard replica apply) ---------------------------
+    def apply_op(self, op: dict, ts: Stamp) -> None:
+        """Apply one forwarded (store-validated) write op at its stamp."""
+        k = op["op"]
+        if k == "create_vertex":
+            self.create_vertex(op["vid"], ts)
+        elif k == "delete_vertex":
+            self.delete_vertex(op["vid"], ts)
+        elif k == "create_edge":
+            self.create_edge(op["src"], op["dst"], ts, eid=op.get("eid"))
+        elif k == "delete_edge":
+            self.delete_edge(op["src"], op["eid"], ts)
+        elif k == "set_vertex_prop":
+            self.set_vertex_prop(op["vid"], op["key"], op["value"], ts)
+        elif k == "set_edge_prop":
+            self.set_edge_prop(op["src"], op["eid"], op["key"],
+                               op["value"], ts)
+
+    def apply_batch(self, items: List[Tuple[Stamp, List[dict]]]) -> int:
+        """Apply a whole group-committed :class:`WriteBatch` payload —
+        ``[(stamp, ops), ...]`` in commit-stamp order — flushing the
+        column mirror ONCE (one stamp-matrix append + one patch-log
+        extend per table instead of one per op, see
+        :meth:`PartitionColumns.begin_batch`).  Returns the op count."""
+        if not items:
+            return 0
+        n = 0
+        cols = self._cols(items[0][0])
+        cols.begin_batch()
+        try:
+            for ts, ops in items:
+                for op in ops:
+                    self.apply_op(op, ts)
+                    n += 1
+        finally:
+            cols.end_batch()
+        return n
 
     # ---- snapshot read path (node programs at T_prog) --------------------
     def vertex_at(self, vid: str, at: Stamp, refine=None) -> Optional[MVVertex]:

@@ -151,10 +151,28 @@ class TimelineOracle:
         Consistent with all existing commitments and vclock order.  When a
         node program and a transaction are unordered, the program goes
         AFTER the transaction (§4.2).  Ties between transactions break
-        deterministically on (epoch, gk, ctr).
+        deterministically on the stamp key (epoch, clock, gk), so
+        independent requests mentioning the same concurrent pair commit
+        the same edge instead of contradictory ones.
+
+        Duplicate stamps are collapsed by key: callers batch one request
+        per *row* they are refining, and many rows share one writing
+        transaction's stamp (a tx that touched k objects contributes k
+        identical entries).  The returned chain therefore has one entry
+        per distinct key — callers index it by key, never by request
+        position.  (Before this dedup, a duplicated key with pending
+        predecessors entered Kahn's ready set once while ``n`` counted
+        its repeats, so heavily-concurrent batches raised a spurious
+        ``CycleError`` from an acyclic constraint set.)
         """
         kinds = list(kinds) if kinds is not None else [KIND_TX] * len(stamps)
-        keys = [self.create_event(s, k) for s, k in zip(stamps, kinds)]
+        keys: List[Key] = []
+        seen = set()
+        for s, k in zip(stamps, kinds):
+            key = self.create_event(s, k)
+            if key not in seen:
+                seen.add(key)
+                keys.append(key)
         n = len(keys)
         # pairwise existing constraints
         pred_count = {k: 0 for k in keys}

@@ -33,16 +33,32 @@ heterogeneous root params, unhashable filter constants, or
 ``use_frontier=False``) falls back to the scalar per-vertex interpreter
 ``nodeprog.run_entries_scalar``, which remains the semantic oracle.
 
-Two mechanisms keep the batched path fast under live traffic:
+Three mechanisms keep the batched path fast under live traffic:
 
 * **plan delta refresh** — writes committing between program hops bump
   ``columns.version``; instead of rebuilding its plan cold, the shard
   delta-refreshes it from the partition's patch logs / compaction
   events at O(changed) stamp work (see :meth:`Shard._frontier_plan`);
-* **delivery coalescing** — concurrent same-(prog, stamp) frontier
-  deliveries waiting in ``pending_progs`` are merged into ONE
-  ``frontier_step`` execution per hop per shard, charging the merged
-  service cost once (see :meth:`Shard._coalesce_pending`).
+* **plan LRU** — plans are cached per build stamp in a small LRU
+  (``plan_cache_entries``), so interleaved programs at mutually
+  concurrent stamps each keep a live plan instead of thrashing one
+  slot cold;
+* **delivery coalescing** — concurrent same-(prog, stamp) deliveries
+  waiting in ``pending_progs`` are merged into ONE execution per hop
+  per shard, charging the merged service cost once — packed frontiers
+  concatenate into one ``frontier_step``, scalar entry lists into one
+  ``run_entries_scalar`` (see :meth:`Shard._coalesce_pending`).
+
+Group-committed writes (``repro.core.writepath``) arrive as ONE packed
+``WriteBatch`` queue item per (gatekeeper window, shard) — kind
+``"txbatch"``, queue-ordered by the batch's lowest remaining stamp —
+and apply into the partition as bulk column appends (one stamp-matrix
+append + one patch-log extend per table), in safe prefixes that never
+overtake another queue's head (:meth:`Shard._exec_batch_prefix`).
+Every op still carries its own commit stamp, so multi-version
+visibility, program gating on queue heads, and plan/snapshot delta
+refresh see exactly the per-tx contract, just with fewer, larger
+patch tails.
 
 Time model: the shard is a single-threaded server; each item charges a
 service time from :class:`~repro.core.gatekeeper.CostModel`, and each
@@ -51,7 +67,7 @@ service time from :class:`~repro.core.gatekeeper.CostModel`, and each
 
 from __future__ import annotations
 
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -63,6 +79,7 @@ from .mvgraph import MVGraphPartition, VidIntern
 from .nodeprog import REGISTRY, run_entries_scalar
 from .oracle import KIND_PROG, KIND_TX, OracleServer
 from .simulation import Simulator
+from .writepath import WriteBatch
 
 
 @dataclass
@@ -79,7 +96,8 @@ class Shard:
                  intern: Optional[VidIntern] = None,
                  use_frontier: bool = True,
                  plan_delta: bool = True,
-                 coalesce: bool = True):
+                 coalesce: bool = True,
+                 plan_cache_entries: int = 4):
         self.sim = sim
         sim.register(self)
         self.sid = sid
@@ -94,7 +112,11 @@ class Shard:
         self.use_frontier = use_frontier
         self.plan_delta = plan_delta     # ShardPlan delta refresh on/off
         self.coalesce = coalesce         # same-(prog, stamp) merge on/off
-        self._plan: Optional[ShardPlan] = None     # delta-refreshed cache
+        # stamp-keyed plan LRU (budget = plan_cache_entries): interleaved
+        # programs at mutually concurrent stamps each keep their own
+        # delta-refreshed plan instead of thrashing one slot
+        self.plan_cache_entries = max(1, plan_cache_entries)
+        self._plans: "OrderedDict[tuple, ShardPlan]" = OrderedDict()
         self._plan_built_rows = 0                  # pending service charge
         self.queues: Dict[int, deque] = {g: deque() for g in range(n_gk)}
         self._expected_seq: Dict[int, int] = {g: 0 for g in range(n_gk)}
@@ -262,8 +284,11 @@ class Shard:
         if all(self.queues[g] for g in range(self.n_gk)):
             heads = [(g, self.queues[g][0]) for g in range(self.n_gk)]
             g = self._order_heads(heads)
-            item = self.queues[g].popleft()
-            service = self._exec_item(item)
+            if self.queues[g][0].kind == "txbatch":
+                service = self._exec_batch_prefix(g)
+            else:
+                item = self.queues[g].popleft()
+                service = self._exec_item(item)
             self._finish_after(service + self._stall)
             return
         # idle: wait for the next enqueue/NOP
@@ -334,27 +359,54 @@ class Shard:
         ops = item.payload or []
         ts = item.stamp
         for op in ops:
-            k = op["op"]
-            try:
-                if k == "create_vertex":
-                    self.partition.create_vertex(op["vid"], ts)
-                elif k == "delete_vertex":
-                    self.partition.delete_vertex(op["vid"], ts)
-                elif k == "create_edge":
-                    self.partition.create_edge(op["src"], op["dst"], ts,
-                                               eid=op.get("eid"))
-                elif k == "delete_edge":
-                    self.partition.delete_edge(op["src"], op["eid"], ts)
-                elif k == "set_vertex_prop":
-                    self.partition.set_vertex_prop(op["vid"], op["key"],
-                                                   op["value"], ts)
-                elif k == "set_edge_prop":
-                    self.partition.set_edge_prop(op["src"], op["eid"],
-                                                 op["key"], op["value"], ts)
-            except KeyError:
-                # replica divergence would be a bug; store validated already
-                raise
+            # KeyError here would be replica divergence (store validated)
+            self.partition.apply_op(op, ts)
         return self.cost.shard_op * max(1, len(ops))
+
+    def _exec_batch_prefix(self, g: int) -> float:
+        """Apply the safe prefix of the ``txbatch`` at queue ``g``'s head
+        as ONE bulk column append.
+
+        A ``WriteBatch`` delivers a whole gatekeeper window as one queue
+        item, but executing it atomically would let a LATER item of an
+        earlier-ordered batch jump ahead of a cross-gatekeeper
+        dependency still waiting at another queue head (the store
+        committed ``T_a ≺ T_b`` — e.g. delete-then-recreate — but only
+        per-item head ordering enforces it here).  So: the head item
+        always runs (it just won ``_order_heads``, and no program was
+        runnable this turn), and the prefix extends while the next
+        item's stamp is strictly vector-before EVERY other queue head
+        AND every pending program stamp — unambiguous with no oracle
+        traffic.  The program bound matters because the per-tx loop
+        re-checks runnable programs between every applied item: an
+        item merely CONCURRENT with a gated program may be
+        oracle-ordered after it (and e.g. a re-create would destroy
+        property history the program must still read), so it has to
+        wait for the normal loop; items strictly before the program
+        are visible at its stamp either way, so applying them early is
+        indistinguishable.  The remainder is requeued as the new head
+        (its first stamp becomes the head stamp for program gating /
+        head ordering), and the normal loop — oracle refinement
+        included — interleaves it against the other queues, which is
+        exactly per-tx semantics.  The uncontended case (all other
+        heads dominate the window, no gated programs) applies the
+        whole batch in one ``MVGraphPartition.apply_batch`` — one
+        stamp-matrix append + one patch-log extend per table."""
+        item = self.queues[g].popleft()
+        wb: WriteBatch = item.payload
+        items = wb.items
+        bounds = [self.queues[h][0].stamp for h in range(self.n_gk)
+                  if h != g and self.queues[h]]
+        bounds += [p["stamp"] for p in self.pending_progs]
+        take = 1
+        while take < len(items) and all(
+                compare(items[take][0], s) is Order.BEFORE for s in bounds):
+            take += 1
+        n_ops = self.partition.apply_batch(items[:take])
+        if take < len(items):
+            self.queues[g].appendleft(_QueueItem(
+                items[take][0], "txbatch", WriteBatch(items[take:])))
+        return self.cost.shard_op * max(1, n_ops)
 
     def _refine_batch(self, stamps: List[Stamp], at: Stamp) -> Dict:
         """ONE oracle round trip for a batch of stamps truly concurrent
@@ -387,12 +439,13 @@ class Shard:
         return out
 
     def _frontier_plan(self, stamp: Stamp) -> ShardPlan:
-        """Cached sorted-CSR snapshot slice at ``stamp``.
+        """Cached sorted-CSR snapshot slice at ``stamp``, served from a
+        small stamp-keyed LRU (budget ``plan_cache_entries``).
 
-        Reused as-is when the partition columns are unchanged AND (same
-        stamp, or the cached plan is *settled* — every stamp in the
-        columns strictly precedes its build stamp, so visibility is
-        identical at every later stamp).  The settled case is the
+        A plan is reused as-is when the partition columns are unchanged
+        AND (same stamp, or the cached plan is *settled* — every stamp
+        in the columns strictly precedes its build stamp, so visibility
+        is identical at every later stamp).  The settled case is the
         point-read hot path: a quiescent shard serves
         get_node/count_edges streams from ONE plan.
 
@@ -401,21 +454,42 @@ class Shard:
         patch-log tails and compaction remaps are consumed at O(changed)
         stamp work, so write traffic between program hops no longer
         degrades the batched path to cold rebuilds.  A cold rebuild
-        happens only when (a) there is no plan for these columns yet,
-        (b) the query stamp does not dominate the plan stamp (plans only
-        move forward), or (c) the columns' bounded compaction-event
-        history no longer covers the plan's cursor — in which case the
-        stale plan (settled or not) is DISCARDED, never reused for later
-        stamps.  Service cost: a cold build charges ``prog_plan_row``
-        per column row, a delta refresh the same rate per re-evaluated
-        row (``_plan_built_rows`` is drained by ``_exec_prog``)."""
+        happens only when (a) no cached plan's stamp is dominated by the
+        query stamp (plans only move forward), or (b) the columns'
+        bounded compaction-event history no longer covers the candidate
+        plan's cursor — in which case the stale plan (settled or not) is
+        DISCARDED, never reused for later stamps.
+
+        The LRU replaces PR 3's single cached plan: two interleaved
+        programs at mutually CONCURRENT stamps keep separate entries
+        (neither stamp dominates the other, so neither plan can serve
+        the other's query) instead of thrashing cold rebuilds per
+        alternation; evictions beyond the budget count
+        ``plan_cache_evictions``.  Service cost: a cold build charges
+        ``prog_plan_row`` per column row, a delta refresh the same rate
+        per re-evaluated row (``_plan_built_rows`` is drained by
+        ``_exec_prog``)."""
         cols = self.partition.columns
         ctr = self.sim.counters
+        key = stamp.key()
+        cand: Optional[ShardPlan] = None
+        cand_key = None
+        hit = self._plans.get(key)
+        if hit is not None and hit.cols is cols:
+            cand, cand_key = hit, key
+        else:
+            # most-recently-used plan this stamp dominates (delta/reuse
+            # candidate); concurrent-stamp plans stay untouched
+            for k in reversed(self._plans):
+                p = self._plans[k]
+                if p.cols is cols and compare(p.at, stamp) in (
+                        Order.BEFORE, Order.EQUAL):
+                    cand, cand_key = p, k
+                    break
         plan, kind = maintain_plan(
-            self._plan, cols, stamp, self.n_gk,
+            cand, cols, stamp, self.n_gk,
             lambda ss, at=stamp: self._refine_batch(ss, at),
             allow_delta=self.plan_delta)
-        self._plan = plan
         if kind == "delta":
             ctr.plan_delta_refreshes += 1
             ctr.plan_rows_refreshed += plan.last_refresh_rows
@@ -423,6 +497,17 @@ class Shard:
         elif kind == "cold":
             ctr.plan_cold_builds += 1
             self._plan_built_rows += plan.built_rows
+            if cand is not None:
+                # the candidate's cursor fell off the compaction
+                # history: stale, must not serve any later stamp
+                self._plans.pop(cand_key, None)
+        if cand_key is not None and cand_key != plan.at.key():
+            self._plans.pop(cand_key, None)   # re-key advanced plan
+        self._plans[plan.at.key()] = plan
+        self._plans.move_to_end(plan.at.key())
+        while len(self._plans) > self.plan_cache_entries:
+            self._plans.popitem(last=False)
+            ctr.plan_cache_evictions += 1
         return plan
 
     def _coalesce_pending(self, prog: dict) -> List:
@@ -445,12 +530,36 @@ class Shard:
         step-concatenation invariance (see ``nodeprog.NodeProgram``).
         The runnable check already passed for ``prog``; queue-clearing
         state is shared per (shard, stamp), so every absorbed delivery
-        was runnable too."""
+        was runnable too.
+
+        Scalar deliveries coalesce symmetrically: waiting
+        same-(prog_id, stamp) entry LISTS concatenate into one
+        ``run_entries_scalar`` execution (the interpreter processes
+        entries independently against shared per-program state, so
+        concatenation invariance is the same ``coalesce_ok`` contract);
+        scalar and packed deliveries never merge with each other."""
         base = prog["entries"]
-        if not isinstance(base, Frontier):
-            return []
         if not REGISTRY[prog["name"]].coalesce_ok:
             return []
+        if not isinstance(base, Frontier):
+            # ---- scalar path: concatenate same-(prog, stamp) lists
+            merged_e: List = list(base)
+            extra_s: List = []
+            keep_s: List[dict] = []
+            for p in self.pending_progs:
+                if (p["prog_id"] == prog["prog_id"]
+                        and p["name"] == prog["name"]
+                        and p["stamp"].key() == prog["stamp"].key()
+                        and not isinstance(p["entries"], Frontier)):
+                    merged_e.extend(p["entries"])
+                    extra_s.append(p["delivery_id"])
+                else:
+                    keep_s.append(p)
+            if extra_s:
+                self.pending_progs = keep_s
+                prog["entries"] = merged_e
+                self.sim.counters.scalar_coalesced += len(extra_s)
+            return extra_s
         merged = [base]
         extra: List = []
         keep: List[dict] = []
@@ -577,6 +686,7 @@ class Shard:
     def recover_from(self, ops: List[dict]) -> None:
         """Backup promotion: rebuild the partition from the backing store."""
         self.partition = MVGraphPartition(self.n_gk, self.intern)
+        self._plans.clear()              # plans referenced the old columns
         for op in ops:
             k, ts = op["op"], op["ts"]
             if k == "create_vertex":

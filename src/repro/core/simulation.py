@@ -71,9 +71,15 @@ class Counters:
     prog_entries_delivered: int = 0  # total (vertex, params) entries
     frontier_coalesced: int = 0    # same-(prog, stamp) deliveries merged
     #                                into another delivery's execution
+    scalar_coalesced: int = 0      # scalar entry-list deliveries merged
     plan_cold_builds: int = 0      # ShardPlan built from scratch
     plan_delta_refreshes: int = 0  # ShardPlan patched in place
     plan_rows_refreshed: int = 0   # rows re-evaluated by delta refreshes
+    plan_cache_evictions: int = 0  # ShardPlans dropped by the LRU budget
+    tx_batches: int = 0            # group-commit windows flushed
+    tx_batch_size_sum: int = 0     # transactions admitted across windows
+    conflict_rows_checked: int = 0  # (tx, vid) last-update rows compared
+    #                                 by the vectorized batch validator
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)

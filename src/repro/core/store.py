@@ -10,6 +10,17 @@ In the simulator it is a single actor executing multi-key transactions
 atomically at message-delivery time (that *is* strict serializability for
 a single-copy store), with a write-ahead log for recovery and an optional
 on-disk checkpoint used by the fault-tolerance tests.
+
+Group commit (``repro.core.writepath``): last-update stamps are mirrored
+into a packed :class:`~repro.core.writepath.LastUpdateTable` at every
+commit point, so the gatekeeper's batched admission path validates a
+whole window's write-sets with one vectorized compare instead of one
+dict probe per vertex; :meth:`BackingStore.apply_batch` then commits the
+validated batch in ONE store round trip — one group WAL record is the
+batch's single durability point, and each transaction's reply is sent
+only after it.  A logical error (``ValueError``) aborts only its own
+transaction; the rest of the batch commits.  The per-tx :meth:`apply`
+is unchanged and remains the semantic oracle.
 """
 
 from __future__ import annotations
@@ -20,7 +31,9 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .clock import Stamp
+from .mvgraph import VidIntern
 from .simulation import Simulator
+from .writepath import LastUpdateTable
 
 
 @dataclass
@@ -38,13 +51,18 @@ class StoredVertex:
 class BackingStore:
     """Strictly serializable KV + vertex->shard directory + WAL."""
 
-    def __init__(self, sim: Simulator, n_shards: int):
+    def __init__(self, sim: Simulator, n_shards: int,
+                 intern: Optional[VidIntern] = None):
         self.sim = sim
         sim.register(self)
         self.n_shards = n_shards
         self.vertices: Dict[str, StoredVertex] = {}
         self.wal: List[dict] = []
         self._next_eid = 0
+        # packed mirror of per-vertex last-update stamps (group-commit
+        # validation path; kept exactly in sync with StoredVertex.
+        # last_update at every commit point)
+        self.last_updates = LastUpdateTable(intern)
 
     # ---- directory -------------------------------------------------------
     def place(self, vid: str) -> int:
@@ -75,6 +93,38 @@ class BackingStore:
         vertex and immediately hangs edges off it).  A logical error aborts
         with no side effects (§4.1).
         """
+        return self._apply_one(ops, ts, log=True)
+
+    def apply_batch(self, items: List[Tuple[List[dict], Stamp]]
+                    ) -> List[Tuple[bool, Optional[str],
+                                    Optional[List[Tuple[int, dict]]]]]:
+        """Commit a validated group — ``[(ops, stamp), ...]`` in stamp
+        order — in one store round trip.
+
+        Per-transaction result: ``(ok, error, fwd)``.  Each transaction
+        keeps its own atomicity (a logical error rolls back that tx
+        only); the batch shares ONE group WAL record appended after the
+        last transaction — the group's single durability point (the
+        gatekeeper replies to every client after this call returns)."""
+        out = []
+        ts_keys, op_names = [], []
+        for ops, ts in items:
+            try:
+                fwd = self._apply_one(ops, ts, log=False)
+            except ValueError as e:
+                out.append((False, str(e), None))
+                continue
+            out.append((True, None, fwd))
+            if fwd:
+                ts_keys.append((ts.epoch, ts.gk, ts.ctr))
+                op_names.extend(o["op"] for o in ops)
+        if op_names:
+            self.wal.append({"group": True, "ts": ts_keys,
+                             "ops": op_names})
+        return out
+
+    def _apply_one(self, ops: List[dict], ts: Stamp,
+                   log: bool) -> List[Tuple[int, dict]]:
         fwd: List[Tuple[int, dict]] = []
         staged: List[Callable[[], None]] = []
         new_v: Dict[str, StoredVertex] = {}       # created in this tx
@@ -201,7 +251,10 @@ class BackingStore:
             self.vertices[vid] = v
         for s in staged:
             s()
-        if fwd:
+        # packed mirror follows the dict exactly: every vid whose
+        # last_update the staged writes (or new-vertex creation) set
+        self.last_updates.record(self.write_set(ops), ts)
+        if fwd and log:
             self.wal.append({"ts": (ts.epoch, ts.gk, ts.ctr),
                              "ops": [o["op"] for o in ops]})
         return fwd

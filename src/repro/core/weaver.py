@@ -115,6 +115,12 @@ class WeaverConfig:
     frontier_progs: bool = True  # batched node-program execution path
     frontier_plan_delta: bool = True  # delta-refresh ShardPlans on writes
     frontier_coalesce: bool = True    # merge same-(prog, stamp) deliveries
+    plan_cache_entries: int = 4  # per-shard ShardPlan LRU budget
+    write_group_commit: float = 0.0   # group-commit admission window in
+    #                                   simulated seconds (0 = per-tx
+    #                                   path, the semantic oracle); see
+    #                                   repro.core.writepath
+    write_group_max: int = 64    # flush a window early at this many txs
     seed: int = 0
     cost: CostModel = field(default_factory=CostModel)
     network: NetworkModel = field(default_factory=NetworkModel)
@@ -125,22 +131,25 @@ class Weaver:
     def __init__(self, cfg: WeaverConfig = WeaverConfig()):
         self.cfg = cfg
         self.sim = Simulator(seed=cfg.seed, network=cfg.network)
-        self.store = BackingStore(self.sim, cfg.n_shards)
+        self.intern = VidIntern()       # deployment-wide vid interning
+        self.store = BackingStore(self.sim, cfg.n_shards, intern=self.intern)
         self.oracle = OracleServer(self.sim)
         self.manager = ClusterManager(self.sim, cfg.heartbeat_period)
         self.manager.weaver = self
         self.gatekeepers: List[Gatekeeper] = [
             Gatekeeper(self.sim, g, cfg.n_gatekeepers, self.store, self.oracle,
-                       cfg.cost, cfg.tau, cfg.tau_nop)
+                       cfg.cost, cfg.tau, cfg.tau_nop,
+                       group_window=cfg.write_group_commit,
+                       group_max=cfg.write_group_max)
             for g in range(cfg.n_gatekeepers)
         ]
-        self.intern = VidIntern()       # deployment-wide vid interning
         self.shards: List[Shard] = [
             Shard(self.sim, s, cfg.n_gatekeepers, self.oracle, cfg.cost,
                   self.store.shard_of, intern=self.intern,
                   use_frontier=cfg.frontier_progs,
                   plan_delta=cfg.frontier_plan_delta,
-                  coalesce=cfg.frontier_coalesce)
+                  coalesce=cfg.frontier_coalesce,
+                  plan_cache_entries=cfg.plan_cache_entries)
             for s in range(cfg.n_shards)
         ]
         for gk in self.gatekeepers:
@@ -278,7 +287,8 @@ class Weaver:
                        self.cfg.cost, self.store.shard_of, intern=self.intern,
                        use_frontier=self.cfg.frontier_progs,
                        plan_delta=self.cfg.frontier_plan_delta,
-                       coalesce=self.cfg.frontier_coalesce)
+                       coalesce=self.cfg.frontier_coalesce,
+                       plan_cache_entries=self.cfg.plan_cache_entries)
             nu.recover_from(self.store.recover_shard(sid))
             self.shards[sid] = nu
             for sh in self.shards:
@@ -296,7 +306,9 @@ class Weaver:
             old.stop()
             nu = Gatekeeper(self.sim, gid, self.cfg.n_gatekeepers, self.store,
                             self.oracle, self.cfg.cost, self.cfg.tau,
-                            self.cfg.tau_nop)
+                            self.cfg.tau_nop,
+                            group_window=self.cfg.write_group_commit,
+                            group_max=self.cfg.write_group_max)
             self.gatekeepers[gid] = nu
             nu.start(self.gatekeepers, self.shards)
             # refresh surviving gatekeepers' peer lists (no new timers)

@@ -1,0 +1,306 @@
+"""Group-commit write engine (paper §4.1/§4.4 commit protocol, batched).
+
+This module is to the write side what :mod:`repro.core.frontier` is to
+the read side: PRs 1–3 columnarized snapshots, node programs and plan
+maintenance, but transactions still flowed one at a time — one
+gatekeeper ``_serve`` round per tx, one per-vertex ``last_update_of``
+dict probe per write-set entry, one store round trip per tx and one
+shard queue item per (tx, shard).  Write-optimized transactional graph
+stores (LiveGraph's purely-sequential write path, GTX's delta-chain
+group writes) batch exactly these four stages; this module provides the
+data structures and vectorized kernels, and
+:meth:`repro.core.gatekeeper.Gatekeeper._at_store_batch` drives them.
+
+Group-commit contract
+---------------------
+* **Admission** — transactions arriving at one gatekeeper within a
+  configurable window (``WeaverConfig.write_group_commit`` seconds,
+  capped at ``write_group_max`` transactions) are stamped in ONE
+  ``_serve`` round.  Every transaction still receives its own fresh
+  ``_tick()`` stamp, so per-tx ``(gk, ctr)`` identity — and therefore
+  multi-version visibility — is exactly the per-tx path's.
+* **Commit point / durability** — the batch commits at the backing
+  store in ONE round trip (:meth:`repro.core.store.BackingStore.
+  apply_batch`): one group WAL record is the batch's single durability
+  point, and each client reply is sent only after it (§4.4 part 2
+  unchanged: the store is the commit point).
+* **Intra-batch ordering** — a batch is applied in stamp order, which
+  for one gatekeeper is admission order (the vector clock's own counter
+  is monotone).  Same-vertex writers inside a batch therefore serialize
+  by stamp with no validation traffic — the earlier stamp is strictly
+  vector-before the later one — while independent writers commit
+  together.  Logical errors (create of an existing vertex, …) abort
+  only their own transaction; the rest of the batch commits.
+* **Validation** — ``T_upd ≺ T_tx`` runs against
+  :class:`LastUpdateTable`, a packed ``(N, G+1)`` int32 mirror of the
+  store's per-vertex last-update stamps (same layout as
+  ``PartitionColumns`` stamp matrices), with ONE vectorized compare for
+  the entire batch's write-sets (numpy on CPU; the jnp path compiles
+  the same elementwise compare the ``mv_visibility`` kernel uses when a
+  device backend is active).  Rows ordered AFTER the transaction stamp
+  retry with a fresh stamp (rejoining the next window); the truly
+  concurrent residue falls out to ONE batched timeline-oracle round
+  trip (`refine_commit`), committing ``T_upd ≺ T_tx`` per pair exactly
+  like the per-tx path and retrying the transaction on ``CycleError``.
+* **Shard apply** — each destination shard receives ONE packed
+  :class:`WriteBatch` queue item per window (mirroring the read side's
+  packed ``Frontier``), applied into ``MVGraphPartition`` as bulk
+  column appends (one patch-log extend + one stamp-matrix append per
+  batch, see ``PartitionColumns.begin_batch``).  Snapshot/plan delta
+  refresh sees the identical cursor contract, just with fewer, larger
+  patch tails.
+
+The per-tx path (``write_group_commit = 0``) is preserved untouched as
+the oracle/fallback; ``tests/test_writepath.py`` asserts randomized
+batched == per-tx equivalence.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .clock import NO_STAMP, Order, Stamp, compare, pack
+from .mvgraph import VidIntern, _GrowRows
+from .oracle import CycleError, TimelineOracle
+
+
+# ---------------------------------------------------------------------------
+# Vectorized stamp-pair comparison (the batch analogue of clock.compare)
+# ---------------------------------------------------------------------------
+
+def _before_pairs_xp(xp, rows, qs):
+    """``rows[i] ≺ qs[i]`` elementwise over two (M, G+1) stamp matrices,
+    written once over the array module (``xp`` = numpy or jax.numpy) so
+    the CPU and accelerator paths cannot drift.
+
+    The pairwise form of :func:`repro.core.clock._np_before` (there the
+    query stamp is shared); absent rows (``NO_STAMP``) are never
+    before."""
+    is_no = rows[:, 0] == NO_STAMP
+    lower = rows[:, 0] < qs[:, 0]
+    same = rows[:, 0] == qs[:, 0]
+    le = xp.all(rows[:, 1:] <= qs[:, 1:], axis=1)
+    eq = xp.all(rows[:, 1:] == qs[:, 1:], axis=1)
+    return xp.where(is_no, False, lower | (same & le & ~eq))
+
+
+def _np_before_pairs(rows: np.ndarray, qs: np.ndarray) -> np.ndarray:
+    return _before_pairs_xp(np, rows, qs)
+
+
+def before_pairs(rows: np.ndarray, qs: np.ndarray) -> np.ndarray:
+    """Elementwise ``rows[i] ≺ qs[i]`` with the data plane's backend
+    auto-switch: numpy on CPU; on an accelerator backend the identical
+    elementwise compare runs as one fused jnp launch (the
+    ``mv_visibility`` kernel's contract generalized to a per-row query
+    stamp, which the single-``q`` Pallas kernel cannot express)."""
+    if rows.shape[0] == 0:
+        return np.zeros((0,), bool)
+    from . import analytics
+    if analytics._use_kernel():
+        import jax.numpy as jnp
+        return np.asarray(_before_pairs_xp(jnp, jnp.asarray(rows),
+                                           jnp.asarray(qs)))
+    return _before_pairs_xp(np, rows, qs)
+
+
+# ---------------------------------------------------------------------------
+# Last-update table
+# ---------------------------------------------------------------------------
+
+class LastUpdateTable:
+    """Interned-vid-indexed packed last-update stamps (store-side).
+
+    Replaces the gatekeeper commit path's per-vertex
+    ``last_update_of`` dict walk: one row per vertex ever written, in
+    the same ``[epoch, c_0..c_{G-1}]`` int32 layout as
+    ``PartitionColumns`` stamp matrices, plus the original
+    :class:`Stamp` objects for oracle refinement of truly concurrent
+    rows.  :meth:`gather` materializes a batch's whole write-set as one
+    (M, G+1) matrix for :func:`classify_write_sets`.
+
+    The table mirrors ``StoredVertex.last_update`` exactly — it is
+    updated at the same commit points (``BackingStore.apply`` /
+    ``apply_batch``) over the same :meth:`BackingStore.write_set` vids;
+    ``tests/test_writepath.py`` property-tests the equivalence."""
+
+    def __init__(self, intern: Optional[VidIntern] = None) -> None:
+        self.intern = intern if intern is not None else VidIntern()
+        self.c = 0                      # row width, sized on first record
+        self.rows: Optional[_GrowRows] = None
+        self.stamps: List[Stamp] = []
+        self.slot: Dict[int, int] = {}  # gid -> row
+
+    def _ensure(self, ts: Stamp) -> None:
+        if self.rows is None:
+            self.c = len(ts.clock) + 1
+            self.rows = _GrowRows(self.c)
+
+    def record(self, vids: Sequence[str], ts: Stamp) -> None:
+        """Set the last-update stamp of every vid (post-commit)."""
+        if not vids:
+            return
+        self._ensure(ts)
+        row = pack(ts, len(ts.clock))
+        for vid in vids:
+            g = self.intern.intern(vid)
+            s = self.slot.get(g)
+            if s is None:
+                self.slot[g] = self.rows.append(row)
+                self.stamps.append(ts)
+            else:
+                self.rows.set(s, row)
+                self.stamps[s] = ts
+
+    def get(self, vid: str) -> Optional[Stamp]:
+        g = self.intern.ids.get(vid)
+        if g is None:
+            return None
+        s = self.slot.get(g)
+        return None if s is None else self.stamps[s]
+
+    def gather(self, vids: Sequence[str]
+               ) -> Tuple[np.ndarray, List[Optional[Stamp]]]:
+        """(M, G+1) packed rows + Stamp objects for ``vids`` (all-
+        ``NO_STAMP`` row / None for never-updated vertices)."""
+        m = len(vids)
+        c = self.c if self.c else 2
+        out = np.full((m, c), NO_STAMP, np.int32)
+        stamps: List[Optional[Stamp]] = [None] * m
+        if self.rows is not None:
+            view = self.rows.view()
+            for i, vid in enumerate(vids):
+                g = self.intern.ids.get(vid)
+                s = None if g is None else self.slot.get(g)
+                if s is not None:
+                    out[i] = view[s]
+                    stamps[i] = self.stamps[s]
+        return out, stamps
+
+
+#: per-tx validation verdicts
+OK, RETRY = 0, 1
+
+
+@dataclass
+class TxVerdict:
+    """Outcome of batched last-update validation for one transaction."""
+
+    status: int                                  # OK | RETRY
+    concurrent: List[Stamp] = field(default_factory=list)
+
+
+def classify_write_sets(table: LastUpdateTable,
+                        write_sets: Sequence[Sequence[str]],
+                        stamps: Sequence[Stamp]) -> Tuple[List[TxVerdict], int]:
+    """Validate an entire batch's write-sets in one vectorized pass.
+
+    For every (tx, written vid) pair, compare the vid's last-update
+    stamp against the tx stamp — the batched form of the per-tx path's
+    ``compare(upd, stamp)`` dict walk:
+
+    * ``upd ≺ tx``  (or no last update)  -> row passes;
+    * ``tx ≺ upd``                       -> the tx must RETRY with a
+      fresh stamp (it was stamped behind an already-executed write);
+    * truly concurrent                   -> the ``upd`` stamp joins the
+      tx's refinement residue, resolved by ONE batched oracle round
+      trip (:func:`refine_commit`).
+
+    Returns (per-tx verdicts, rows checked).  Intra-batch overlaps need
+    no rows here: batches are applied in stamp order and one
+    gatekeeper's stamps are totally ordered, so an earlier tx's write
+    is strictly before a later tx's stamp by construction.
+    """
+    flat: List[str] = []
+    tx_of: List[int] = []
+    for i, ws in enumerate(write_sets):
+        for vid in ws:
+            flat.append(vid)
+            tx_of.append(i)
+    verdicts = [TxVerdict(OK) for _ in write_sets]
+    if not flat:
+        return verdicts, 0
+    rows, row_stamps = table.gather(flat)
+    # pack once per TX, gather per row (write sets share their tx stamp)
+    q_tx = np.stack([pack(s, len(s.clock)) for s in stamps])
+    qs = q_tx[np.asarray(tx_of)]
+    if rows.shape[1] != qs.shape[1]:    # table not sized yet (all absent)
+        rows = np.full(qs.shape, NO_STAMP, np.int32)
+    present = rows[:, 0] != NO_STAMP
+    before = before_pairs(rows, qs)     # upd ≺ tx (kernel-capable path)
+    # tx ≺ upd (rare residue, np); an absent row is "no last update",
+    # never after — NO_STAMP in the target position must not read as
+    # "later than everything"
+    after = present & _np_before_pairs(qs, rows)
+    conc = present & ~before & ~after   # incl. equal vectors, other gk
+    for i in np.nonzero(after)[0].tolist():
+        verdicts[tx_of[i]].status = RETRY
+    for i in np.nonzero(conc)[0].tolist():
+        v = verdicts[tx_of[i]]
+        s = row_stamps[i]
+        # packed rows carry no gatekeeper id, so equal vectors land here;
+        # confirm true concurrency on the Stamp (EQUAL-same-gk passes,
+        # matching clock.compare exactly) — the residue is tiny
+        if v.status == OK and s is not None and compare(
+                s, stamps[tx_of[i]]) is Order.CONCURRENT:
+            v.concurrent.append(s)
+    return verdicts, len(flat)
+
+
+def refine_commit(oracle: TimelineOracle,
+                  pending: Sequence[Tuple[int, Stamp, List[Stamp]]]
+                  ) -> List[int]:
+    """Commit ``upd ≺ tx`` for every concurrent residue pair, batched.
+
+    ``pending`` holds ``(tx_index, tx_stamp, [upd stamps...])``; the
+    whole residue ships to the oracle as ONE round trip (the caller
+    charges a single ``oracle_rtt``), mirroring the per-tx path's
+    ``create_event + assert_order`` semantics per pair.  Returns the tx
+    indices whose commitment closed a cycle — those retry with a fresh
+    stamp, exactly like the per-tx path's ``CycleError`` branch."""
+    failed: List[int] = []
+    for idx, tx_stamp, upds in pending:
+        try:
+            for upd in upds:
+                oracle.create_event(upd)
+                oracle.create_event(tx_stamp)
+                oracle.assert_order(upd.key(), tx_stamp.key())
+        except CycleError:
+            failed.append(idx)
+    return failed
+
+
+# ---------------------------------------------------------------------------
+# Packed shard delivery
+# ---------------------------------------------------------------------------
+
+class WriteBatch:
+    """One gatekeeper window's committed writes for ONE shard.
+
+    ``items`` is ``[(stamp, ops), ...]`` in commit-stamp order; the
+    batch travels as a single sequence-numbered queue item (stamp = the
+    first/lowest stamp, which is what the shard's head-ordering loop
+    keys on) and applies via ``MVGraphPartition.apply_batch`` — the
+    write-side mirror of the read side's packed ``Frontier``."""
+
+    __slots__ = ("items",)
+
+    def __init__(self, items: List[Tuple[Stamp, List[dict]]]):
+        self.items = items
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+    @property
+    def stamp(self) -> Stamp:
+        return self.items[0][0]
+
+    def n_ops(self) -> int:
+        return sum(len(ops) for _, ops in self.items)
+
+    def nbytes(self) -> int:
+        """Simulated wire size: one header + packed per-op payload."""
+        return 64 + 16 * len(self.items) + 48 * self.n_ops()
