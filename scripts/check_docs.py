@@ -1,0 +1,182 @@
+#!/usr/bin/env python
+"""Docs consistency check (wired into scripts/ci.sh).
+
+Verifies, without external deps:
+
+* ``README.md``, ``docs/ARCHITECTURE.md``, ``docs/CONFIG.md`` exist;
+* every intra-repo markdown link in them resolves to a real file;
+* every ``repro.*`` dotted module reference resolves under ``src/``
+  (attribute tails after a module file are not checked);
+* every referenced ``WeaverConfig.<knob>`` / ``Counters.<field>`` is a
+  real dataclass field, and ``docs/CONFIG.md`` documents EVERY field of
+  both dataclasses;
+* the README results table between ``<!-- BENCH:START -->`` /
+  ``<!-- BENCH:END -->`` matches the checked-in ``BENCH_*.json``
+  artifacts exactly (``--write`` regenerates it in place).
+
+Exit non-zero with a findings list on any failure.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/CONFIG.md"]
+START, END = "<!-- BENCH:START -->", "<!-- BENCH:END -->"
+
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def _read(rel: str) -> str:
+    with open(os.path.join(ROOT, rel)) as f:
+        return f.read()
+
+
+def _bench(rel: str) -> dict:
+    return json.load(open(os.path.join(ROOT, rel)))
+
+
+def render_bench_table() -> str:
+    """The README results table, derived ONLY from the BENCH files."""
+    sn = _bench("BENCH_snapshot.json")
+    npg = _bench("BENCH_nodeprog.json")
+    wp = _bench("BENCH_writepath.json")
+    x = lambda v: f"{v:.1f}x"
+    rows = [
+        ("Snapshot engine", "cold columnar build vs seed per-object path",
+         x(sn["speedup"]["cold_vs_python"])),
+        ("Snapshot engine", "delta refresh vs cold (~0.25% churn)",
+         x(sn["speedup"]["delta_vs_cold"])),
+        ("Snapshot engine", "no-op refresh vs cold",
+         x(sn["speedup"]["noop_vs_cold"])),
+        ("Node programs", "multi-hop traverse, frontier vs scalar",
+         x(npg["speedup"]["traverse_multi_hop"])),
+        ("Node programs", "reachability, frontier vs scalar",
+         x(npg["speedup"]["reachable"])),
+        ("Node programs", "weighted sssp, frontier vs scalar",
+         x(npg["speedup"]["sssp"])),
+        ("Node programs",
+         f"get_edges stream ({npg['ragged']['get_edges_stream']['n_roots']}"
+         " roots, ragged replies, warm plans)",
+         x(npg["speedup"]["get_edges_stream"])),
+        ("Node programs",
+         f"clustering batch ({npg['ragged']['clustering_batch']['n_roots']}"
+         " roots, 3-phase wedge closing, warm plans)",
+         x(npg["speedup"]["clustering_batch"])),
+        ("Node programs", "plan maintenance under write churn vs forced "
+         "cold rebuilds (traverse)",
+         x(npg["write_churn"]["traverse_multi_hop"]["plan_speedup"])),
+        ("Write path",
+         f"group commit vs per-tx throughput (mean batch "
+         f"{wp['mean_batch']:.1f}, message reduction "
+         f"{wp['message_reduction']:.2f}x)",
+         x(wp["speedup"])),
+    ]
+    eq = all([sn["equivalent"], npg["equivalent"], wp["equivalent"]])
+    out = ["| Benchmark | Headline metric | Speedup |", "|---|---|---|"]
+    out += [f"| {a} | {b} | **{c}** |" for a, b, c in rows]
+    out.append("")
+    out.append(f"Equivalence bits: snapshot={int(sn['equivalent'])} "
+               f"nodeprog={int(npg['equivalent'])} "
+               f"writepath={int(wp['equivalent'])} "
+               f"({'all identical to the scalar oracle' if eq else 'DIVERGED'}).")
+    return "\n".join(out)
+
+
+def check_links(rel: str, text: str, errs: list) -> None:
+    base = os.path.dirname(os.path.join(ROOT, rel))
+    for m in re.finditer(r"\[[^\]]*\]\(([^)\s]+)\)", text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        path = os.path.normpath(os.path.join(base, target.split("#")[0]))
+        if not os.path.exists(path):
+            errs.append(f"{rel}: broken link -> {target}")
+
+
+def check_modules(rel: str, text: str, errs: list) -> None:
+    for m in re.finditer(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+", text):
+        parts = m.group(0).split(".")
+        path = os.path.join(ROOT, "src")
+        for i, part in enumerate(parts):
+            if os.path.isdir(os.path.join(path, part)):
+                path = os.path.join(path, part)
+            elif os.path.isfile(os.path.join(path, part + ".py")):
+                break                      # rest are attributes
+            else:
+                errs.append(f"{rel}: unresolved module {m.group(0)}")
+                break
+
+
+def check_fields(rel: str, text: str, errs: list) -> None:
+    import dataclasses
+    from repro.core.simulation import Counters
+    from repro.core.weaver import WeaverConfig
+    fields = {
+        "WeaverConfig": {f.name for f in dataclasses.fields(WeaverConfig)},
+        "Counters": {f.name for f in dataclasses.fields(Counters)},
+    }
+    for cls, names in fields.items():
+        for m in re.finditer(rf"\b{cls}\.([a-z_][a-z0-9_]*)", text):
+            if m.group(1) not in names:
+                errs.append(f"{rel}: unknown {cls} field {m.group(1)}")
+    if rel.endswith("CONFIG.md"):
+        for cls, names in fields.items():
+            missing = [n for n in sorted(names)
+                       if not re.search(rf"`{n}`", text)]
+            if missing:
+                errs.append(f"{rel}: {cls} fields undocumented: "
+                            + ", ".join(missing))
+
+
+def check_bench_table(text: str, errs: list, write: bool) -> None:
+    if START not in text or END not in text:
+        errs.append("README.md: missing BENCH table markers")
+        return
+    want = render_bench_table()
+    head, rest = text.split(START, 1)
+    inside, tail = rest.split(END, 1)
+    if write:
+        nu = head + START + "\n" + want + "\n" + END + tail
+        with open(os.path.join(ROOT, "README.md"), "w") as f:
+            f.write(nu)
+        print("README.md bench table regenerated")
+        return
+    if inside.strip() != want.strip():
+        errs.append("README.md: bench table out of date with BENCH_*.json "
+                    "(run: python scripts/check_docs.py --write)")
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    write = "--write" in argv
+    errs: list = []
+    for rel in DOCS:
+        if not os.path.isfile(os.path.join(ROOT, rel)):
+            errs.append(f"missing doc: {rel}")
+    if errs:
+        print("\n".join(errs), file=sys.stderr)
+        return 1
+    if write:
+        check_bench_table(_read("README.md"), errs, write=True)
+    for rel in DOCS:
+        text = _read(rel)
+        check_links(rel, text, errs)
+        check_modules(rel, text, errs)
+        check_fields(rel, text, errs)
+    check_bench_table(_read("README.md"), errs, write=False)
+    if errs:
+        print("DOCS CHECK FAILED:", file=sys.stderr)
+        for e in errs:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"docs check OK ({len(DOCS)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,9 +2,13 @@
 # CI entry point: tier-1 test suite, then the benchmark harness in smoke
 # mode (snapshot + nodeprog + writepath + coordination — the last one
 # covers the tau sweep's aggressive-concurrency corner, the historical
-# oracle CycleError).  Exits non-zero on ANY failure (pytest failure,
-# benchmark exception, or equivalence-bit regression — benchmarks/run.py
-# already exits 1 if any module raises).
+# oracle CycleError; nodeprog's smoke includes the ragged
+# get_edges/clustering section), then the docs consistency check
+# (README/docs exist, links + WeaverConfig/Counters/module references
+# resolve, README results table matches the checked-in BENCH files).
+# Exits non-zero on ANY failure (pytest failure, benchmark exception,
+# equivalence-bit regression, or docs drift — benchmarks/run.py already
+# exits 1 if any module raises).
 #
 # Usage: scripts/ci.sh            # from anywhere; cd's to the repo root
 # Deps:  requirements-dev.txt (pinned); jax/numpy come with the image.
@@ -18,5 +22,8 @@ python -m pytest -x -q
 
 echo "=== benchmarks (smoke) ==="
 python -m benchmarks.run --smoke
+
+echo "=== docs check ==="
+python scripts/check_docs.py
 
 echo "=== CI OK ==="

@@ -1,7 +1,8 @@
 """JAX data-plane bridge: multi-version snapshots -> arrays -> traversals.
 
 This is the TPU-native adaptation of Weaver's node-program execution
-(DESIGN.md §3).  The control plane (shards) owns the multi-version graph;
+(see docs/ARCHITECTURE.md).  The control plane (shards) owns the
+multi-version graph;
 the data plane materializes a *snapshot at a refinable timestamp* as flat
 arrays and runs traversal node programs as frontier message-passing
 (`lax.while_loop` + segment reductions) — the same scatter-gather regime
@@ -1155,16 +1156,65 @@ def build_csr(edge_src: np.ndarray, edge_dst: np.ndarray, n_nodes: int,
     return indptr, dst
 
 
+def intersect_counts(a_lo: np.ndarray, a_hi: np.ndarray,
+                     a_vals: np.ndarray, a_keys: np.ndarray,
+                     a_pref: np.ndarray,
+                     b_lo: np.ndarray, b_hi: np.ndarray,
+                     b_vals: np.ndarray, b_keys: np.ndarray,
+                     b_pref: np.ndarray) -> np.ndarray:
+    """``|A_i ∩ B_i|`` per pair over two keyed ragged tables, enumerating
+    the SMALLER side of each pair (min-degree-side intersection — robust
+    to power-law hubs: Σ min(|A|,|B|) work).
+
+    Each side is a set of sorted-unique rows inside a global value
+    array: per pair ``i``, row A is ``a_vals[a_lo[i]:a_hi[i]]`` and its
+    membership-probe target is ``a_keys``, the side's globally-ascending
+    packed ``(row prefix << 32) | value`` array, with ``a_pref[i]`` the
+    pair's row prefix in that key space (same for side B).  Enumerated
+    values of the smaller row are probed against the larger side's key
+    array with ONE global ``searchsorted`` per direction.
+
+    Shared by :func:`clustering_coefficients_np` (both sides are rows of
+    one snapshot CSR, prefix = node index) and the frontier runtime's
+    wedge-closing phase (side A = the message's packed neighbour lists,
+    prefix = ragged row; side B = the shard plan's dedup'd CSR slice,
+    prefix = vertex gid).
+    """
+    la = a_hi - a_lo
+    lb = b_hi - b_lo
+    n = la.size
+    counts = np.zeros(n, np.int64)
+    for mask, (e_lo, e_len, e_vals), (p_keys, p_pref) in (
+            (la <= lb, (a_lo, la, a_vals), (b_keys, b_pref)),
+            (la > lb, (b_lo, lb, b_vals), (a_keys, a_pref))):
+        sel = np.nonzero(mask)[0]
+        if sel.size == 0:
+            continue
+        ln = e_len[sel]
+        total = int(ln.sum())
+        if total == 0 or p_keys.size == 0:
+            continue
+        off = np.repeat(np.cumsum(ln) - ln, ln)
+        w = e_vals[np.arange(total, dtype=np.int64) - off
+                   + np.repeat(e_lo[sel], ln)]
+        pair = np.repeat(sel, ln)
+        probe = (p_pref[pair].astype(np.int64) << 32) | w
+        loc = np.minimum(np.searchsorted(p_keys, probe), p_keys.size - 1)
+        hit = p_keys[loc] == probe
+        counts += np.bincount(pair[hit], minlength=n)
+    return counts
+
+
 def clustering_coefficients_np(edge_src: np.ndarray, edge_dst: np.ndarray,
                                n_nodes: int) -> np.ndarray:
     """Exact local clustering coefficient over out-neighbourhoods (matches
     the ``clustering`` node program).
 
     Sorted-CSR numpy, fully edge-parallel: ``links[u] = Σ_{v∈N(u)}
-    |N(v) ∩ N(u)|`` is evaluated as one ragged gather of every
-    neighbour-of-neighbour plus a single ``searchsorted`` membership
-    probe against the (already key-sorted) CSR edge keys — no per-vertex
-    Python loop, no O(deg²) set intersections.
+    |N(v) ∩ N(u)|`` via :func:`intersect_counts` over the (already
+    key-sorted) CSR — one pair per CSR edge ``(u, v)``, both rows living
+    in the same CSR, no per-vertex Python loop, no O(deg²) set
+    intersections.
     """
     indptr, nbrs = build_csr(edge_src, edge_dst, n_nodes, dedup=True,
                              drop_self_loops=True)
@@ -1173,24 +1223,12 @@ def clustering_coefficients_np(edge_src: np.ndarray, edge_dst: np.ndarray,
         return np.zeros(n_nodes, dtype=np.float64)
     u_of_pos = np.repeat(np.arange(n_nodes, dtype=np.int64), lens)
     keys = (u_of_pos << 32) | nbrs                  # sorted (CSR order)
-    # |N(v) ∩ N(u)| per CSR edge (u, v): enumerate the SMALLER of the two
-    # neighbour lists and membership-probe the larger via the global key
-    # array — Σ min(deg u, deg v) work, robust to power-law hubs
-    enum_node = np.where(lens[nbrs] <= lens[u_of_pos], nbrs, u_of_pos)
-    probe_node = np.where(lens[nbrs] <= lens[u_of_pos], u_of_pos, nbrs)
-    ln = lens[enum_node]
-    starts = indptr[enum_node]
-    total = int(ln.sum())
-    if total:
-        off = np.repeat(np.cumsum(ln) - ln, ln)
-        w = nbrs[np.arange(total) - off + np.repeat(starts, ln)]
-        probe = (np.repeat(probe_node, ln) << 32) | w
-        loc = np.minimum(np.searchsorted(keys, probe), keys.size - 1)
-        hit = keys[loc] == probe
-        links = np.bincount(np.repeat(u_of_pos, ln)[hit],
-                            minlength=n_nodes)
-    else:
-        links = np.zeros(n_nodes, dtype=np.int64)
+    v_of_pos = nbrs.astype(np.int64)
+    hits = intersect_counts(
+        indptr[v_of_pos], indptr[v_of_pos + 1], nbrs, keys, v_of_pos,
+        indptr[u_of_pos], indptr[u_of_pos + 1], nbrs, keys, u_of_pos)
+    links = np.bincount(u_of_pos, weights=hits,
+                        minlength=n_nodes).astype(np.int64)
     k = lens.astype(np.float64)
     denom = np.maximum(k * (k - 1.0), 1.0)
     return np.where(lens >= 2, links / denom, 0.0)

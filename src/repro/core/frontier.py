@@ -23,10 +23,19 @@ against the stamped columns the partition already maintains
   rebuild happens only on first contact, when the compaction-event
   history no longer covers the plan's cursor, or when the new query
   stamp does not dominate the plan stamp.
-* :class:`Frontier` — the packed exchange unit: a gid array plus an
-  optional per-entry float payload (e.g. sssp distances) and a shared
-  ``meta`` dict.  Shards exchange ONE such message per destination shard
-  per hop instead of one ``(dst, params)`` tuple per emitted vertex.
+* :class:`Frontier` — the packed exchange unit: a gid array plus
+  optional per-entry float (``vals``, e.g. sssp distances) and int
+  (``tags``) payload columns, an optional :class:`Ragged` side table
+  (per-entry variable-length payloads, e.g. the clustering protocol's
+  packed neighbour lists), and a shared ``meta`` dict.  Shards exchange
+  ONE such message per destination shard per hop instead of one
+  ``(dst, params)`` tuple per emitted vertex.
+* :class:`Ragged` / :class:`RaggedReply` — segment-offset ragged
+  columns for neighbourhood-returning queries: ``Ragged`` rides inside
+  a frontier (wire side), ``RaggedReply`` is the *output* payload kind
+  (``get_edges`` returns every delivered entry's full edge list —
+  eids, endpoints, optional property columns — from one batched gather
+  over the plan's sorted-CSR slice).
 * :func:`execute_step` — runs a program's registered ``frontier_step``
   (see ``nodeprog.frontier_impl``) over one plan + frontier, returning
   the batch outputs, the global next frontier and the charged service
@@ -61,13 +70,168 @@ from .clock import NO_STAMP, Order, Stamp, compare
 
 
 @dataclass
+class Ragged:
+    """Segment-offset ragged columns: R rows of variable length packed as
+    CSR-style ``(offsets, values)``.
+
+    The exchange unit for *per-entry variable-length* payloads (the
+    structural gap between OLTP-style point replies and analytics-style
+    neighbourhood-returning queries): ``offsets`` has shape ``(R+1,)``
+    and row ``i`` is ``values[offsets[i]:offsets[i+1]]``.  ``keys`` is an
+    optional per-ROW int64 column (e.g. the origin gid of each packed
+    neighbour list) and ``extra`` holds named per-POSITION int64 columns
+    aligned with ``values``.  A :class:`Frontier` carrying a ``Ragged``
+    uses its ``tags`` as row indices into it (see ``Frontier``)."""
+
+    offsets: np.ndarray                    # (R+1,) int64 row bounds
+    values: np.ndarray                     # (T,) int64, T = offsets[-1]
+    keys: Optional[np.ndarray] = None      # (R,) int64 per-row key
+    extra: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    def __len__(self) -> int:              # number of rows
+        return int(self.offsets.size - 1)
+
+    def lens(self) -> np.ndarray:
+        return self.offsets[1:] - self.offsets[:-1]
+
+    def nbytes(self) -> int:
+        n = 8 * (self.offsets.size + self.values.size)
+        if self.keys is not None:
+            n += 8 * self.keys.size
+        for col in self.extra.values():
+            n += 8 * col.size
+        return n
+
+    def take(self, rows: np.ndarray) -> "Ragged":
+        """Row subset (new compact numbering) — used to pack ONE message
+        per destination shard with only the rows its entries reference."""
+        rows = np.asarray(rows, np.int64)
+        ln = self.lens()[rows]
+        off = np.concatenate([np.zeros(1, np.int64), np.cumsum(ln)])
+        total = int(off[-1])
+        if total:
+            pos = (np.arange(total, dtype=np.int64)
+                   - np.repeat(off[:-1], ln) + np.repeat(self.offsets[rows], ln))
+        else:
+            pos = np.zeros(0, np.int64)
+        return Ragged(
+            offsets=off, values=self.values[pos],
+            keys=None if self.keys is None else self.keys[rows],
+            extra={k: v[pos] for k, v in self.extra.items()})
+
+    @staticmethod
+    def concat(parts: List["Ragged"]) -> "Ragged":
+        """Row-wise concatenation (coalesced deliveries); a consumer's
+        ``tags`` into part ``i`` must be rebased by the row offset
+        ``sum(len(parts[:i]))`` — :func:`_merge_frontiers` does."""
+        if len(parts) == 1:
+            return parts[0]
+        totals = [int(p.offsets[-1]) for p in parts]
+        starts = [0] + list(np.cumsum(totals[:-1]))
+        offsets = np.concatenate(
+            [p.offsets[:-1] + s for p, s in zip(parts, starts)]
+            + [np.asarray([sum(totals)], np.int64)]).astype(np.int64)
+        keys = (None if parts[0].keys is None
+                else np.concatenate([p.keys for p in parts]))
+        extra = {k: np.concatenate([p.extra[k] for p in parts])
+                 for k in parts[0].extra}
+        return Ragged(offsets=offsets,
+                      values=np.concatenate([p.values for p in parts]),
+                      keys=keys, extra=extra)
+
+
+def ragged_offsets(lens: np.ndarray) -> np.ndarray:
+    """(R+1,) segment offsets from per-row lengths."""
+    return np.concatenate([np.zeros(1, np.int64),
+                           np.cumsum(np.asarray(lens, np.int64))])
+
+
+class RaggedReply:
+    """Ragged per-entry program OUTPUT: every delivered entry's full edge
+    list (ids + endpoints + optional property columns) from ONE batched
+    gather over the shard plan's sorted-CSR slice.
+
+    This is the reply-side payload *kind* (``kind == "ragged"``): the
+    scalar path ships one Python list per visited entry, the batched path
+    ships one of these per ``frontier_step`` — the coordinator (or
+    ``reduce``) decodes rows lazily via :meth:`lists`.  Gid→vid decoding
+    goes through the deployment-wide :class:`~repro.core.mvgraph.
+    VidIntern` (shared by construction, so the reference costs nothing on
+    the simulated wire); ``nbytes`` models the packed columns."""
+
+    kind = "ragged"
+
+    __slots__ = ("intern", "roots", "offsets", "eids", "dsts", "props")
+
+    def __init__(self, intern, roots: np.ndarray, offsets: np.ndarray,
+                 eids: np.ndarray, dsts: np.ndarray,
+                 props: Optional[Dict[str, list]] = None):
+        self.intern = intern
+        self.roots = roots                 # (R,) int64 root gids
+        self.offsets = offsets             # (R+1,) int64
+        self.eids = eids                   # (T,) edge ids
+        self.dsts = dsts                   # (T,) int64 dst gids
+        self.props = props                 # key -> (T,)-aligned value list
+
+    def __len__(self) -> int:
+        return int(self.roots.size)
+
+    def total(self) -> int:
+        return int(self.eids.size)
+
+    def nbytes(self) -> int:
+        n = 64 + 8 * (self.roots.size + self.offsets.size
+                      + self.eids.size + self.dsts.size)
+        if self.props:
+            n += 8 * self.total() * len(self.props)
+        return n
+
+    def lists(self) -> List[list]:
+        """Decode to the scalar path's per-entry form: one
+        ``[(eid, dst_vid), ...]`` list per root (plus a per-edge property
+        dict when property columns were requested)."""
+        vids = self.intern.vids
+        eids = self.eids.tolist()
+        dsts = self.dsts.tolist()
+        out: List[list] = []
+        for i in range(len(self)):
+            lo, hi = int(self.offsets[i]), int(self.offsets[i + 1])
+            if self.props is None:
+                out.append([(eids[p], vids[dsts[p]]) for p in range(lo, hi)])
+            else:
+                out.append([(eids[p], vids[dsts[p]],
+                             {k: col[p] for k, col in self.props.items()})
+                            for p in range(lo, hi)])
+        return out
+
+
+def reply_nbytes(outputs: List[object]) -> int:
+    """Simulated wire size of a report's output payload: ragged replies
+    model their packed columns, everything else the legacy 32B/output."""
+    n = 0
+    for o in outputs:
+        n += o.nbytes() if isinstance(o, RaggedReply) else 32
+    return n
+
+
+@dataclass
 class Frontier:
-    """Packed per-hop delivery: one message per destination shard."""
+    """Packed per-hop delivery: one message per destination shard.
+
+    ``tags`` is an optional per-entry int64 column; when ``ragged`` is
+    present, tags are ROW INDICES into it (the clustering protocol ships
+    each origin's packed neighbour list once per destination shard and
+    tags every (neighbour, origin) entry with its origin's row), and
+    routing/coalescing re-base them when rows are subset or
+    concatenated.  Without ``ragged``, tags are a plain integer payload
+    (e.g. per-origin reply counts on the wedge-closing return hop)."""
 
     gids: np.ndarray                       # (F,) int64 vertex intern ids
     vals: Optional[np.ndarray] = None      # (F,) float64 payload (sssp dist)
     depth: int = 0                         # hop depth (shared)
     meta: dict = field(default_factory=dict)   # shared params
+    tags: Optional[np.ndarray] = None      # (F,) int64 payload / ragged rows
+    ragged: Optional[Ragged] = None        # shared ragged side table
 
     def __len__(self) -> int:
         return int(self.gids.size)
@@ -77,6 +241,10 @@ class Frontier:
         n = 64 + 8 * self.gids.size
         if self.vals is not None:
             n += 8 * self.vals.size
+        if self.tags is not None:
+            n += 8 * self.tags.size
+        if self.ragged is not None:
+            n += self.ragged.nbytes()
         return n
 
 
@@ -214,6 +382,8 @@ class ShardPlan:
             self.esrc = np.zeros(0, np.int64)
             self.edst = np.zeros(0, np.int64)
             self.eslot = np.zeros(0, np.int64)
+
+        self._uadj: Optional[tuple] = None   # lazy dedup'd adjacency
 
         # rows whose visibility can still change as the stamp advances
         self.v_unsettled = np.nonzero(self._unsett(vc, vd, cb, db))[0]
@@ -481,6 +651,7 @@ class ShardPlan:
             self._refresh_prop_cache(t, pt, ids)
 
         self._recheck_settled()
+        self._uadj = None                  # CSR slice may have changed
         self.last_refresh_rows = int(ids_v.size + ids_e.size) + n_prop
         return True
 
@@ -559,6 +730,24 @@ class ShardPlan:
     def out_degree(self, gids: np.ndarray) -> np.ndarray:
         lo, hi = self.edge_ranges(gids)
         return hi - lo
+
+    def edge_eids(self, pos: np.ndarray) -> np.ndarray:
+        """Edge id per CSR position (``get_edges`` ragged replies)."""
+        return self.cols.e_eid.view()[self.eslot[np.asarray(pos, np.int64)]]
+
+    def unique_adj(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Sorted-UNIQUE adjacency over the CSR slice: ``(keys, src,
+        dst)`` with ``keys = (src gid << 32) | dst gid`` ascending
+        (parallel edges collapse to one neighbour — set semantics for
+        wedge closing).  Cached per plan state; a delta refresh
+        invalidates it.  Row slices come from ``searchsorted`` on the
+        ``src`` half; the key array doubles as the membership-probe
+        target of :func:`repro.core.analytics.intersect_counts`."""
+        if self._uadj is None:
+            ukey = np.unique(self._ekey)
+            self._uadj = (ukey, ukey >> 32,
+                          ukey & np.int64(0xFFFFFFFF))
+        return self._uadj
 
     # ------------------------------------------------------------ properties
     def _prop_arrays(self, table: str, key: str):
@@ -652,8 +841,7 @@ class BatchContext:
         self.intern = intern
         self.cost = cost
         self.outputs: List[object] = []
-        self.emit_gids: List[np.ndarray] = []
-        self.emit_vals: List[Optional[np.ndarray]] = []
+        self.emits: List[tuple] = []       # (gids, vals, tags, ragged)
         self.next_meta: Optional[dict] = None
         self.service = 0.0
 
@@ -668,10 +856,14 @@ class BatchContext:
         self.outputs.append(value)
 
     def emit(self, gids: np.ndarray, vals: Optional[np.ndarray] = None,
-             meta: Optional[dict] = None) -> None:
-        self.emit_gids.append(np.asarray(gids, np.int64))
-        self.emit_vals.append(None if vals is None
-                              else np.asarray(vals, np.float64))
+             meta: Optional[dict] = None,
+             tags: Optional[np.ndarray] = None,
+             ragged: Optional[Ragged] = None) -> None:
+        self.emits.append((
+            np.asarray(gids, np.int64),
+            None if vals is None else np.asarray(vals, np.float64),
+            None if tags is None else np.asarray(tags, np.int64),
+            ragged))
         if meta is not None:
             self.next_meta = meta
 
@@ -689,18 +881,12 @@ def execute_step(plan: ShardPlan, prog, frontier: Frontier, state: dict,
     ctx = BatchContext(plan, intern, cost)
     prog.frontier_step(plan, frontier, state, ctx)
     nxt = None
-    if ctx.emit_gids:
-        gids = np.concatenate(ctx.emit_gids)
-        if gids.size:
-            if any(v is not None for v in ctx.emit_vals):
-                vals = np.concatenate([
-                    v if v is not None else np.zeros(g.size)
-                    for g, v in zip(ctx.emit_gids, ctx.emit_vals)])
-            else:
-                vals = None
-            nxt = Frontier(gids=gids, vals=vals, depth=frontier.depth + 1,
-                           meta=(ctx.next_meta if ctx.next_meta is not None
-                                 else frontier.meta))
+    meta = ctx.next_meta if ctx.next_meta is not None else frontier.meta
+    parts = [Frontier(gids=g, vals=v, depth=frontier.depth + 1, meta=meta,
+                      tags=t, ragged=r)
+             for g, v, t, r in ctx.emits if g.size]
+    if parts:
+        nxt = _merge_frontiers(parts)
     return ctx.outputs, nxt, ctx.service
 
 
@@ -728,7 +914,8 @@ def run_local(weaver, name: str, entries, at: Stamp,
               shard_of: Optional[Callable[[str], Optional[int]]] = None,
               refine_oracle: bool = True,
               on_hop: Optional[Callable[[int], None]] = None,
-              plan_delta: bool = True):
+              plan_delta: bool = True,
+              plans: Optional[Dict[int, "ShardPlan"]] = None):
     """Execute program ``name`` at stamp ``at`` synchronously.
 
     Returns ``(result, stats)`` where stats counts hops, messages and
@@ -741,7 +928,12 @@ def run_local(weaver, name: str, entries, at: Stamp,
     benchmarks use it to commit writes *between* hops; snapshot
     isolation at ``at`` means results must not change.  ``plan_delta=
     False`` forces a cold plan rebuild whenever a shard's columns
-    changed (the benchmark's write-churn baseline).
+    changed (the benchmark's write-churn baseline).  ``plans`` is an
+    optional PERSISTENT per-shard plan dict — the synchronous analogue
+    of the shard event loop's stamp-keyed plan LRU: a read stream passes
+    the same dict across calls so settled plans are reused (or
+    delta-refreshed) instead of cold-rebuilt per query, exactly like the
+    simulated system (``Shard._frontier_plan``).
     """
     import time as _time
     from .nodeprog import REGISTRY, run_entries_scalar
@@ -794,18 +986,18 @@ def run_local(weaver, name: str, entries, at: Stamp,
         batched = froot is not None
 
     if batched:
-        plans: Dict[int, ShardPlan] = {}
+        if plans is None:
+            plans = {}
         states: Dict[int, dict] = {}
         # route roots
-        pending: Dict[int, Frontier] = {}
-        for sid, gs in _route_gids(froot.gids, froot.vals, intern,
-                                   place).items():
-            pending[sid] = Frontier(gs[0], gs[1], froot.depth, froot.meta)
+        pending: Dict[int, Frontier] = route_frontier(froot, intern, place)
         while pending:
             stats["hops"] += 1
             hop_plan = 0.0
             nxt: Dict[int, List[Frontier]] = {}
-            for sid, fr in pending.items():
+            # ascending-sid iteration keeps output order deterministic
+            # AND aligned with the scalar branch (same shard sequence)
+            for sid, fr in sorted(pending.items()):
                 stats["messages"] += 1
                 stats["batches"] += 1
                 stats["entries"] += len(fr)
@@ -830,11 +1022,9 @@ def run_local(weaver, name: str, entries, at: Stamp,
                     intern, sh.cost)
                 outputs.extend(outs)
                 if out_fr is not None:
-                    for nsid, gs in _route_gids(out_fr.gids, out_fr.vals,
-                                                intern, place).items():
-                        nxt.setdefault(nsid, []).append(
-                            Frontier(gs[0], gs[1], out_fr.depth,
-                                     out_fr.meta))
+                    for nsid, nfr in route_frontier(out_fr, intern,
+                                                    place).items():
+                        nxt.setdefault(nsid, []).append(nfr)
             pending = {sid: _merge_frontiers(frs)
                        for sid, frs in nxt.items()}
             stats["plan_seconds_by_hop"].append(hop_plan)
@@ -850,7 +1040,7 @@ def run_local(weaver, name: str, entries, at: Stamp,
         while pending_s:
             stats["hops"] += 1
             nxt_s: Dict[int, list] = {}
-            for sid, ent in pending_s.items():
+            for sid, ent in sorted(pending_s.items()):
                 stats["messages"] += 1
                 stats["entries"] += len(ent)
                 sh = shards[sid]
@@ -869,10 +1059,9 @@ def run_local(weaver, name: str, entries, at: Stamp,
     return prog.reduce(outputs), stats
 
 
-def _route_gids(gids: np.ndarray, vals: Optional[np.ndarray], intern, place):
-    """Split a global frontier by destination shard (vectorized groupby
-    over a lazily-extended gid -> shard map)."""
-    out: Dict[int, tuple] = {}
+def _shard_groups(gids: np.ndarray, intern, place) -> Dict[int, np.ndarray]:
+    """Destination shard -> entry-index array (stable order)."""
+    out: Dict[int, np.ndarray] = {}
     if gids.size == 0:
         return out
     vids = intern.vids
@@ -889,15 +1078,56 @@ def _route_gids(gids: np.ndarray, vals: Optional[np.ndarray], intern, place):
         sid = int(sg[st])
         if sid < 0:
             continue
-        sel = order[st:bounds[i + 1]]
-        out[sid] = (gids[sel], None if vals is None else vals[sel])
+        out[sid] = order[st:bounds[i + 1]]
+    return out
+
+
+def route_frontier(fr: Frontier, intern, place) -> Dict[int, Frontier]:
+    """Split a next-hop frontier into ONE packed message per destination
+    shard.  Per-entry columns (gids / vals / tags) are sliced; a shared
+    ``ragged`` side table is SUBSET to the rows the destination's entries
+    reference (``Ragged.take``) and the tags re-based to the compact row
+    numbering — each shard receives every origin's packed list exactly
+    once, never the whole table."""
+    out: Dict[int, Frontier] = {}
+    for sid, sel in _shard_groups(fr.gids, intern, place).items():
+        tags = None if fr.tags is None else fr.tags[sel]
+        ragged = fr.ragged
+        if ragged is not None and tags is not None:
+            rows = np.unique(tags)
+            ragged = ragged.take(rows)
+            tags = np.searchsorted(rows, tags)
+        out[sid] = Frontier(fr.gids[sel],
+                            None if fr.vals is None else fr.vals[sel],
+                            fr.depth, fr.meta, tags=tags, ragged=ragged)
     return out
 
 
 def _merge_frontiers(frs: List[Frontier]) -> Frontier:
+    """Concatenate same-(prog, stamp, depth, meta) frontiers into one
+    execution unit.  Mixed optional columns backfill (0.0 vals / -1
+    tags); ragged side tables concatenate row-wise with the owning
+    frontier's tags re-based by its row offset."""
     if len(frs) == 1:
         return frs[0]
     gids = np.concatenate([f.gids for f in frs])
-    vals = (np.concatenate([f.vals for f in frs])
-            if frs[0].vals is not None else None)
-    return Frontier(gids, vals, frs[0].depth, frs[0].meta)
+    vals = None
+    if any(f.vals is not None for f in frs):
+        vals = np.concatenate([
+            f.vals if f.vals is not None else np.zeros(f.gids.size)
+            for f in frs])
+    tags = None
+    ragged = None
+    if any(f.ragged is not None for f in frs):
+        withr = [f for f in frs if f.ragged is not None]
+        assert len(withr) == len(frs), "mixed ragged/plain frontiers"
+        ragged = Ragged.concat([f.ragged for f in frs])
+        row_off = np.cumsum([0] + [len(f.ragged) for f in frs[:-1]])
+        tags = np.concatenate([f.tags + off
+                               for f, off in zip(frs, row_off)])
+    elif any(f.tags is not None for f in frs):
+        tags = np.concatenate([
+            f.tags if f.tags is not None
+            else np.full(f.gids.size, -1, np.int64) for f in frs])
+    return Frontier(gids, vals, frs[0].depth, frs[0].meta,
+                    tags=tags, ragged=ragged)

@@ -277,6 +277,15 @@ class _GrowFloats(_GrowInts):
         self.buf = np.empty((cap,), np.float64)
 
 
+class _GrowInts64(_GrowInts):
+    """Growable (N,) int64 vector (edge ids are client-side 64-bit:
+    ``(client_id << 32) | counter``)."""
+
+    def __init__(self, cap: int = 64) -> None:
+        self.n = 0
+        self.buf = np.empty((cap,), np.int64)
+
+
 class _PropTable:
     """Append-only property-version columns for one owner table.
 
@@ -482,6 +491,7 @@ class PartitionColumns:
         # edge table
         self.e_src = _GrowInts()
         self.e_dst = _GrowInts()
+        self.e_eid = _GrowInts64()        # edge id (get_edges replies)
         self.e_create = _GrowRows(self.c)
         self.e_delete = _GrowRows(self.c)
         self.e_create_stamp: List[Optional[Stamp]] = []
@@ -537,7 +547,8 @@ class PartitionColumns:
         self._batch = {
             "v_base": self.n_v, "e_base": self.n_e,
             "v_gid": [], "v_create": [], "v_delete": [],
-            "e_src": [], "e_dst": [], "e_create": [], "e_delete": [],
+            "e_src": [], "e_dst": [], "e_eid": [],
+            "e_create": [], "e_delete": [],
             "v_patch": [], "e_patch": [],
         }
         self.v_props.begin_batch()
@@ -553,6 +564,7 @@ class PartitionColumns:
         if b["e_src"]:
             self.e_src.extend(np.asarray(b["e_src"], np.int32))
             self.e_dst.extend(np.asarray(b["e_dst"], np.int32))
+            self.e_eid.extend(np.asarray(b["e_eid"], np.int64))
             self.e_create.extend(np.stack(b["e_create"]))
             self.e_delete.extend(np.stack(b["e_delete"]))
         if b["v_patch"]:
@@ -645,12 +657,14 @@ class PartitionColumns:
             if b is None:
                 self.e_slot[key] = self.e_src.append(sg)
                 self.e_dst.append(dg)
+                self.e_eid.append(eid)
                 self.e_create.append(row)
                 self.e_delete.append(self._no_row)
             else:
                 self.e_slot[key] = b["e_base"] + len(b["e_src"])
                 b["e_src"].append(sg)
                 b["e_dst"].append(dg)
+                b["e_eid"].append(eid)
                 b["e_create"].append(row)
                 b["e_delete"].append(self._no_row)
             self.e_create_stamp.append(ts)
@@ -761,6 +775,7 @@ class PartitionColumns:
         # edge table
         self.e_src.reset_to(self.e_src.view()[ek])
         self.e_dst.reset_to(self.e_dst.view()[ek])
+        self.e_eid.reset_to(self.e_eid.view()[ek])
         self.e_create.reset_to(self.e_create.view()[ek])
         self.e_delete.reset_to(self.e_delete.view()[ek])
         ek_l = ek.tolist()

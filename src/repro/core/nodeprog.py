@@ -29,11 +29,16 @@ A program may additionally register a **vectorized** implementation:
 
 The shard picks the path per query: batched iff a ``frontier_step``
 exists AND the root packs cleanly — a deterministic function of
-``(name, root entries)``, so all shards of one query agree.  Programs
-without a vectorized form (``clustering``, ``get_edges``) transparently
-fall back to the scalar interpreter (:func:`run_entries_scalar`), which
-is also the equivalence oracle: both paths must produce identical
-reduced results at the same stamp.
+``(name, root entries)``, so all shards of one query agree.  EVERY
+built-in program now has a vectorized form ("no scalar programs left"):
+``get_edges`` returns ragged per-entry edge lists as one
+:class:`~repro.core.frontier.RaggedReply` per step, and ``clustering``
+runs a 3-phase wedge-closing protocol with packed neighbour lists in a
+:class:`~repro.core.frontier.Ragged` side table.  Deliveries that do
+not pack (heterogeneous per-entry params, unhashable filter constants)
+transparently fall back to the scalar interpreter
+(:func:`run_entries_scalar`), which is also the equivalence oracle:
+both paths must produce identical reduced results at the same stamp.
 """
 
 from __future__ import annotations
@@ -43,7 +48,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .frontier import Frontier, ensure_state
+from .frontier import (Frontier, Ragged, RaggedReply, ensure_state,
+                       ragged_offsets)
 
 
 @dataclass
@@ -229,9 +235,32 @@ def get_node(node: NodeView, params, ctx: ProgContext) -> None:
     ctx.output({"id": node.id, "n_edges": len(node.out_edges)})
 
 
-@register("get_edges", reduce=lambda xs: xs[0] if xs else [])
+def _edge_lists(xs: List[object]) -> List[list]:
+    """Expand ``get_edges`` outputs to per-entry edge lists: the scalar
+    path ships one Python list per visited entry, the batched path one
+    :class:`~repro.core.frontier.RaggedReply` per ``frontier_step``."""
+    out: List[list] = []
+    for x in xs:
+        if isinstance(x, RaggedReply):
+            out.extend(x.lists())
+        else:
+            out.append(x)
+    return out
+
+
+@register("get_edges", reduce=lambda xs: (_edge_lists(xs) or [[]])[0])
 def get_edges(node: NodeView, params, ctx: ProgContext) -> None:
-    ctx.output([(e.eid, e.dst) for e in node.out_edges])
+    """TAO-workload edge-list read: the visited vertex's full out-edge
+    list in canonical eid-ascending order (both execution paths agree on
+    it).  ``params={"props": (key, ...)}`` additionally returns each
+    edge's value for the named property keys."""
+    want = params.get("props") if isinstance(params, dict) else None
+    edges = sorted(node.out_edges, key=lambda e: e.eid)
+    if want:
+        ctx.output([(e.eid, e.dst, {k: e.prop(k) for k in want})
+                    for e in edges])
+    else:
+        ctx.output([(e.eid, e.dst) for e in edges])
 
 
 @register("count_edges", reduce=lambda xs: sum(xs))
@@ -516,6 +545,193 @@ def _block_render_root(entries, intern):
     if params is None:
         return None
     return _pack_simple(entries, intern, meta={"hop": params.get("hop", 0)})
+
+
+def _get_edges_ok(params) -> bool:
+    if params is None:
+        return True
+    if not isinstance(params, dict):
+        return False
+    want = params.get("props")
+    if want is None:
+        return True
+    return (isinstance(want, (list, tuple))
+            and all(isinstance(k, str) for k in want))
+
+
+REGISTRY["get_edges"].frontier_ok = _get_edges_ok
+
+
+@frontier_root("get_edges")
+def _get_edges_root(entries, intern):
+    params = _uniform_params(entries)
+    if params is None or not _get_edges_ok(params):
+        return None
+    return _pack_simple(entries, intern)
+
+
+@frontier_impl("get_edges")
+def _get_edges_step(plan, fr, state, ctx) -> None:
+    """Ragged per-entry output: every delivered entry's full edge list
+    (eids + endpoints + requested property columns) in ONE batched
+    gather over the plan's sorted-CSR slice, shipped as a single
+    :class:`~repro.core.frontier.RaggedReply` payload."""
+    vis = plan.vertex_visible(fr.gids)
+    g = fr.gids[vis]                 # duplicates preserved: the scalar
+    ctx.charge(n_visit=len(fr))      # path outputs once per delivery
+    pos, src_idx, ln = plan.gather_edges(g)
+    ctx.charge(n_edges=int(ln.sum()))
+    eids = plan.edge_eids(pos).astype(np.int64)
+    order = np.lexsort((eids, src_idx))   # canonical: eid asc per entry
+    pos, eids = pos[order], eids[order]
+    props = None
+    want = fr.meta.get("props")
+    if want:
+        props = {}
+        for key in want:
+            ids, _ = plan.edge_prop(key)
+            props[key] = [plan.value_of(int(i))
+                          for i in ids[pos].tolist()]
+    ctx.output(RaggedReply(ctx.intern, g, ragged_offsets(ln), eids,
+                           plan.edst[pos], props))
+
+
+def _clustering_ok(params) -> bool:
+    return params is None or (isinstance(params, dict)
+                              and params.get("phase", 0) == 0)
+
+
+REGISTRY["clustering"].frontier_ok = _clustering_ok
+
+
+@frontier_root("clustering")
+def _clustering_root(entries, intern):
+    params = _uniform_params(entries)
+    if params is None or params.get("phase", 0) != 0:
+        return None
+    return _pack_simple(entries, intern, meta={"cl_phase": 0})
+
+
+@frontier_impl("clustering")
+def _clustering_step(plan, fr, state, ctx) -> None:
+    """3-phase wedge-closing protocol, the batched mirror of the scalar
+    program's fan-out/fan-in:
+
+    * phase 0 (roots) — compute each visible root's sorted-unique
+      neighbour list from the CSR slice and emit ONE entry per
+      ``(neighbour, origin)`` pair; the origins' packed lists travel
+      once per destination shard as the frontier's ragged side table
+      (entry ``tags`` = origin row).
+    * phase 1 (neighbours) — close wedges with ONE vectorized
+      min-degree-side sorted intersection per pair
+      (``analytics.intersect_counts``) between the shipped neighbour
+      lists and the local dedup'd CSR; replies are pre-reduced per
+      origin per shard (summed hits + reply count in ``vals``/``tags``).
+      An invisible neighbour never replies — exactly the scalar path,
+      whose origin then never completes (reduce falls back to 0.0).
+    * phase 2 (back at the origins) — accumulate ``links``/``replies``
+      per-origin state; an origin whose reply count reaches its
+      neighbour count outputs ``links / (k (k-1))``.
+
+    Root entries are deduplicated (duplicate roots make the scalar
+    protocol's reply counting self-interfere; roots are unique in every
+    workload)."""
+    ph = fr.meta.get("cl_phase", 0)
+    if ph == 0:
+        _cl_collect(plan, fr, state, ctx)
+    elif ph == 1:
+        _cl_close(plan, fr, state, ctx)
+    else:
+        _cl_reduce(plan, fr, state, ctx)
+
+
+def _cl_state(state, n):
+    return (ensure_state(state, "cl_k", n, 0, np.int64),
+            ensure_state(state, "cl_links", n, 0, np.int64),
+            ensure_state(state, "cl_replies", n, 0, np.int64))
+
+
+def _cl_collect(plan, fr, state, ctx) -> None:
+    ctx.charge(n_visit=len(fr))
+    g = np.unique(fr.gids[plan.vertex_visible(fr.gids)])
+    if g.size == 0:
+        return
+    pos, src_idx, ln = plan.gather_edges(g)
+    ctx.charge(n_edges=int(ln.sum()))
+    # sorted-unique neighbour list per root (set semantics: parallel
+    # edges collapse; a self-loop dst stays, matching the scalar nbrs)
+    ukey = np.unique((src_idx << 32) | plan.edst[pos])
+    offs = np.searchsorted(ukey >> 32,
+                           np.arange(g.size + 1, dtype=np.int64))
+    k = np.diff(offs)
+    for _ in range(int((k < 2).sum())):
+        ctx.output(0.0)
+    big = np.nonzero(k >= 2)[0]
+    if big.size == 0:
+        return
+    karr, links, replies = _cl_state(state, len(ctx.intern.vids))
+    gb = g[big]
+    karr[gb] = k[big]
+    links[gb] = 0
+    replies[gb] = 0
+    origins = Ragged(offsets=offs, values=ukey & np.int64(0xFFFFFFFF),
+                     keys=g).take(big)
+    tags = np.repeat(np.arange(big.size, dtype=np.int64), k[big])
+    ctx.emit(origins.values, tags=tags, ragged=origins,
+             meta={"cl_phase": 1})
+
+
+def _cl_close(plan, fr, state, ctx) -> None:
+    from . import analytics
+    visited = ensure_state(state, "cl_seen", len(ctx.intern.vids),
+                           False, bool)
+    seen = visited[fr.gids]
+    ctx.charge(n_visit=int((~seen).sum()), n_revisit=int(seen.sum()))
+    visited[fr.gids] = True
+    vis = plan.vertex_visible(fr.gids)
+    if not bool(vis.any()):
+        return
+    v = fr.gids[vis]
+    tag = fr.tags[vis]
+    rg = fr.ragged
+    ukey, usrc, udst = plan.unique_adj()
+    b_lo = np.searchsorted(usrc, v, side="left")
+    b_hi = np.searchsorted(usrc, v, side="right")
+    a_lo = rg.offsets[tag]
+    a_hi = rg.offsets[tag + 1]
+    row_of_pos = np.repeat(np.arange(len(rg), dtype=np.int64), rg.lens())
+    a_keys = (row_of_pos << 32) | rg.values
+    counts = analytics.intersect_counts(a_lo, a_hi, rg.values, a_keys, tag,
+                                        b_lo, b_hi, udst, ukey, v)
+    ctx.charge(n_edges=int(np.minimum(a_hi - a_lo, b_hi - b_lo).sum()))
+    # the w != v exclusion: v ∈ nbrs(origin) by construction, so the
+    # intersection counted it iff v has a local self-loop — subtract it
+    if ukey.size:
+        sl = (v << 32) | v
+        loc = np.minimum(np.searchsorted(ukey, sl), ukey.size - 1)
+        counts = counts - (ukey[loc] == sl).astype(np.int64)
+    # ONE packed reply per origin per shard: summed hits + reply count
+    og = rg.keys[tag]
+    order = np.argsort(og, kind="stable")
+    og_s, hits_s = og[order], counts[order]
+    uniq, start = np.unique(og_s, return_index=True)
+    sums = np.add.reduceat(hits_s, start)
+    cnts = np.diff(np.r_[start, og_s.size])
+    ctx.emit(uniq, vals=sums.astype(np.float64),
+             tags=cnts.astype(np.int64), meta={"cl_phase": 2})
+
+
+def _cl_reduce(plan, fr, state, ctx) -> None:
+    ctx.charge(n_revisit=len(fr))    # origins were visited in phase 0
+    karr, links, replies = _cl_state(state, len(ctx.intern.vids))
+    g = fr.gids
+    np.add.at(links, g, fr.vals.astype(np.int64))
+    np.add.at(replies, g, fr.tags)
+    uniq = np.unique(g)
+    done = uniq[(replies[uniq] == karr[uniq]) & (karr[uniq] >= 2)]
+    for o in done.tolist():
+        k = int(karr[o])
+        ctx.output(float(links[o]) / (k * (k - 1)))
 
 
 @frontier_impl("block_render")

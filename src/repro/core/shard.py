@@ -26,10 +26,14 @@ its own ``PartitionColumns`` at ``T_prog`` — and executes the whole
 delivered frontier in one vectorized step.  The next hop is exchanged as
 ONE packed :class:`~repro.core.frontier.Frontier` message per
 destination shard (O(shards) messages per hop) instead of one
-``(dst, params)`` entry per emitted vertex.  The path is chosen per
-query from ``(name, root entries)`` — deterministic, so all shards
-agree — and everything else (programs without a vectorized form,
-heterogeneous root params, unhashable filter constants, or
+``(dst, params)`` entry per emitted vertex.  Every built-in program has
+a vectorized step — including the ragged-output ``get_edges`` (one
+packed :class:`~repro.core.frontier.RaggedReply` per step) and the
+3-phase ``clustering`` wedge-closing protocol (packed neighbour lists
+in a :class:`~repro.core.frontier.Ragged` side table).  The path is
+chosen per query from ``(name, root entries)`` — deterministic, so all
+shards agree — and everything else (heterogeneous root params,
+unhashable filter constants, non-phase-0 clustering roots, or
 ``use_frontier=False``) falls back to the scalar per-vertex interpreter
 ``nodeprog.run_entries_scalar``, which remains the semantic oracle.
 
@@ -72,8 +76,9 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .clock import Order, Stamp, compare
-from .frontier import (Frontier, ShardPlan, _merge_frontiers, _route_gids,
-                       execute_step, maintain_plan)
+from .frontier import (Frontier, RaggedReply, ShardPlan, _merge_frontiers,
+                       execute_step, maintain_plan, reply_nbytes,
+                       route_frontier)
 from .gatekeeper import CostModel
 from .mvgraph import MVGraphPartition, VidIntern
 from .nodeprog import REGISTRY, run_entries_scalar
@@ -570,7 +575,12 @@ class Shard:
                          and p["stamp"].key() == prog["stamp"].key()
                          and isinstance(e, Frontier)
                          and e.depth == base.depth
-                         and (e.vals is None) == (base.vals is None))
+                         and (e.vals is None) == (base.vals is None)
+                         # ragged payload kinds merge only with their
+                         # own kind: tags/ragged concatenate row-wise
+                         # with tag re-base (_merge_frontiers)
+                         and (e.tags is None) == (base.tags is None)
+                         and (e.ragged is None) == (base.ragged is None))
             if mergeable:
                 try:
                     mergeable = bool(e.meta == base.meta)
@@ -621,13 +631,16 @@ class Shard:
                 self._plan_built_rows = 0
             n_entries = len(frontier)
             self.sim.counters.prog_entries_delivered += n_entries
+            for o in outputs:
+                if isinstance(o, RaggedReply):
+                    self.sim.counters.ragged_replies += 1
+                    self.sim.counters.ragged_values += o.total()
             if nxt is not None:
-                for sid, (gids, vals) in self._route(nxt).items():
+                for sid, out_fr in self._route(nxt).items():
                     self.sim.counters.shard_hops += 1
                     child_id = (self.sid, self._next_delivery())
                     children.append(child_id)
                     target = self.peers[sid]
-                    out_fr = Frontier(gids, vals, nxt.depth, nxt.meta)
                     self.sim.send(self, target, target.deliver_prog,
                                   prog_id, child_id, name, stamp, out_fr,
                                   coordinator, nbytes=out_fr.nbytes())
@@ -660,7 +673,7 @@ class Shard:
         self.sim.send(self, coordinator, coordinator.report, prog_id,
                       delivery_id, children, outputs,
                       frontier is not None, n_entries,
-                      nbytes=64 + 32 * len(outputs))
+                      nbytes=64 + reply_nbytes(outputs))
         # deliveries absorbed by coalescing: their entries/outputs/children
         # were charged to the merged execution above; they still must
         # report so the coordinator's delivery-id sets close (zero-entry,
@@ -670,10 +683,11 @@ class Shard:
                           did, [], [], False, 0, nbytes=32)
         return service
 
-    def _route(self, fr: Frontier) -> Dict[int, tuple]:
-        """Split a next-hop frontier by destination shard (shared groupby
-        with the synchronous driver)."""
-        return _route_gids(fr.gids, fr.vals, self.intern, self.directory)
+    def _route(self, fr: Frontier) -> Dict[int, Frontier]:
+        """Split a next-hop frontier into one packed message per
+        destination shard (shared groupby with the synchronous driver;
+        ragged side tables are subset per destination)."""
+        return route_frontier(fr, self.intern, self.directory)
 
     def _next_delivery(self) -> int:
         self._delivery_ctr = getattr(self, "_delivery_ctr", 0) + 1

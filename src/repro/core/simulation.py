@@ -80,6 +80,13 @@ class Counters:
     tx_batch_size_sum: int = 0     # transactions admitted across windows
     conflict_rows_checked: int = 0  # (tx, vid) last-update rows compared
     #                                 by the vectorized batch validator
+    ragged_replies: int = 0        # RaggedReply output payloads shipped
+    #                                by frontier steps (get_edges)
+    ragged_values: int = 0         # total edge positions across them
+    store_lastupdate_gcd: int = 0  # LastUpdateTable rows dropped by the
+    #                                store GC hook (≺ global horizon)
+    store_vertices_gcd: int = 0    # deleted StoredVertex records dropped
+    #                                by the store GC hook
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)

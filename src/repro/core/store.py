@@ -30,7 +30,7 @@ import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-from .clock import Stamp
+from .clock import Order, Stamp, compare
 from .mvgraph import VidIntern
 from .simulation import Simulator
 from .writepath import LastUpdateTable
@@ -270,6 +270,40 @@ class BackingStore:
             elif k in ("create_edge", "delete_edge", "set_edge_prop"):
                 out.append(op["src"])
         return out
+
+    # ---- GC (paper §4.5, at the store) --------------------------------------
+    def collect(self, horizon: Stamp) -> Tuple[int, int]:
+        """Store-side GC at the global horizon (every future stamp
+        dominates it):
+
+        * :class:`~repro.core.writepath.LastUpdateTable` rows strictly
+          before the horizon are dropped — absence means "no last
+          update", which validates identically (``upd ≺ tx`` holds by
+          transitivity), so the packed table stays bounded;
+        * ``StoredVertex.last_update`` stamps strictly before the
+          horizon are cleared to keep the dict mirror == packed table
+          (the per-tx path's ``compare`` walk reaches the same verdict
+          either way);
+        * :class:`StoredVertex` records DELETED strictly before the
+          horizon are dropped entirely — the shards purged those
+          versions at the same horizon, so recovery replay and the
+          vid -> shard directory agree (a dangling directory lookup now
+          returns None, same as a vertex that never existed).
+
+        Returns ``(lastupdate_rows_dropped, vertices_dropped)``."""
+        n_rows = self.last_updates.collect(horizon)
+        dead = [vid for vid, v in self.vertices.items()
+                if v.delete_ts is not None
+                and compare(v.delete_ts, horizon) is Order.BEFORE]
+        for vid in dead:
+            del self.vertices[vid]
+        for v in self.vertices.values():
+            if v.last_update is not None and compare(
+                    v.last_update, horizon) is Order.BEFORE:
+                v.last_update = None
+        self.sim.counters.store_lastupdate_gcd += n_rows
+        self.sim.counters.store_vertices_gcd += len(dead)
+        return n_rows, len(dead)
 
     # ---- recovery support ---------------------------------------------------
     def recover_shard(self, shard: int) -> List[dict]:

@@ -39,6 +39,12 @@ class ProgCoordinator:
     and keeps the per-program totals in ``last_prog_stats`` so
     benchmarks can show the per-hop message collapse: O(shards) packed
     messages instead of O(emitted vertices) entries.
+
+    Report payloads may be *ragged* (``repro.core.frontier.RaggedReply``
+    — ``get_edges`` ships one columnar edge-list block per shard step
+    instead of one Python list per entry): the wire model charges their
+    packed ``nbytes`` on the report message, and the program's
+    ``reduce`` decodes rows lazily at completion.
     """
 
     def __init__(self, sim: Simulator):
@@ -275,6 +281,9 @@ class Weaver:
             if sh.alive:
                 sh.collect(horizon)
         self.oracle.oracle.collect(horizon)
+        # store-side GC: bound the LastUpdateTable and drop long-deleted
+        # StoredVertex records (see BackingStore.collect)
+        self.store.collect(horizon)
 
     # ---- fault tolerance (§4.3) ------------------------------------------------
     def promote_backup(self, name: str) -> None:

@@ -125,7 +125,11 @@ class LastUpdateTable:
     The table mirrors ``StoredVertex.last_update`` exactly — it is
     updated at the same commit points (``BackingStore.apply`` /
     ``apply_batch``) over the same :meth:`BackingStore.write_set` vids;
-    ``tests/test_writepath.py`` property-tests the equivalence."""
+    ``tests/test_writepath.py`` property-tests the equivalence.
+    :meth:`collect` (driven by the store's GC hook) drops rows strictly
+    before the global GC horizon — absence classifies identically, so
+    the table stays bounded under churn instead of growing one row per
+    vertex ever written."""
 
     def __init__(self, intern: Optional[VidIntern] = None) -> None:
         self.intern = intern if intern is not None else VidIntern()
@@ -161,6 +165,38 @@ class LastUpdateTable:
             return None
         s = self.slot.get(g)
         return None if s is None else self.stamps[s]
+
+    def collect(self, horizon: Stamp) -> int:
+        """GC hook: drop every row whose stamp is strictly vector-before
+        the global GC horizon.  Any stamp a future transaction can carry
+        dominates the horizon, so for a dropped row ``upd ≺ tx`` holds
+        by transitivity — absence ("no last update") classifies as OK in
+        :func:`classify_write_sets`, exactly like the kept row would.
+        Bounds the table at O(recently-written vertices) instead of one
+        row per vertex ever written.  Returns the dropped-row count."""
+        if self.rows is None or self.rows.n == 0:
+            return 0
+        from .clock import _np_before
+        q = pack(horizon, len(horizon.clock))
+        view = self.rows.view()
+        if view.shape[1] != q.size:     # different G: epoch-0 leftovers
+            return 0
+        drop = _np_before(view, q)
+        n_drop = int(drop.sum())
+        if n_drop == 0:
+            return 0
+        keep = np.nonzero(~drop)[0]
+        gid_of_row = np.full(view.shape[0], -1, np.int64)
+        for g, r in self.slot.items():
+            gid_of_row[r] = g
+        nu = _GrowRows(self.c)
+        nu.extend(view[keep])
+        keep_l = keep.tolist()
+        self.stamps = [self.stamps[i] for i in keep_l]
+        self.slot = {int(gid_of_row[r]): i for i, r in enumerate(keep_l)
+                     if gid_of_row[r] >= 0}
+        self.rows = nu
+        return n_drop
 
     def gather(self, vids: Sequence[str]
                ) -> Tuple[np.ndarray, List[Optional[Stamp]]]:
