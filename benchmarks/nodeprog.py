@@ -166,7 +166,8 @@ def main() -> None:
         results = {}
         for mode, flag in (("frontier", True), ("scalar", False)):
             run = lambda: F.run_local(w, prog, entries, at,
-                                      use_frontier=flag, shard_of=place)
+                                      use_frontier=flag, shard_of=place,
+                                      persistent_plans=False)
             r, st = run()
             results[mode] = r
             msgstats[mode][qname] = st
@@ -216,11 +217,13 @@ def main() -> None:
                                     use_frontier=False, shard_of=place), 1)
             # cold: every call pays the per-shard plan builds
             r_f, st_f = F.run_local(w, prog, entries, at,
-                                    use_frontier=True, shard_of=place)
+                                    use_frontier=True, shard_of=place,
+                                    persistent_plans=False)
             msgstats["frontier"][qname] = st_f
             sec_cold = _median(
                 lambda: F.run_local(w, prog, entries, at,
-                                    use_frontier=True, shard_of=place), 3)
+                                    use_frontier=True, shard_of=place,
+                                    persistent_plans=False), 3)
             # warm: the deployed hot path — the shard's stamp-keyed plan
             # LRU keeps settled plans alive across queries, so a read
             # STREAM reuses them (plan_cold == 0 per call after warmup)
@@ -289,7 +292,8 @@ def main() -> None:
                 t0 = time.perf_counter()
                 r, st = F.run_local(w, prog, entries, at2,
                                     use_frontier=True, shard_of=place,
-                                    on_hop=churn, plan_delta=delta)
+                                    on_hop=churn, plan_delta=delta,
+                                    persistent_plans=False)
                 a = acc[mode]
                 a["walls"].append(time.perf_counter() - t0)
                 a["plans"].append(st["plan_seconds"])

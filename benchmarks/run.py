@@ -5,6 +5,7 @@ Prints ``name,metric,value`` CSV lines (simulated time; deterministic).
   snapshot       — snapshot materialization: columnar cold/delta vs seed
   nodeprog       — frontier-batched vs per-vertex node programs
   writepath      — group-commit write engine vs per-tx commits
+  recovery       — WAL-replay vs store-walk MTTR; goodput dip on failure
   block_query    — Fig. 7 / Table 2 (CoinGraph vs relational explorer)
   social         — Fig. 9 / Fig. 10 (TAO mix, Weaver vs 2PL)
   traversal      — Fig. 11 (node programs vs BSP sync/async)
@@ -18,7 +19,7 @@ silently skipped.
 
 ``--smoke`` (used by ``scripts/ci.sh``) sets ``REPRO_BENCH_SMOKE=1``
 (modules shrink their graph sizes / iteration counts) and runs only the
-snapshot + nodeprog + writepath + coordination modules — a
+snapshot + nodeprog + writepath + recovery + coordination modules — a
 minutes-scale end-to-end check that the data-plane benchmarks still
 build, run, and meet their equivalence bits (coordination rides along
 so the tau sweep's aggressive-concurrency corner — the historical
@@ -38,18 +39,18 @@ def main(argv=None) -> None:
     if smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
-    from . import (block_query, coordination, nodeprog, roofline,
+    from . import (block_query, coordination, nodeprog, recovery, roofline,
                    scalability, snapshot, social, traversal, writepath)
 
     modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
-               ("writepath", writepath),
+               ("writepath", writepath), ("recovery", recovery),
                ("block_query", block_query),
                ("social", social), ("traversal", traversal),
                ("scalability", scalability),
                ("coordination", coordination), ("roofline", roofline)]
     if smoke:
         modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
-                   ("writepath", writepath),
+                   ("writepath", writepath), ("recovery", recovery),
                    ("coordination", coordination)]
     t00 = time.time()
     failures = []

@@ -45,6 +45,7 @@ def render_bench_table() -> str:
     sn = _bench("BENCH_snapshot.json")
     npg = _bench("BENCH_nodeprog.json")
     wp = _bench("BENCH_writepath.json")
+    rc = _bench("BENCH_recovery.json")
     x = lambda v: f"{v:.1f}x"
     rows = [
         ("Snapshot engine", "cold columnar build vs seed per-object path",
@@ -75,14 +76,22 @@ def render_bench_table() -> str:
          f"{wp['mean_batch']:.1f}, message reduction "
          f"{wp['message_reduction']:.2f}x)",
          x(wp["speedup"])),
+        ("Recovery",
+         f"store-walk vs WAL-replay shard MTTR "
+         f"({rc['mttr'][-1]['n_users']} users, "
+         f"{rc['mttr'][-1]['replayed_ops']} replayed ops; shard failover "
+         f"{rc['goodput']['recovery_ms']:.0f} ms, 0 lost acks)",
+         x(rc["mttr"][-1]["walk_over_wal"])),
     ]
-    eq = all([sn["equivalent"], npg["equivalent"], wp["equivalent"]])
+    eq = all([sn["equivalent"], npg["equivalent"], wp["equivalent"],
+              rc["equivalent"]])
     out = ["| Benchmark | Headline metric | Speedup |", "|---|---|---|"]
     out += [f"| {a} | {b} | **{c}** |" for a, b, c in rows]
     out.append("")
     out.append(f"Equivalence bits: snapshot={int(sn['equivalent'])} "
                f"nodeprog={int(npg['equivalent'])} "
                f"writepath={int(wp['equivalent'])} "
+               f"recovery={int(rc['equivalent'])} "
                f"({'all identical to the scalar oracle' if eq else 'DIVERGED'}).")
     return "\n".join(out)
 

@@ -80,6 +80,14 @@ class ClusterManager:
             self.epoch += 1
             barrier_latency = 2 * self.sim.network.base_latency
             def _commit() -> None:
+                # fault injection: a SECOND failure during the barrier
+                # itself — the victim dies now and is detected by the
+                # normal heartbeat check once the barrier releases
+                if self.sim.fault is not None:
+                    for victim in self.sim.fault.barrier_victims():
+                        actor = self.members.get(victim)
+                        if actor is not None:
+                            actor.alive = False
                 for gk in self.weaver.gatekeepers:
                     gk.enter_epoch(self.epoch)
                 for sh in self.weaver.shards:

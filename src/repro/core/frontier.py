@@ -434,15 +434,21 @@ class ShardPlan:
 
     # --------------------------------------------------------- delta refresh
     def _consume_compactions(self, ch_v: List[np.ndarray],
-                             ch_e: List[np.ndarray]) -> Tuple[int, int]:
+                             ch_e: List[np.ndarray],
+                             ch_p: Dict[str, List[np.ndarray]]
+                             ) -> Tuple[int, int, Dict[str, int]]:
         """Catch up with column compactions (cursor known to be covered
-        by the event history).  Remaps every cached slot pointer to the
-        new numbering and recovers the unread pre-compaction patch
-        tails into ``ch_v`` / ``ch_e``.  Returns the consume cursors in
-        post-compaction numbering."""
+        by the event history).  Remaps every cached slot pointer —
+        including the property-row masks, via the event's
+        ``vp_map``/``ep_map`` — to the new numbering and recovers the
+        unread pre-compaction patch tails into ``ch_v`` / ``ch_e`` /
+        ``ch_p``.  Returns the consume cursors in post-compaction
+        numbering (the dict maps ``"v"``/``"e"`` to the consumed
+        property-row count)."""
         from . import analytics
         cols = self.cols
         nv0, ne0, lv0, le0, ev0 = self._consumed
+        p_cur = {t: list(self._p_consumed[t]) for t in ("v", "e")}
         for ev in cols.events[ev0 - cols.events_dropped:]:
             ch_v.append(analytics.patch_tail(ev.old_v_patch, lv0, nv0))
             ch_e.append(analytics.patch_tail(ev.old_e_patch, le0, ne0))
@@ -452,6 +458,18 @@ class ShardPlan:
             self.v_visible = self.v_visible[v_kept]
             self.e_vis = self.e_vis[e_kept]
             self.e_keep = self.e_keep[e_kept]
+            # property rows: same remap contract as the owner tables —
+            # O(changed) across the compaction, no full re-read
+            for t, pm, pp in (("v", ev.vp_map, ev.old_vp_patch),
+                              ("e", ev.ep_map, ev.old_ep_patch)):
+                pn0, pl0 = p_cur[t]
+                ch_p[t].append(analytics.patch_tail(pp, pl0, pn0))
+                p_kept = pm[:pn0] >= 0
+                self._p_before[t] = self._p_before[t][p_kept]
+                self.p_unsettled[t] = _remap_ids(pm, self.p_unsettled[t])
+                for i in range(len(ch_p[t])):
+                    ch_p[t][i] = _remap_ids(pm, ch_p[t][i])
+                p_cur[t] = [int(p_kept.sum()), 0]
             # CSR slice: renumber eslot, drop edges the compaction killed
             new_slot = analytics.remap_slots(ev.e_map, self.eslot)
             dead = np.nonzero(new_slot < 0)[0]
@@ -474,11 +492,12 @@ class ShardPlan:
         top = int(gids.max()) + 1 if cols.n_v else 1
         self._slot_of = np.full(top, -1, np.int64)
         self._slot_of[gids] = np.arange(cols.n_v, dtype=np.int64)
-        # property rows renumber without a recorded map: caches are
-        # dropped and the stamp masks re-read below (compactions are
-        # rare; the common delta path never lands here)
+        # owner slots renumbered, so the per-owner cached views are
+        # stale; dropped and rebuilt lazily on next access (pure column
+        # gather over the already-maintained _p_before masks — no stamp
+        # or oracle work)
         self._prop_cache = {}
-        return nv0, ne0
+        return nv0, ne0, {t: p_cur[t][0] for t in ("v", "e")}
 
     def refresh(self, at: Stamp,
                 refine_batch: Optional[Callable] = None) -> bool:
@@ -504,12 +523,14 @@ class ShardPlan:
 
         ch_v: List[np.ndarray] = []
         ch_e: List[np.ndarray] = []
+        ch_p: Dict[str, List[np.ndarray]] = {"v": [], "e": []}
         compacted = self._consumed[4] < cols.events_dropped + len(cols.events)
         if compacted:
-            nv0, ne0 = self._consume_compactions(ch_v, ch_e)
+            nv0, ne0, p_n0 = self._consume_compactions(ch_v, ch_e, ch_p)
             lv0 = le0 = 0
         else:
             nv0, ne0, lv0, le0, _ = self._consumed
+            p_n0 = None
         from . import analytics
         if len(cols.v_patch) > lv0:
             ch_v.append(analytics.patch_tail(cols.v_patch, lv0, nv0))
@@ -542,22 +563,20 @@ class ShardPlan:
             ids_e = np.union1d(ids_e, self.e_unsettled)
         p_ids: Dict[str, np.ndarray] = {}
         for t, pt in (("v", cols.v_props), ("e", cols.e_props)):
-            if compacted:
-                self._p_before[t] = np.zeros(pt.n, bool)
-                self.p_unsettled[t] = np.zeros(0, np.int64)
-                ids = np.arange(pt.n, dtype=np.int64)
-            else:
-                n0, lp0 = self._p_consumed[t]
-                chp: List[np.ndarray] = []
-                if len(pt.patch) > lp0:
-                    chp.append(analytics.patch_tail(pt.patch, lp0, n0))
-                if pt.n > n0:
-                    self._p_before[t] = np.concatenate(
-                        [self._p_before[t], np.zeros(pt.n - n0, bool)])
-                    chp.append(np.arange(n0, pt.n, dtype=np.int64))
-                ids = cat(chp)
-                if stamp_moved:
-                    ids = np.union1d(ids, self.p_unsettled[t])
+            # compacted: _consume_compactions already remapped the masks
+            # and recovered the unread pre-compaction tail into ch_p, so
+            # the same O(changed) delta path applies either way
+            n0, lp0 = (p_n0[t], 0) if compacted else self._p_consumed[t]
+            chp = ch_p[t]
+            if len(pt.patch) > lp0:
+                chp.append(analytics.patch_tail(pt.patch, lp0, n0))
+            if pt.n > n0:
+                self._p_before[t] = np.concatenate(
+                    [self._p_before[t], np.zeros(pt.n - n0, bool)])
+                chp.append(np.arange(n0, pt.n, dtype=np.int64))
+            ids = cat(chp)
+            if stamp_moved:
+                ids = np.union1d(ids, self.p_unsettled[t])
             p_ids[t] = ids
             self._p_consumed[t] = pt.cursor()
 
@@ -915,7 +934,8 @@ def run_local(weaver, name: str, entries, at: Stamp,
               refine_oracle: bool = True,
               on_hop: Optional[Callable[[int], None]] = None,
               plan_delta: bool = True,
-              plans: Optional[Dict[int, "ShardPlan"]] = None):
+              plans: Optional[Dict[int, "ShardPlan"]] = None,
+              persistent_plans: bool = True):
     """Execute program ``name`` at stamp ``at`` synchronously.
 
     Returns ``(result, stats)`` where stats counts hops, messages and
@@ -934,6 +954,15 @@ def run_local(weaver, name: str, entries, at: Stamp,
     the same dict across calls so settled plans are reused (or
     delta-refreshed) instead of cold-rebuilt per query, exactly like the
     simulated system (``Shard._frontier_plan``).
+
+    When ``plans`` is not given, a per-weaver dict is used by DEFAULT
+    (``persistent_plans=True``): repeated queries against the same
+    weaver reuse/delta-refresh plans across calls, mirroring the shard
+    plan LRU.  Pass ``persistent_plans=False`` (or an explicit fresh
+    ``plans={}``) to force per-call plan builds — benchmarks measuring
+    the cold path do.  The persistent dict is only used on the default
+    refined path (``refine_oracle=True``) so conservative-mode calls
+    never reuse a refined plan.
     """
     import time as _time
     from .nodeprog import REGISTRY, run_entries_scalar
@@ -987,7 +1016,10 @@ def run_local(weaver, name: str, entries, at: Stamp,
 
     if batched:
         if plans is None:
-            plans = {}
+            if persistent_plans and refine_oracle:
+                plans = weaver.__dict__.setdefault("_run_local_plans", {})
+            else:
+                plans = {}
         states: Dict[int, dict] = {}
         # route roots
         pending: Dict[int, Frontier] = route_frontier(froot, intern, place)

@@ -91,6 +91,7 @@ class Gatekeeper:
         self.sim = sim
         sim.register(self)
         self.gid = gid
+        self.name = f"gk{gid}"          # fault-injection crash-point id
         self.n_gk = n_gk
         self.store = store
         self.oracle = oracle
@@ -134,10 +135,19 @@ class Gatekeeper:
             t.cancel()
         # transactions admitted to a still-open group window die with
         # the server, exactly like per-tx messages in flight to a dead
-        # gatekeeper: unreplied clients time out and resubmit to a
-        # backup (§4.3).  The window just widens that loss — up to
-        # group_max accepted-but-unflushed txs (ROADMAP follow-up).
+        # gatekeeper: unreplied client sessions time out and resubmit
+        # to the promoted backup (§4.3).  Counted, so tests can assert
+        # the retry layer recovered every one of them.
+        self.sim.counters.group_txs_lost += len(self._group)
         self._group.clear()
+
+    def _crash_point(self, point: str) -> bool:
+        """Fault-injection hook: die here if the plan says so."""
+        f = self.sim.fault
+        if f is not None and f.crash(point, self.name):
+            self.alive = False
+            return True
+        return False
 
     def _serve(self, service: float, fn, *args) -> None:
         """Serialize request handling: the gatekeeper is a single-threaded
@@ -190,19 +200,26 @@ class Gatekeeper:
 
     # -- transactions (§4.1) -----------------------------------------------------
     def submit_tx(self, client, ops: List[dict], reply: Callable,
-                  retries: int = 0, t_submit: Optional[float] = None) -> None:
+                  retries: int = 0, t_submit: Optional[float] = None,
+                  txid: object = None) -> None:
         if not self.alive:
-            return  # client will time out and resubmit to a backup
+            return  # the client session times out and resubmits (§4.3)
         if self.paused:
             self._pause_buffer.append((self.submit_tx,
-                                       (client, ops, reply, retries, t_submit)))
+                                       (client, ops, reply, retries,
+                                        t_submit, txid)))
             return
         if t_submit is None:
             t_submit = self.sim.now
 
         if self.group_window > 0:
             # ---- group-commit admission: join the open window --------
-            self._group.append((client, ops, reply, retries, t_submit))
+            self._group.append((client, ops, reply, retries, t_submit, txid))
+            if self._crash_point("mid_window"):
+                # the admitted-but-unflushed window dies with the server
+                self.sim.counters.group_txs_lost += len(self._group)
+                self._group.clear()
+                return
             if len(self._group) >= self.group_max:
                 self._flush_group()
             elif not self._group_flush_pending:
@@ -212,12 +229,14 @@ class Gatekeeper:
             return
 
         def _go() -> None:
+            if not self.alive:
+                return
             stamp = self._tick()
             # one RPC to the backing store carrying the whole transaction
             nbytes = 64 + 48 * len(ops)
             self.sim.send(self, self.store,
                           self._at_store, client, ops, stamp, reply,
-                          retries, t_submit, nbytes=nbytes)
+                          retries, t_submit, txid, nbytes=nbytes)
 
         self._serve(self.cost.gk_stamp, _go)
 
@@ -248,8 +267,11 @@ class Gatekeeper:
             return
 
         def _go() -> None:
-            stamped = [(client, ops, self._tick(), reply, retries, t_submit)
-                       for client, ops, reply, retries, t_submit in batch]
+            if not self.alive:
+                return
+            stamped = [(client, ops, self._tick(), reply, retries, t_submit,
+                        txid)
+                       for client, ops, reply, retries, t_submit, txid in batch]
             nbytes = 64 + sum(64 + 48 * len(t[1]) for t in stamped)
             self.sim.send(self, self.store, self._at_store_batch, stamped,
                           nbytes=nbytes)
@@ -257,70 +279,139 @@ class Gatekeeper:
         self._serve(self.cost.gk_stamp
                     + self.cost.gk_batch_tx * (len(batch) - 1), _go)
 
-    def _at_store(self, client, ops, stamp, reply, retries, t_submit) -> None:
+    def _dedup_gate(self, client, reply, retries, txid) -> bool:
+        """Exactly-once gate, evaluated at the store: a fresh client
+        submission (``retries == 0``) of an already-decided txid is
+        answered from ``store.tx_results`` (re-forwarding the committed
+        slices in case the crash ate them); one already being validated
+        is dropped (the session's next timeout covers the race).
+        Internal retries keep their in-flight claim fresh instead.
+        Returns True when the submission was consumed here."""
+        if txid is None:
+            return False
+        if retries > 0:
+            self.store.touch_inflight(txid)
+            return False
+        verdict = self.store.begin_tx_attempt(txid)
+        if verdict == "inflight":
+            return True
+        if verdict != "done":
+            return False
+        self.sim.counters.tx_dedup_hits += 1
+        ok, err, stamp, fwd, _ = self.store.tx_results[txid]
+        if ok and fwd:
+            # the original forwards may have died with the old server;
+            # re-send them — shards skip stamps they already applied
+            self._forward(stamp, fwd)
+        self.sim.send(self.store, client, reply, ok, err, stamp, nbytes=64)
+        return True
+
+    def _forward(self, stamp, fwd) -> None:
+        """Send one committed tx's per-shard slices."""
+        by_shard: Dict[int, List[dict]] = {}
+        for sid, op in fwd:
+            by_shard.setdefault(sid, []).append(op)
+        for sid, slice_ops in by_shard.items():
+            self._seq[sid] += 1
+            shard = self.shards[sid]
+            self.sim.send(self, shard, shard.enqueue, self.gid,
+                          self._seq[sid], stamp, "tx", slice_ops,
+                          nbytes=64 + 48 * len(slice_ops))
+
+    def _at_store(self, client, ops, stamp, reply, retries, t_submit,
+                  txid) -> None:
         """Runs at the backing store: validate last-update stamps, then
-        apply atomically.  Returns control to the gatekeeper."""
+        apply atomically.  Returns control to the gatekeeper.
+
+        Validation repeats at the commit instant: another gatekeeper's
+        window can apply between admission and this tx's durability
+        point, and its writes must be ordered (refined) against this
+        stamp before we commit, or a downstream shard could execute the
+        two concurrent stamps in the opposite order.  ``seen`` keeps the
+        revalidation loop finite — each round only refines last-update
+        stamps recorded since the previous round."""
         cnt = self.sim.counters
-        # last-update validation over the write set
-        needs_refine: List[Stamp] = []
-        for vid in BackingStore.write_set(ops):
-            upd = self.store.last_update_of(vid)
-            if upd is None:
-                continue
-            o = compare(upd, stamp)
-            if o is Order.AFTER:           # T_tx ≺ T_upd -> retry, fresh stamp
-                self._retry_or_abort((client, ops, stamp, reply, retries,
-                                      t_submit))
-                return
-            if o is Order.CONCURRENT:      # T_upd ≈ T_tx -> refine via oracle
-                needs_refine.append(upd)
+        if not self.alive:
+            return                         # in-flight work dies with the server
+        if self._dedup_gate(client, reply, retries, txid):
+            return
+        tx = (client, ops, stamp, reply, retries, t_submit, txid)
+        write_set = BackingStore.write_set(ops)
+        seen: set = set()                  # last-update keys already refined
 
-        service = self.cost.store_op * max(1, len(ops))
+        def _validate() -> Optional[List[Stamp]]:
+            """Fresh concurrent residue, or None if a retry was issued."""
+            fresh: List[Stamp] = []
+            for vid in write_set:
+                upd = self.store.last_update_of(vid)
+                if upd is None:
+                    continue
+                o = compare(upd, stamp)
+                if o is Order.AFTER:       # T_tx ≺ T_upd -> retry, fresh stamp
+                    self._retry_or_abort(tx)
+                    return None
+                if o is Order.CONCURRENT and upd.key() not in seen:
+                    fresh.append(upd)      # T_upd ≈ T_tx -> refine via oracle
+            return fresh
 
-        def _commit() -> None:
-            try:
-                fwd = self.store.apply(ops, stamp)
-            except ValueError as e:        # logical error -> abort, not forwarded
-                cnt.tx_aborted += 1
-                self.sim.send(self.store, client, reply, False, str(e), stamp,
-                              nbytes=64)
-                return
-            cnt.tx_committed += 1
-            # response to client: commit point is the backing store (§4.4 part 2)
-            self.sim.send(self.store, client, reply, True, None, stamp, nbytes=64)
-            # forward per-shard slices
-            by_shard: Dict[int, List[dict]] = {}
-            for sid, op in fwd:
-                by_shard.setdefault(sid, []).append(op)
-            for sid, slice_ops in by_shard.items():
-                self._seq[sid] += 1
-                shard = self.shards[sid]
-                self.sim.send(self, shard, shard.enqueue, self.gid,
-                              self._seq[sid], stamp, "tx", slice_ops,
-                              nbytes=64 + 48 * len(slice_ops))
-
-        if needs_refine:
+        def _refine_then(fresh: List[Stamp], delay: float) -> None:
             # gatekeeper orders T_upd ≺ T_tx at the timeline oracle
             cnt.oracle_calls += 1
+            seen.update(u.key() for u in fresh)
+
             def _refined() -> None:
                 try:
-                    for upd in needs_refine:
+                    for upd in fresh:
                         self.oracle.oracle.create_event(upd)
                         self.oracle.oracle.create_event(stamp)
                         self.oracle.oracle.assert_order(upd.key(), stamp.key())
                 except CycleError:
                     # same retry bound as the T_tx ≺ T_upd branch (and
                     # as the group path)
-                    self._retry_or_abort((client, ops, stamp, reply,
-                                          retries, t_submit))
+                    self._retry_or_abort(tx)
                     return
                 _commit()
-            self.sim.schedule(self.cost.oracle_rtt + service, _refined)
+            self.sim.schedule(delay, _refined)
+
+        def _commit() -> None:
+            if not self.alive or self._crash_point("pre_wal"):
+                return                     # nothing durable, nothing forwarded
+            fresh = _validate()            # revalidate at the commit instant
+            if fresh is None:
+                return
+            if fresh:
+                _refine_then(fresh, self.cost.oracle_rtt)
+                return
+            try:
+                fwd = self.store.apply(ops, stamp, txid=txid)
+            except ValueError as e:        # logical error -> abort, not forwarded
+                cnt.tx_aborted += 1
+                self.store.record_result(txid, False, str(e), stamp)
+                self.sim.send(self.store, client, reply, False, str(e), stamp,
+                              nbytes=64)
+                return
+            cnt.tx_committed += 1
+            if self._crash_point("post_wal"):
+                return                     # durable but unforwarded/unacked:
+            #                                the session's retry dedups + re-
+            #                                forwards (exactly-once contract)
+            # forward per-shard slices BEFORE acking, so an acked tx is
+            # always either at its shards or recoverable from the log
+            self._forward(stamp, fwd)
+            # response to client: commit point is the backing store (§4.4 part 2)
+            self.sim.send(self.store, client, reply, True, None, stamp, nbytes=64)
+
+        service = self.cost.store_op * max(1, len(ops))
+        fresh = _validate()
+        if fresh is None:
+            return
+        if fresh:
+            _refine_then(fresh, self.cost.oracle_rtt + service)
         else:
             self.sim.schedule(service, _commit)
 
-    def _resubmit(self, client, ops, reply, retries, t_submit) -> None:
-        self.submit_tx(client, ops, reply, retries, t_submit)
+    def _resubmit(self, client, ops, reply, retries, t_submit, txid) -> None:
+        self.submit_tx(client, ops, reply, retries, t_submit, txid)
 
     # -- group commit (§4.1/§4.4 batched; see module docstring) ---------------
     def _at_store_batch(self, batch: List[Tuple]) -> None:
@@ -330,48 +421,95 @@ class Gatekeeper:
         group-commit the survivors (one durability point), and forward
         ONE packed ``WriteBatch`` per destination shard."""
         cnt = self.sim.counters
+        if not self.alive:
+            return                         # in-flight window dies with the server
+        batch = [t for t in batch
+                 if not self._dedup_gate(t[0], t[3], t[4], t[6])]
+        if not batch:
+            return
         cnt.tx_batches += 1
         cnt.tx_batch_size_sum += len(batch)
         stamps = [t[2] for t in batch]
         write_sets = [BackingStore.write_set(t[1]) for t in batch]
-        verdicts, rows = classify_write_sets(self.store.last_updates,
-                                             write_sets, stamps)
-        cnt.conflict_rows_checked += rows
-        live: List[int] = []
-        pending_refine: List[Tuple[int, Stamp, List[Stamp]]] = []
-        for i, v in enumerate(verdicts):
-            if v.status == RETRY:      # T_tx ≺ T_upd: fresh stamp, next window
-                self._retry_or_abort(batch[i])
-            else:
-                live.append(i)
-                if v.concurrent:
-                    pending_refine.append((i, stamps[i], v.concurrent))
+        seen: set = set()              # (upd key, tx key) pairs already refined
 
-        total_ops = sum(len(batch[i][1]) for i in live)
-        service = self.cost.store_op * max(1, total_ops)
+        def _classify(idx: List[int]
+                      ) -> Tuple[List[int],
+                                 List[Tuple[int, Stamp, List[Stamp]]]]:
+            """Validate ``idx`` against the CURRENT table; issue retries,
+            return survivors plus the not-yet-refined concurrent residue."""
+            verdicts, rows = classify_write_sets(
+                self.store.last_updates,
+                [write_sets[i] for i in idx], [stamps[i] for i in idx])
+            cnt.conflict_rows_checked += rows
+            ok_idx: List[int] = []
+            residue: List[Tuple[int, Stamp, List[Stamp]]] = []
+            for j, v in enumerate(verdicts):
+                i = idx[j]
+                if v.status == RETRY:  # T_tx ≺ T_upd: fresh stamp, next window
+                    self._retry_or_abort(batch[i])
+                    continue
+                ok_idx.append(i)
+                ups = [u for u in v.concurrent
+                       if (u.key(), stamps[i].key()) not in seen]
+                if ups:
+                    residue.append((i, stamps[i], ups))
+                    seen.update((u.key(), stamps[i].key()) for u in ups)
+            return ok_idx, residue
+
+        def _refine_then(residue, delay: float, cont: List[int]) -> None:
+            # ONE batched oracle round trip for the whole residue
+            cnt.oracle_calls += 1
+
+            def _refined() -> None:
+                failed = set(refine_commit(self.oracle.oracle, residue))
+                for i in failed:       # cycle: retry with a fresh stamp
+                    self._retry_or_abort(batch[i])
+                _commit([i for i in cont if i not in failed])
+            self.sim.schedule(delay, _refined)
 
         def _commit(live_idx: List[int]) -> None:
+            if not self.alive or self._crash_point("pre_wal"):
+                return                 # window dies undurable, unacked
+            # revalidate at the durability instant: other gatekeepers'
+            # windows may have applied since admission, and their writes
+            # must be refined against ours before shards see both
+            live_idx, residue = _classify(live_idx)
+            if residue:
+                _refine_then(residue, self.cost.oracle_rtt, live_idx)
+                return
+            if not live_idx:
+                return
+            torn = None
+            if self.sim.fault is not None:
+                torn = self.sim.fault.torn_limit(self.name)
             results = self.store.apply_batch(
-                [(batch[i][1], stamps[i]) for i in live_idx])
+                [(batch[i][1], stamps[i], batch[i][6]) for i in live_idx],
+                torn_limit=torn)
+            if torn is not None:
+                self.alive = False     # died inside the group WAL append:
+                return                 # a torn tail is on the log, no replies
+            if self._crash_point("post_wal"):
+                return                 # durable but unforwarded/unacked
             by_shard: Dict[int, List[Tuple[Stamp, List[dict]]]] = {}
+            replies: List[Tuple] = []
             for i, (ok, err, fwd) in zip(live_idx, results):
                 client, ops, stamp, reply = batch[i][:4]
                 if not ok:             # logical error: this tx only
                     cnt.tx_aborted += 1
-                    self.sim.send(self.store, client, reply, False, err,
-                                  stamp, nbytes=64)
+                    replies.append((client, reply, False, err, stamp))
                     continue
                 cnt.tx_committed += 1
-                # reply after the group's durability point (§4.4 part 2)
-                self.sim.send(self.store, client, reply, True, None, stamp,
-                              nbytes=64)
+                replies.append((client, reply, True, None, stamp))
                 per: Dict[int, List[dict]] = {}
                 for sid, op in fwd:
                     per.setdefault(sid, []).append(op)
                 for sid, slice_ops in per.items():
                     by_shard.setdefault(sid, []).append((stamp, slice_ops))
             # ONE packed WriteBatch per destination shard per window,
-            # items in stamp order (= admission order)
+            # items in stamp order (= admission order); forwards go out
+            # BEFORE the replies so an acked tx is always either at its
+            # shards or recoverable from the log
             for sid, items in by_shard.items():
                 self._seq[sid] += 1
                 shard = self.shards[sid]
@@ -379,19 +517,16 @@ class Gatekeeper:
                 self.sim.send(self, shard, shard.enqueue, self.gid,
                               self._seq[sid], wb.stamp, "txbatch", wb,
                               nbytes=wb.nbytes())
+            # reply after the group's durability point (§4.4 part 2)
+            for client, reply, ok, err, stamp in replies:
+                self.sim.send(self.store, client, reply, ok, err, stamp,
+                              nbytes=64)
 
+        live, pending_refine = _classify(list(range(len(batch))))
+        total_ops = sum(len(batch[i][1]) for i in live)
+        service = self.cost.store_op * max(1, total_ops)
         if pending_refine:
-            # ONE batched oracle round trip for the whole residue
-            cnt.oracle_calls += 1
-
-            def _refined() -> None:
-                failed = set(refine_commit(self.oracle.oracle,
-                                           pending_refine))
-                for i in failed:         # cycle: retry with a fresh stamp
-                    self._retry_or_abort(batch[i])
-                _commit([i for i in live if i not in failed])
-
-            self.sim.schedule(self.cost.oracle_rtt + service, _refined)
+            _refine_then(pending_refine, self.cost.oracle_rtt + service, live)
         else:
             self.sim.schedule(service, _commit, live)
 
@@ -399,15 +534,16 @@ class Gatekeeper:
         """Shared retry bookkeeping (per-tx AND group paths): count the
         retry, then resubmit with a fresh stamp or abort past the
         bound."""
-        client, ops, stamp, reply, retries, t_submit = tx
+        client, ops, stamp, reply, retries, t_submit, txid = tx
         self.sim.counters.tx_retried += 1
         if retries + 1 > MAX_RETRIES:
             self.sim.counters.tx_aborted += 1
+            self.store.record_result(txid, False, "too many retries", stamp)
             self.sim.send(self.store, client, reply, False,
                           "too many retries", stamp, nbytes=64)
             return
         self.sim.send(self.store, self, self._resubmit, client, ops,
-                      reply, retries + 1, t_submit, nbytes=64)
+                      reply, retries + 1, t_submit, txid, nbytes=64)
 
     # -- node programs (§4.2) ------------------------------------------------------
     def submit_program(self, coordinator, prog_name: str,

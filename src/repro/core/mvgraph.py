@@ -296,9 +296,10 @@ class _PropTable:
     with all-``NO_STAMP`` and log the row in ``patch`` — the same
     delta-refresh contract as ``v_patch``/``e_patch``, consumed through
     :meth:`cursor` by :class:`~repro.core.frontier.ShardPlan` to keep
-    its property views fresh at O(changed).  The log is cleared at
-    compaction (rows renumber without a recorded map), so consumers
-    re-read the table after a :class:`CompactionEvent`.
+    its property views fresh at O(changed).  :meth:`compact` returns an
+    old→new row map (mirrored into :class:`CompactionEvent` as
+    ``vp_map``/``ep_map``), so consumers can remap cached property state
+    across a compaction instead of re-reading the whole table.
 
     Group-commit batch mode (:meth:`begin_batch` / :meth:`end_batch`):
     appends between the two calls are buffered in Python lists (slot
@@ -330,8 +331,9 @@ class _PropTable:
         """Consume cursor ``[n_rows, len(patch)]`` for delta consumers
         (appends are implied by row growth, in-place purges by the patch
         log).  The patch log is cleared at compaction — a consumer that
-        observes a new :class:`CompactionEvent` must re-read the whole
-        table (property rows renumber without a recorded map)."""
+        observes a new :class:`CompactionEvent` remaps its rows through
+        the event's ``vp_map``/``ep_map`` and recovers the unread patch
+        tail from ``old_vp_patch``/``old_ep_patch``."""
         return [self.n, len(self.patch)]
 
     @staticmethod
@@ -403,17 +405,27 @@ class _PropTable:
             self.purge(r)
         return len(rows)
 
-    def compact(self, owner_map: np.ndarray) -> None:
-        """Drop purged rows / rows of dropped owners; remap the rest."""
+    def compact(self, owner_map: np.ndarray
+                ) -> Tuple[np.ndarray, List[int], int]:
+        """Drop purged rows / rows of dropped owners; remap the rest.
+
+        Returns ``(row_map, old_patch, old_n)``: the old→new row map
+        (-1 = dropped), the FULL pre-compaction patch log (old
+        numbering) and the pre-compaction row count — the same remap
+        contract as :class:`CompactionEvent`'s ``v_map``/``e_map``, so
+        plan caches can carry property state across a compaction at
+        O(changed) instead of re-reading the whole table."""
         n = self.n
+        old_patch = self.patch
         if n == 0:
             self.by_owner = {}
             self.patch = []
-            return
+            return np.empty((0,), np.int64), old_patch, 0
         owner = self.owner.view()
         live = self.stamp.view()[:, 0] != NO_STAMP
         ow = np.where(owner < owner_map.size, owner_map[owner], -1)
         live &= ow >= 0
+        row_map = np.where(live, np.cumsum(live) - 1, -1).astype(np.int64)
         keep_l = np.nonzero(live)[0].tolist()
         drop_l = np.nonzero(~live)[0].tolist()
         keep = np.asarray(keep_l, np.int64)
@@ -434,6 +446,7 @@ class _PropTable:
         for new_row, o in enumerate(self.owner.view().tolist()):
             self.by_owner.setdefault(o, []).append(new_row)
         self.patch = []
+        return row_map, old_patch, n
 
 
 @dataclass
@@ -445,7 +458,10 @@ class CompactionEvent:
     ``old_e_patch`` are the FULL pre-compaction patch logs (old
     numbering) so a consumer that had only read a prefix can recover the
     unread tail; ``old_n_v`` / ``old_n_e`` are the pre-compaction table
-    sizes."""
+    sizes.  ``vp_map`` / ``ep_map`` (and the matching ``old_*p_patch`` /
+    ``old_n_*p`` fields) are the same contract for the vertex/edge
+    PROPERTY tables, so crossing a compaction no longer forces a full
+    property re-read."""
 
     v_map: np.ndarray
     e_map: np.ndarray
@@ -453,6 +469,12 @@ class CompactionEvent:
     old_e_patch: List[int]
     old_n_v: int
     old_n_e: int
+    vp_map: np.ndarray
+    ep_map: np.ndarray
+    old_vp_patch: List[int]
+    old_ep_patch: List[int]
+    old_n_vp: int
+    old_n_ep: int
 
 
 #: compact a partition's columns when this fraction of slots is purged
@@ -754,10 +776,19 @@ class PartitionColumns:
         e_live = self.e_create.view()[:, 0] != NO_STAMP
         v_map = np.where(v_live, np.cumsum(v_live) - 1, -1).astype(np.int64)
         e_map = np.where(e_live, np.cumsum(e_live) - 1, -1).astype(np.int64)
+        old_v_patch, old_e_patch = self.v_patch, self.e_patch
+        old_n_v, old_n_e = self.n_v, self.n_e
+        # property tables follow their owners (compact first: the event
+        # carries their row maps alongside the owner-table maps)
+        vp_map, old_vp_patch, old_n_vp = self.v_props.compact(v_map)
+        ep_map, old_ep_patch, old_n_ep = self.e_props.compact(e_map)
         self.events.append(CompactionEvent(
             v_map=v_map, e_map=e_map,
-            old_v_patch=self.v_patch, old_e_patch=self.e_patch,
-            old_n_v=self.n_v, old_n_e=self.n_e))
+            old_v_patch=old_v_patch, old_e_patch=old_e_patch,
+            old_n_v=old_n_v, old_n_e=old_n_e,
+            vp_map=vp_map, ep_map=ep_map,
+            old_vp_patch=old_vp_patch, old_ep_patch=old_ep_patch,
+            old_n_vp=old_n_vp, old_n_ep=old_n_ep))
         while len(self.events) > MAX_COMPACTION_EVENTS:
             self.events.pop(0)
             self.events_dropped += 1
@@ -783,9 +814,6 @@ class PartitionColumns:
         self.e_delete_stamp = [self.e_delete_stamp[i] for i in ek_l]
         self.e_slot = {k: int(e_map[s]) for k, s in self.e_slot.items()
                        if e_map[s] >= 0}
-        # property tables follow their owners
-        self.v_props.compact(v_map)
-        self.e_props.compact(e_map)
         self.v_patch = []
         self.e_patch = []
         self.n_compactions += 1

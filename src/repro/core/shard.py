@@ -106,6 +106,7 @@ class Shard:
         self.sim = sim
         sim.register(self)
         self.sid = sid
+        self.name = f"shard{sid}"        # fault-injection crash-point id
         self.n_gk = n_gk
         self.oracle = oracle
         self.cost = cost
@@ -131,6 +132,10 @@ class Shard:
         self.prog_states: Dict[int, Dict[str, dict]] = {}
         self._finished_progs: set = set()
         self._order_cache: Dict[Tuple, Order] = {}
+        # stamps this partition already holds (filled by recovery replay,
+        # extended at every apply): re-forwarded slices of transactions
+        # that were durable before a crash are skipped, never re-applied
+        self._applied: Dict[Tuple, Stamp] = {}
         self.busy = False
         self.alive = True
         self.peers: List["Shard"] = []   # indexable by sid
@@ -141,6 +146,14 @@ class Shard:
 
     def stop(self) -> None:
         self.alive = False
+
+    def _crash_point(self, point: str) -> bool:
+        """Fault-injection hook: die here if the plan says so."""
+        f = self.sim.fault
+        if f is not None and f.crash(point, self.name):
+            self.alive = False
+            return True
+        return False
 
     # ------------------------------------------------------------------ enqueue
     def enqueue(self, gid: int, seq: int, stamp: Stamp, kind: str,
@@ -361,11 +374,17 @@ class Shard:
     def _exec_item(self, item: _QueueItem) -> float:
         if item.kind == "nop":
             return 0.2e-6
+        if self._crash_point("mid_shard_apply"):
+            return 0.0                   # died mid-drain; recovery replays
         ops = item.payload or []
         ts = item.stamp
+        if ts.key() in self._applied:    # re-forwarded after a recovery
+            self.sim.counters.shard_dedup_skips += 1
+            return 0.2e-6
         for op in ops:
             # KeyError here would be replica divergence (store validated)
             self.partition.apply_op(op, ts)
+        self._applied[ts.key()] = ts
         return self.cost.shard_op * max(1, len(ops))
 
     def _exec_batch_prefix(self, g: int) -> float:
@@ -400,6 +419,12 @@ class Shard:
         item = self.queues[g].popleft()
         wb: WriteBatch = item.payload
         items = wb.items
+        if self._crash_point("mid_shard_apply"):
+            # die partway through the window: a prefix of the batch is
+            # applied, the rest is lost with the server (recovery
+            # replays the whole window from the store's log)
+            self._apply_deduped(items[:max(1, len(items) // 2)])
+            return 0.0
         bounds = [self.queues[h][0].stamp for h in range(self.n_gk)
                   if h != g and self.queues[h]]
         bounds += [p["stamp"] for p in self.pending_progs]
@@ -407,11 +432,22 @@ class Shard:
         while take < len(items) and all(
                 compare(items[take][0], s) is Order.BEFORE for s in bounds):
             take += 1
-        n_ops = self.partition.apply_batch(items[:take])
+        n_ops = self._apply_deduped(items[:take])
         if take < len(items):
             self.queues[g].appendleft(_QueueItem(
                 items[take][0], "txbatch", WriteBatch(items[take:])))
         return self.cost.shard_op * max(1, n_ops)
+
+    def _apply_deduped(self, items: List[Tuple[Stamp, List[dict]]]) -> int:
+        """Bulk-apply skipping stamps the partition already holds."""
+        fresh = [(s, ops) for s, ops in items
+                 if s.key() not in self._applied]
+        if len(fresh) < len(items):
+            self.sim.counters.shard_dedup_skips += len(items) - len(fresh)
+        n = self.partition.apply_batch(fresh)
+        for s, _ in fresh:
+            self._applied[s.key()] = s
+        return n
 
     def _refine_batch(self, stamps: List[Stamp], at: Stamp) -> Dict:
         """ONE oracle round trip for a batch of stamps truly concurrent
@@ -695,26 +731,26 @@ class Shard:
 
     # ------------------------------------------------------------------ GC / recovery
     def collect(self, horizon: Stamp) -> int:
+        drop = [k for k, s in self._applied.items()
+                if compare(s, horizon) is Order.BEFORE]
+        for k in drop:
+            del self._applied[k]
         return self.partition.collect(horizon)
 
     def recover_from(self, ops: List[dict]) -> None:
-        """Backup promotion: rebuild the partition from the backing store."""
+        """Backup promotion: rebuild the partition from the store's redo
+        stream (WAL replay, or the ``vertices``-walk oracle when replay
+        is off).  Every op dispatches through ``apply_op`` — including
+        ``set_edge_prop`` — and its stamp is remembered, so slices of
+        already-durable transactions re-forwarded by the exactly-once
+        retry path are skipped, never double-applied."""
         self.partition = MVGraphPartition(self.n_gk, self.intern)
         self._plans.clear()              # plans referenced the old columns
+        self._applied = {}
         for op in ops:
-            k, ts = op["op"], op["ts"]
-            if k == "create_vertex":
-                self.partition.create_vertex(op["vid"], ts)
-            elif k == "create_edge":
-                self.partition.create_edge(op["src"], op["dst"], ts,
-                                           eid=op.get("eid"))
-            elif k == "delete_edge":
-                self.partition.delete_edge(op["src"], op["eid"], ts)
-            elif k == "set_vertex_prop":
-                self.partition.set_vertex_prop(op["vid"], op["key"],
-                                               op["value"], ts)
-            elif k == "delete_vertex":
-                self.partition.delete_vertex(op["vid"], ts)
+            ts = op["ts"]
+            self.partition.apply_op(op, ts)
+            self._applied[ts.key()] = ts
 
     def enter_epoch(self, epoch: int) -> None:
         """Cluster-manager barrier: fresh FIFO channels in the new epoch."""

@@ -87,6 +87,30 @@ class Counters:
     #                                store GC hook (≺ global horizon)
     store_vertices_gcd: int = 0    # deleted StoredVertex records dropped
     #                                by the store GC hook
+    store_txresults_gcd: int = 0   # recorded tx outcomes pruned by the
+    #                                store GC hook (older than the
+    #                                client retry session bound)
+    wal_records: int = 0           # redo WAL records appended (tx + group)
+    wal_ckpts: int = 0             # WAL checkpoint rewrites at store GC
+    wal_replay_ops: int = 0        # ops replayed from the WAL into
+    #                                promoted shard backups
+    wal_torn_truncated: int = 0    # torn-tail entries truncated by replay
+    tx_dedup_hits: int = 0         # resubmitted txs answered from
+    #                                store.tx_results instead of
+    #                                re-executing (exactly-once)
+    shard_dedup_skips: int = 0     # already-applied stamps skipped by a
+    #                                shard (re-forwarded after recovery)
+    client_retries: int = 0        # client session resubmissions after
+    #                                an ack timeout
+    client_gaveup: int = 0         # client sessions that exhausted the
+    #                                retry budget (error surfaced)
+    group_txs_lost: int = 0        # admitted-but-unflushed window txs
+    #                                that died with their gatekeeper
+    #                                (clients recover them via retry)
+    crashes_injected: int = 0      # FaultPlan crash points fired
+    msgs_dropped: int = 0          # messages dropped by fault injection
+    msgs_duplicated: int = 0       # messages duplicated by fault injection
+    msgs_delayed: int = 0          # messages delayed by fault injection
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
@@ -102,6 +126,9 @@ class Simulator:
         self.rng = np.random.default_rng(seed)
         self.network = network or NetworkModel()
         self.counters = Counters()
+        # optional repro.core.faultinject.FaultInjector; consulted by
+        # send() for message faults and by actors at named crash points
+        self.fault = None
         # FIFO enforcement: last scheduled delivery time per (src_id, dst_id)
         self._channel_clock: dict[tuple[int, int], float] = {}
         self._actor_ids = itertools.count()
@@ -123,10 +150,27 @@ class Simulator:
 
         FIFO per (src, dst) channel: delivery time is clamped to be >= the
         last delivery time already scheduled on the channel.
+
+        An installed fault injector may drop, duplicate or delay the
+        message (restricted to client-boundary messages so shard FIFO
+        channels cannot stall; see ``repro.core.faultinject``).
         """
         self.counters.messages_sent += 1
         self.counters.bytes_sent += nbytes
-        d = self.network.delay(nbytes, self.rng, local=local)
+        extra = 0.0
+        if self.fault is not None:
+            verdict, extra = self.fault.on_send(getattr(fn, "__name__", ""))
+            if verdict == "drop":
+                self.counters.msgs_dropped += 1
+                return
+            if verdict == "dup":
+                self.counters.msgs_duplicated += 1
+                d2 = self.network.delay(nbytes, self.rng, local=local)
+                heapq.heappush(self._heap,
+                               (self.now + d2, next(self._seq), fn, args))
+            elif verdict == "delay":
+                self.counters.msgs_delayed += 1
+        d = self.network.delay(nbytes, self.rng, local=local) + extra
         t = self.now + d
         key = (getattr(src, "_sim_id", -1), getattr(dst, "_sim_id", -1))
         prev = self._channel_clock.get(key, 0.0)

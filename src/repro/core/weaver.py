@@ -13,8 +13,11 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from .clock import Stamp, compare, Order, zero
 from .cluster import ClusterManager, HeartbeatSender
+from .faultinject import FaultInjector
 from .gatekeeper import CostModel, Gatekeeper
 from .mvgraph import VidIntern
 from .nodeprog import REGISTRY
@@ -127,6 +130,19 @@ class WeaverConfig:
     #                                   path, the semantic oracle); see
     #                                   repro.core.writepath
     write_group_max: int = 64    # flush a window early at this many txs
+    wal_replay: bool = True      # promote shard backups by replaying the
+    #                              redo WAL (False: the vertices-walk
+    #                              oracle path, kept for equivalence tests)
+    wal_checkpoint_every: int = 256   # WAL records between checkpoint
+    #                                   rewrites at store GC
+    client_retry_budget: int = 8      # client session resubmissions before
+    #                                   surfacing an error (exactly-once
+    #                                   retry, §4.3)
+    client_backoff_base: float = 8e-3  # first ack-timeout; doubles per
+    #                                    attempt (plus jitter)
+    client_backoff_cap: float = 80e-3  # ack-timeout ceiling
+    fault_plan: Optional[object] = None  # repro.core.faultinject.FaultPlan
+    #                                      (None = no fault injection)
     seed: int = 0
     cost: CostModel = field(default_factory=CostModel)
     network: NetworkModel = field(default_factory=NetworkModel)
@@ -137,8 +153,11 @@ class Weaver:
     def __init__(self, cfg: WeaverConfig = WeaverConfig()):
         self.cfg = cfg
         self.sim = Simulator(seed=cfg.seed, network=cfg.network)
+        if cfg.fault_plan is not None:
+            self.sim.fault = FaultInjector(cfg.fault_plan, self.sim)
         self.intern = VidIntern()       # deployment-wide vid interning
-        self.store = BackingStore(self.sim, cfg.n_shards, intern=self.intern)
+        self.store = BackingStore(self.sim, cfg.n_shards, intern=self.intern,
+                                  wal_checkpoint_every=cfg.wal_checkpoint_every)
         self.oracle = OracleServer(self.sim)
         self.manager = ClusterManager(self.sim, cfg.heartbeat_period)
         self.manager.weaver = self
@@ -176,6 +195,11 @@ class Weaver:
         self._prog_ids = itertools.count(1)
         self._client_ids = itertools.count(1)
         self._eids = itertools.count(1)
+        self._txids = itertools.count(1)      # client-assigned tx ids
+        # session-layer backoff jitter draws from its OWN stream so the
+        # network jitter sequence (and thus fault-free timings) is
+        # untouched by how many retries fire
+        self._client_rng = np.random.default_rng((cfg.seed << 8) ^ 0xC11E47)
         self._rr = itertools.count()
         self._outstanding_progs: Dict[int, Stamp] = {}
         if cfg.gc_period > 0:
@@ -200,19 +224,56 @@ class Weaver:
 
     def submit_tx(self, tx: Transaction, callback: Callable,
                   gatekeeper: Optional[int] = None) -> None:
-        """Async submit; ``callback(TxResult)`` fires on commit/abort."""
-        g = (next(self._rr) % len(self.gatekeepers)
-             if gatekeeper is None else gatekeeper)
-        gk = self.gatekeepers[g]
-        if not gk.alive:  # client fails over to the next gatekeeper
-            g = (g + 1) % len(self.gatekeepers)
-            gk = self.gatekeepers[g]
+        """Async submit; ``callback(TxResult)`` fires on commit/abort.
+
+        Exactly-once client session (§4.3): the transaction gets a
+        client-assigned txid and an ack timeout with exponential backoff
+        plus jitter.  An unacked submission is resubmitted to the next
+        (promoted) gatekeeper — the gatekeeper/store dedup layer makes a
+        resubmission of an already-committed transaction answer from the
+        recorded outcome instead of re-executing, so it commits once,
+        never twice.  A bounded retry budget surfaces an error instead
+        of hanging forever."""
+        txid = next(self._txids)
+        pref = (next(self._rr) if gatekeeper is None else gatekeeper)
         t0 = self.sim.now
+        st = {"done": False, "attempt": 0}
+
         def reply(ok: bool, err: Optional[str], stamp: Stamp) -> None:
+            if st["done"]:
+                return                   # duplicate/late ack of an earlier try
+            st["done"] = True
             callback(TxResult(ok=ok, stamp=stamp, error=err,
+                              retries=st["attempt"] - 1,
                               latency=self.sim.now - t0))
-        self.sim.send(self, gk, gk.submit_tx, self, tx.ops, reply,
-                      nbytes=64 + 48 * len(tx.ops))
+
+        def attempt() -> None:
+            if st["done"]:
+                return
+            k = st["attempt"]
+            if k > self.cfg.client_retry_budget:
+                self.sim.counters.client_gaveup += 1
+                st["done"] = True
+                callback(TxResult(ok=False,
+                                  error="client retry budget exhausted",
+                                  retries=k - 1, latency=self.sim.now - t0))
+                return
+            if k > 0:
+                self.sim.counters.client_retries += 1
+            st["attempt"] = k + 1
+            n = len(self.gatekeepers)
+            for off in range(n):         # rotate past known-dead servers
+                gk = self.gatekeepers[(pref + k + off) % n]
+                if gk.alive:
+                    break
+            self.sim.send(self, gk, gk.submit_tx, self, tx.ops, reply,
+                          0, None, txid, nbytes=64 + 48 * len(tx.ops))
+            backoff = min(self.cfg.client_backoff_cap,
+                          self.cfg.client_backoff_base * (2 ** k))
+            backoff *= 1.0 + 0.25 * float(self._client_rng.random())
+            self.sim.schedule(backoff, attempt)
+
+        attempt()
 
     def submit_program(self, name: str, entries: List[Tuple[str, object]],
                        callback: Callable, gatekeeper: Optional[int] = None) -> int:
@@ -270,10 +331,10 @@ class Weaver:
                 if compare(s, horizon) is Order.BEFORE:
                     horizon = s
         else:
-            epoch = min(gk.epoch for gk in self.gatekeepers if gk.alive)
             clocks = [gk.clock for gk in self.gatekeepers if gk.alive]
-            if not clocks:
-                return
+            if not clocks:                # every gatekeeper down (fault
+                return                    # injection): nothing to advance
+            epoch = min(gk.epoch for gk in self.gatekeepers if gk.alive)
             n = len(clocks[0])
             horizon = Stamp(epoch, tuple(min(c[i] for c in clocks)
                                          for i in range(n)), -1, 0)
@@ -298,7 +359,8 @@ class Weaver:
                        plan_delta=self.cfg.frontier_plan_delta,
                        coalesce=self.cfg.frontier_coalesce,
                        plan_cache_entries=self.cfg.plan_cache_entries)
-            nu.recover_from(self.store.recover_shard(sid))
+            nu.recover_from(self.store.recover_shard(
+                sid, use_wal=self.cfg.wal_replay))
             self.shards[sid] = nu
             for sh in self.shards:
                 sh.start(self.shards)

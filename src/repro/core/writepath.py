@@ -68,6 +68,56 @@ from .oracle import CycleError, TimelineOracle
 
 
 # ---------------------------------------------------------------------------
+# Redo log records (replayable WAL; see BackingStore)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class WalRecord:
+    """One redo-log record in :attr:`repro.core.store.BackingStore.wal`.
+
+    ``kind`` is ``"tx"`` (one per-tx commit), ``"group"`` (one
+    group-commit window — the window's single durability point), or
+    ``"ckpt"`` (a checkpoint: the full per-shard redo stream at GC time,
+    replacing all earlier records so the log stays bounded and replay
+    agrees with the GC'd store).
+
+    ``entries`` holds ``(stamp, txid, fwd)`` per committed transaction,
+    where ``fwd`` is the transaction's forwarded ``(shard, op)`` list
+    with each op dict carrying its commit stamp under ``"ts"`` — the
+    exact redo stream a shard applies.  Only ``entries[:valid]`` are
+    durable: a crash during the group append leaves a torn tail
+    (``valid < len(entries)``) that replay MUST truncate."""
+
+    kind: str
+    entries: List[Tuple[Stamp, object, List[Tuple[int, dict]]]] = \
+        field(default_factory=list)
+    valid: int = 0
+    ckpt: Optional[Dict[int, List[dict]]] = None
+
+
+def wal_replay_shard(wal: Sequence[WalRecord], shard: int
+                     ) -> Tuple[List[dict], int]:
+    """Redo stream for one shard, up to the stable point.
+
+    A ``ckpt`` record resets the stream (it subsumes everything before
+    it); ``tx``/``group`` records contribute their durable prefix
+    ``entries[:valid]`` in log order.  Returns ``(ops, torn)`` where
+    ``torn`` counts the truncated torn-tail entries."""
+    ops: List[dict] = []
+    torn = 0
+    for rec in wal:
+        if rec.kind == "ckpt":
+            ops = list(rec.ckpt.get(shard, ()))
+            continue
+        torn += len(rec.entries) - rec.valid
+        for _, _, fwd in rec.entries[:rec.valid]:
+            for sid, op in fwd:
+                if sid == shard:
+                    ops.append(op)
+    return ops, torn
+
+
+# ---------------------------------------------------------------------------
 # Vectorized stamp-pair comparison (the batch analogue of clock.compare)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,293 @@
+"""WAL-replay recovery == store-walk oracle (ISSUE 6 tentpole a).
+
+The redo WAL (``repro.core.writepath.WalRecord`` +
+``BackingStore.recover_shard``) must rebuild a failed shard's partition
+bit-identically to the original ``vertices``-walk recovery
+(``recover_shard_walk``) across randomized mutation / GC / compaction
+streams — same multi-version state, same snapshots, same frontier
+results — including torn-tail truncation and checkpoint rewrites.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Weaver, WeaverConfig
+from repro.core import frontier as F
+from repro.core.clock import Stamp
+from repro.core.mvgraph import MVGraphPartition
+from repro.core.writepath import WalRecord, wal_replay_shard
+
+
+def make_weaver(**kw):
+    n_gk = kw.pop("n_gk", 2)
+    n_shards = kw.pop("n_shards", 3)
+    seed = kw.pop("seed", 7)
+    return Weaver(WeaverConfig(n_gatekeepers=n_gk, n_shards=n_shards,
+                               seed=seed, **kw))
+
+
+def _versions(vers):
+    return tuple((v.value, v.ts.key()) for v in vers)
+
+
+def fingerprint(partition):
+    """Canonical multi-version state of one partition: every vertex,
+    edge and property version WITH its original stamp key."""
+    out = {}
+    for vid, v in partition.vertices.items():
+        edges = tuple(sorted(
+            (eid, e.dst, e.create_ts.key(),
+             None if e.delete_ts is None else e.delete_ts.key(),
+             tuple(sorted((k, _versions(vers))
+                          for k, vers in e.props.items())))
+            for eid, e in v.out_edges.items()))
+        props = tuple(sorted((k, _versions(vers))
+                             for k, vers in v.props.items()))
+        out[vid] = (v.create_ts.key(),
+                    None if v.delete_ts is None else v.delete_ts.key(),
+                    edges, props)
+    return out
+
+
+def rebuild(w, ops):
+    """Apply a redo stream to a fresh partition (what a promoted backup
+    shard does in ``Shard.recover_from``)."""
+    p = MVGraphPartition(w.cfg.n_gatekeepers, intern=w.intern)
+    for op in ops:
+        p.apply_op(op, op["ts"])
+    return p
+
+
+def _plan_state(w, p, at):
+    """Observable plan state: visible vertex gids, sorted CSR edge keys,
+    and a property column view — the frontier path's full input."""
+    plan = F.ShardPlan(p.columns, at, w.cfg.n_gatekeepers)
+    gids = p.columns.v_gid.view()[plan.v_visible]
+    ids, num = plan._prop_arrays("v", "score")
+    # value-intern ids depend on apply order; presence + the numeric
+    # mirror capture the observable property state
+    return (np.sort(gids).tolist(), np.sort(plan._ekey).tolist(),
+            (ids >= 0).tolist(),
+            [None if np.isnan(x) else x for x in num.tolist()])
+
+
+def assert_replay_equals_walk(w, at=None):
+    """The property under test, checked shard by shard."""
+    for sid in range(w.cfg.n_shards):
+        p_wal = rebuild(w, w.store.recover_shard(sid, use_wal=True))
+        p_walk = rebuild(w, w.store.recover_shard_walk(sid))
+        assert fingerprint(p_wal) == fingerprint(p_walk), \
+            f"shard {sid}: WAL replay diverged from store walk"
+        if at is not None:
+            assert _plan_state(w, p_wal, at) == _plan_state(w, p_walk, at)
+
+
+def _churn(w, rng, n_tx, group=False):
+    """Randomized committed mutation stream; returns live bookkeeping."""
+    vids = []
+    edges = []       # (src, eid)
+    results = []
+    for i in range(n_tx):
+        tx = w.begin_tx()
+        roll = rng.random()
+        if roll < 0.45 or len(vids) < 4:
+            v = f"v{len(vids)}"
+            tx.create_vertex(v)
+            vids.append(v)
+            if len(vids) >= 2 and rng.random() < 0.7:
+                tx.set_vertex_prop(v, "score", float(len(vids)))
+        elif roll < 0.75:
+            a, b = rng.choice(len(vids), 2, replace=False)
+            tx.create_edge(vids[a], vids[b])
+        elif roll < 0.9 and edges:
+            src, eid = edges[int(rng.integers(len(edges)))]
+            tx.set_edge_prop(src, "weight", float(i), eid=eid)
+        elif edges:
+            src, eid = edges.pop(int(rng.integers(len(edges))))
+            tx.delete_edge(src, eid)
+        else:
+            tx.set_vertex_prop(vids[0], "score", float(i))
+        if group:
+            w.submit_tx(tx, results.append)
+            if i % 8 == 7:
+                w.settle(5e-3)
+        else:
+            results.append(w.run_tx(tx))
+        # harvest created edge ids for later edge ops
+        if results and results[-1] is not None:
+            pass
+        for v in (vids[-1],) if roll < 0.45 or len(vids) <= 4 else ():
+            sv = w.store.vertices.get(v)
+        # track committed edges from the store directory
+        if i % 5 == 4:
+            edges = [(vid, eid)
+                     for vid, sv in w.store.vertices.items()
+                     for eid, (_, _, dts) in sv.edges.items()
+                     if dts is None]
+    if group:
+        w.settle(30e-3)
+    return vids, results
+
+
+class TestReplayEqualsWalk:
+    @pytest.mark.parametrize("seed", [0, 1, 7])
+    def test_randomized_stream_per_tx(self, seed):
+        rng = np.random.default_rng(seed)
+        w = make_weaver(seed=seed)
+        _churn(w, rng, 60)
+        at = w.gatekeepers[0]._tick()
+        assert w.sim.counters.wal_records > 0
+        assert_replay_equals_walk(w, at)
+        assert w.sim.counters.wal_replay_ops > 0
+
+    @pytest.mark.parametrize("seed", [3, 11])
+    def test_randomized_stream_group_commit(self, seed):
+        rng = np.random.default_rng(seed)
+        w = make_weaver(seed=seed, write_group_commit=0.5e-3)
+        _, results = _churn(w, rng, 48, group=True)
+        assert any(r.ok for r in results)
+        at = w.gatekeepers[0]._tick()
+        assert_replay_equals_walk(w, at)
+
+    def test_gc_checkpoint_rewrite(self):
+        """GC past a delete rewrites the log as one checkpoint record;
+        replay after the rewrite still matches the walk and does NOT
+        resurrect the dropped vertex."""
+        w = make_weaver(gc_period=0, wal_checkpoint_every=16)
+        rng = np.random.default_rng(5)
+        vids, _ = _churn(w, rng, 40)
+        tx = w.begin_tx()
+        tx.create_vertex("doomed")
+        assert w.run_tx(tx).ok
+        tx = w.begin_tx()
+        tx.delete_vertex("doomed")
+        assert w.run_tx(tx).ok
+        w.settle(5e-3)
+        w._gc()                              # horizon dominates the delete
+        assert w.sim.counters.wal_ckpts > 0
+        assert len(w.store.wal) <= 2         # ckpt + at most new records
+        assert "doomed" not in w.store.vertices
+        sid = w.store.place("doomed")
+        ops = w.store.recover_shard(sid)
+        assert not any(op.get("vid") == "doomed" for op in ops), \
+            "replay resurrected a GC-dropped vertex"
+        assert_replay_equals_walk(w, w.gatekeepers[0]._tick())
+
+    def test_checkpoint_triggered_by_log_length(self):
+        w = make_weaver(gc_period=0, wal_checkpoint_every=8)
+        for i in range(12):
+            tx = w.begin_tx()
+            tx.create_vertex(f"n{i}")
+            assert w.run_tx(tx).ok
+        assert len(w.store.wal) > 8
+        w._gc()
+        assert w.sim.counters.wal_ckpts >= 1
+        assert len(w.store.wal) <= 2
+        assert_replay_equals_walk(w)
+
+    def test_compaction_mid_stream(self):
+        """Column compactions between commits don't disturb either
+        recovery path (the WAL carries ops, not slots)."""
+        w = make_weaver(gc_period=0)
+        rng = np.random.default_rng(9)
+        _churn(w, rng, 50)
+        w._gc()                   # purge + maybe_compact at the shards
+        for sh in w.shards:
+            sh.partition.columns.compact()
+        _churn(w, rng, 20)
+        assert_replay_equals_walk(w, w.gatekeepers[0]._tick())
+
+
+class TestTornTail:
+    def test_torn_group_append_truncated(self):
+        """A group record cut short mid-append: entries past ``valid``
+        are on the log but MUST NOT replay."""
+        w = make_weaver()
+        sg = w.gatekeepers[0]
+        items = []
+        for i in range(4):
+            items.append(([{"op": "create_vertex", "vid": f"t{i}"}],
+                          sg._tick(), 100 + i))
+        res = w.store.apply_batch(items, torn_limit=2)
+        assert [r[0] for r in res] == [True, True, False, False]
+        rec = w.store.wal[-1]
+        assert rec.kind == "group" and rec.valid == 2
+        assert len(rec.entries) == 3          # 2 committed + 1 torn
+        torn0 = w.sim.counters.wal_torn_truncated
+        for sid in range(w.cfg.n_shards):
+            p = rebuild(w, w.store.recover_shard(sid))
+        assert w.sim.counters.wal_torn_truncated > torn0
+        recovered = set()
+        for sid in range(w.cfg.n_shards):
+            recovered |= set(rebuild(
+                w, w.store.recover_shard(sid)).vertices)
+        assert {"t0", "t1"} <= recovered
+        assert not ({"t2", "t3"} & recovered), "torn tail replayed"
+        # only the committed prefix is in the store (walk oracle agrees)
+        assert "t2" not in w.store.vertices
+
+    def test_torn_results_not_acked(self):
+        """Transactions past the torn point have NO recorded outcome —
+        a resubmission re-executes them instead of reading a lie."""
+        w = make_weaver()
+        sg = w.gatekeepers[0]
+        items = [([{"op": "create_vertex", "vid": f"u{i}"}],
+                  sg._tick(), 200 + i) for i in range(3)]
+        w.store.apply_batch(items, torn_limit=1)
+        assert 200 in w.store.tx_results
+        assert w.store.tx_results[200][0] is True
+        assert 201 not in w.store.tx_results
+        assert 202 not in w.store.tx_results
+
+
+class TestPromotionPaths:
+    def _load(self, w, n=18):
+        vids = [f"p{i}" for i in range(n)]
+        tx = w.begin_tx()
+        for v in vids:
+            tx.create_vertex(v)
+        assert w.run_tx(tx).ok
+        tx = w.begin_tx()
+        for i in range(n):
+            tx.create_edge(vids[i], vids[(i + 1) % n])
+        tx.set_vertex_prop(vids[0], "score", 1.5)
+        assert w.run_tx(tx).ok
+        # an edge property, so walk recovery must re-emit it
+        sv = w.store.vertices[vids[0]]
+        eid = next(iter(sv.edges))
+        tx = w.begin_tx()
+        tx.set_edge_prop(vids[0], "weight", 2.5, eid=eid)
+        assert w.run_tx(tx).ok
+        return vids, (vids[0], eid)
+
+    @pytest.mark.parametrize("use_wal", [True, False])
+    def test_shard_kill_recovery(self, use_wal):
+        w = make_weaver(wal_replay=use_wal)
+        vids, (src, eid) = self._load(w)
+        at = w.gatekeepers[0]._tick()
+        r0, _ = F.run_local(w, "traverse", [(vids[0], {"depth": 0})], at)
+        w.kill("shard1")
+        w.settle(100e-3)
+        assert w.manager.epoch == 1
+        r1, _ = F.run_local(w, "traverse", [(vids[0], {"depth": 0})], at)
+        assert r0 == r1
+        if use_wal:
+            assert w.sim.counters.wal_replay_ops > 0
+        else:
+            assert w.sim.counters.wal_replay_ops == 0
+        # edge property survived recovery on whichever path
+        sh = w.shards[w.store.place(src)]
+        e = sh.partition.vertices[src].out_edges[eid]
+        assert e.props["weight"][-1].value == 2.5
+
+    def test_both_paths_identical_post_promotion(self):
+        """Two identical deployments, one per recovery path: killing the
+        same shard must leave bit-identical recovered partitions."""
+        parts = {}
+        for use_wal in (True, False):
+            w = make_weaver(wal_replay=use_wal, seed=13)
+            self._load(w)
+            w.kill("shard0")
+            w.settle(100e-3)
+            parts[use_wal] = fingerprint(w.shards[0].partition)
+        assert parts[True] == parts[False]

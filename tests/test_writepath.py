@@ -141,7 +141,7 @@ class TestLastUpdateTable:
                     if ops[prev:c]:
                         parts.append(ops[prev:c])
                     prev = c
-                res = store.apply_batch([(p, sg.next()) for p in parts])
+                res = store.apply_batch([(p, sg.next(), None) for p in parts])
                 for (ok, _, _), p in zip(res, parts):
                     if ok:
                         self._track(p, live)
@@ -478,7 +478,7 @@ class TestGroupCommitEquivalence:
         stamp = gk._tick()
         gk._retry_or_abort((None, [], stamp,
                             lambda ok, err, s: got.append((ok, err)),
-                            MAX_RETRIES, 0.0))
+                            MAX_RETRIES, 0.0, None))
         w.settle(5e-3)
         assert got == [(False, "too many retries")]
         assert w.counters()["tx_aborted"] == 1
