@@ -6,6 +6,8 @@ Prints ``name,metric,value`` CSV lines (simulated time; deterministic).
   nodeprog       — frontier-batched vs per-vertex node programs
   writepath      — group-commit write engine vs per-tx commits
   recovery       — WAL-replay vs store-walk MTTR; goodput dip on failure
+  serving        — windowed read admission vs per-program; offered-load
+                   sweep past saturation with backpressure; SLO curves
   block_query    — Fig. 7 / Table 2 (CoinGraph vs relational explorer)
   social         — Fig. 9 / Fig. 10 (TAO mix, Weaver vs 2PL)
   traversal      — Fig. 11 (node programs vs BSP sync/async)
@@ -19,7 +21,8 @@ silently skipped.
 
 ``--smoke`` (used by ``scripts/ci.sh``) sets ``REPRO_BENCH_SMOKE=1``
 (modules shrink their graph sizes / iteration counts) and runs only the
-snapshot + nodeprog + writepath + recovery + coordination modules — a
+snapshot + nodeprog + writepath + recovery + serving + coordination
+modules — a
 minutes-scale end-to-end check that the data-plane benchmarks still
 build, run, and meet their equivalence bits (coordination rides along
 so the tau sweep's aggressive-concurrency corner — the historical
@@ -40,18 +43,19 @@ def main(argv=None) -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     from . import (block_query, coordination, nodeprog, recovery, roofline,
-                   scalability, snapshot, social, traversal, writepath)
+                   scalability, serving, snapshot, social, traversal,
+                   writepath)
 
     modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
                ("writepath", writepath), ("recovery", recovery),
-               ("block_query", block_query),
+               ("serving", serving), ("block_query", block_query),
                ("social", social), ("traversal", traversal),
                ("scalability", scalability),
                ("coordination", coordination), ("roofline", roofline)]
     if smoke:
         modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
                    ("writepath", writepath), ("recovery", recovery),
-                   ("coordination", coordination)]
+                   ("serving", serving), ("coordination", coordination)]
     t00 = time.time()
     failures = []
     for name, mod in modules:

@@ -1,0 +1,269 @@
+"""Closed-loop SLO serving benchmark: windowed read admission vs the
+per-program oracle, offered-load sweep past saturation with gatekeeper
+backpressure, and the batched==per-program equivalence bit.
+
+Four sections (all simulated seconds; deterministic for a given seed):
+
+  saturation   — closed-loop client fleet driving pure reads to the
+                 gatekeeper saturation point, per-program admission vs
+                 windowed+adaptive.  Full mode enforces the >=3x
+                 throughput bar (one shared stamp + vectorized routing
+                 amortizes the per-request gatekeeper CPU).
+  sweep        — open-loop Poisson arrivals swept past the service
+                 capacity with bounded admission queues + read retry
+                 sessions: low-load p99 must stay within 1.5x of
+                 per-program admission, and goodput must stay flat
+                 (not collapse) as offered load exceeds capacity.
+                 Gatekeeper service times are scaled up for this
+                 section so saturation is reachable with thousands
+                 (not millions) of simulated requests.
+  equivalence  — identical write history, then identical quiescent
+                 reads under both admission modes; results must be
+                 bit-identical (windowed stamps differ, visibility of
+                 settled data must not).
+  mixed        — TAO read/write mix through GraphQueryServer with
+                 ``read_your_writes=True``: tx acks wait for shard
+                 apply (acks_deferred > 0) and every request completes.
+
+Full mode writes BENCH_serving.json at the repo root.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.configs import PAPER_DEPLOYMENT
+from repro.core import Weaver
+from repro.core.gatekeeper import CostModel
+from repro.data import synth
+from repro.runtime.server import GraphQueryServer
+
+from .common import load_weaver_graph, save_result, stats
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+# windowed-admission config deltas shared by every section
+WINDOWED = dict(read_group_commit=200e-6, read_group_max=128,
+                adaptive_admission=True)
+
+
+def _deploy(seed: int, n_users: int, **over) -> Tuple[Weaver, List[str]]:
+    cfg = dataclasses.replace(PAPER_DEPLOYMENT, seed=seed, **over)
+    w = Weaver(cfg)
+    rng = np.random.default_rng(seed)
+    edges = synth.social_graph(rng, n_users, avg_degree=6)
+    vertices = load_weaver_graph(w, edges)
+    w.settle()
+    return w, vertices
+
+
+# ---- section 1: closed-loop saturation ---------------------------------
+
+
+def saturation(seed: int) -> Dict:
+    # ~1.6ms base read latency (network + NOP visibility gating) means a
+    # closed loop needs throughput*latency clients merely to reach the
+    # per-program gatekeeper capacity (~200k/s at 4 GKs) — size the
+    # fleet well past that so both modes run saturated, not latency-bound
+    n_users = 60 if SMOKE else 200
+    n_clients = 512 if SMOKE else 2048
+    n_requests = 2000 if SMOKE else 10000
+    out = {}
+    for label, over in [("per_program", {}), ("windowed", WINDOWED)]:
+        w, vertices = _deploy(seed, n_users, **over)
+        srv = GraphQueryServer(w)
+        rng = np.random.default_rng(seed + 1)
+        picks = rng.integers(0, len(vertices), size=n_requests)
+
+        def make(i, picks=picks, vertices=vertices):
+            return "prog", ("get_node", [(vertices[int(picks[i])], None)])
+
+        res = srv.run_closed_loop(n_clients, n_requests, make)
+        assert res["completed"] == n_requests, res
+        c = w.counters()
+        res["latency"] = stats(res.pop("latencies_s"))
+        res["mean_batch"] = (c["prog_batch_size_sum"] / c["prog_batches"]
+                             if c["prog_batches"] else 1.0)
+        res["counters"] = {k: v for k, v in c.items() if v}
+        out[label] = res
+    out["speedup"] = (out["windowed"]["throughput_per_s"]
+                      / out["per_program"]["throughput_per_s"])
+    return out
+
+
+# ---- section 2: open-loop offered-load sweep ---------------------------
+
+
+def sweep(seed: int) -> Dict:
+    """Offered load vs goodput/latency with throttling on.
+
+    Service times are inflated (gk_stamp 200us, gk_batch_prog 50us) so
+    the 2-gatekeeper capacity lands near 40k reads/s and the sweep can
+    cross it with a few thousand requests per point.
+    """
+    cost = CostModel(gk_stamp=200e-6, gk_batch_prog=50e-6)
+    base = dict(n_gatekeepers=2, n_shards=4, cost=cost,
+                admission_queue_limit=64, read_retry_timeout=4e-3,
+                **WINDOWED)
+    n_users = 40 if SMOKE else 80
+    duration = 0.02 if SMOKE else 0.05
+    rates = [10e3, 40e3] if SMOKE else [10e3, 20e3, 40e3, 60e3, 80e3]
+    points = []
+    for rate in rates:
+        w, vertices = _deploy(seed, n_users, **base)
+        srv = GraphQueryServer(w)
+        n_requests = int(rate * duration)
+        rng = np.random.default_rng(seed + 2)
+        picks = rng.integers(0, len(vertices), size=n_requests)
+
+        def make(i, picks=picks, vertices=vertices):
+            return "prog", ("get_node", [(vertices[int(picks[i])], None)])
+
+        res = srv.run_open_loop(rate, n_requests, make, seed=seed + 3,
+                                timeout=20.0)
+        c = w.counters()
+        res["latency"] = stats(res.pop("latencies_s"))
+        res["shed"] = c["progs_shed"]
+        res["retries"] = c["prog_retries"]
+        res["gaveup"] = c["prog_gaveup"]
+        points.append(res)
+    # per-program oracle at the lowest rate, for the low-load p99 bar
+    w, vertices = _deploy(seed, n_users, n_gatekeepers=2, n_shards=4,
+                          cost=cost, read_retry_timeout=4e-3)
+    srv = GraphQueryServer(w)
+    n_requests = int(rates[0] * duration)
+    rng = np.random.default_rng(seed + 2)
+    picks = rng.integers(0, len(vertices), size=n_requests)
+    res = srv.run_open_loop(
+        rates[0], n_requests,
+        lambda i: ("prog", ("get_node", [(vertices[int(picks[i])], None)])),
+        seed=seed + 3, timeout=20.0)
+    oracle = stats(res.pop("latencies_s"))
+    goodputs = [p["goodput_per_s"] for p in points]
+    return {
+        "points": points,
+        "per_program_low_load": oracle,
+        "low_load_p99_ratio": points[0]["latency"]["p99_ms"]
+        / max(oracle["p99_ms"], 1e-9),
+        "goodput_flat": goodputs[-1] / max(max(goodputs), 1e-9),
+    }
+
+
+# ---- section 3: batched == per-program equivalence ---------------------
+
+
+def equivalence(seed: int) -> Dict:
+    """Same writes, same quiescent reads, both admission modes —
+    results (not stamps: windows share one) must be bit-identical."""
+    n_users = 40 if SMOKE else 120
+    n_reads = 200 if SMOKE else 800
+    results = {}
+    for label, over in [("per_program", {}), ("windowed", WINDOWED)]:
+        w, vertices = _deploy(seed, n_users, **over)
+        rng = np.random.default_rng(seed + 4)
+        # write churn: edge creates/deletes, then settle to quiescence
+        for _ in range(40 if SMOKE else 160):
+            a = vertices[int(rng.integers(0, len(vertices)))]
+            b = vertices[int(rng.integers(0, len(vertices)))]
+            tx = w.begin_tx()
+            tx.create_edge(a, b)
+            w.submit_tx(tx, lambda r: None)
+        w.settle(50e-3)
+        picks = rng.integers(0, len(vertices), size=n_reads)
+        got: List[Tuple[int, str]] = []
+        for i in range(n_reads):
+            v = vertices[int(picks[i])]
+            name = ("get_edges", "count_edges", "get_node")[i % 3]
+            w.submit_program(name, [(v, None)],
+                             lambda r, s, l, i=i: got.append((i, repr(r))))
+        w.settle(50e-3)
+        assert len(got) == n_reads, (label, len(got))
+        results[label] = sorted(got)
+    return {"equivalent": int(results["per_program"] == results["windowed"]),
+            "n_reads": n_reads}
+
+
+# ---- section 4: mixed TAO workload with read-your-writes ---------------
+
+
+def mixed(seed: int) -> Dict:
+    n_users = 50 if SMOKE else 150
+    n_requests = 400 if SMOKE else 2000
+    w, vertices = _deploy(seed, n_users, read_your_writes=True, **WINDOWED)
+    srv = GraphQueryServer(w)
+    rng = np.random.default_rng(seed + 5)
+    ops = synth.tao_workload(rng, n_requests, 0.9, vertices)
+
+    def make(i):
+        op = ops[i]
+        kind = op["type"]
+        if kind in ("get_edges", "count_edges", "get_node"):
+            return "prog", (kind, [(op["v"], None)])
+        tx = w.begin_tx()
+        if kind == "create_edge":
+            tx.create_edge(op["v"], op["u"])
+        else:                      # delete_edge: best-effort on a live edge
+            v = w.read_vertex(op["v"])
+            if v and v["edges"]:
+                tx.delete_edge(op["v"], next(iter(v["edges"])))
+            else:
+                tx.create_edge(op["v"], op["v"] + "_x")
+        return "tx", tx
+
+    res = srv.run_closed_loop(64 if SMOKE else 192, n_requests, make)
+    c = w.counters()
+    assert res["completed"] == n_requests, res
+    # racing deletes may abort (application-level conflict, not a serving
+    # failure); sessions must never give up though
+    assert res["ok"] >= 0.98 * n_requests, res
+    assert c["client_gaveup"] == 0 and c["prog_gaveup"] == 0, c
+    assert c["acks_deferred"] > 0, "read_your_writes never deferred an ack"
+    res["latency"] = stats(res.pop("latencies_s"))
+    res["acks_deferred"] = c["acks_deferred"]
+    return res
+
+
+def main(seed: int = 0) -> None:
+    out = {
+        "saturation": saturation(seed),
+        "sweep": sweep(seed),
+        "equivalence": equivalence(seed),
+        "mixed": mixed(seed),
+    }
+    sat = out["saturation"]
+    swp = out["sweep"]
+    print(f"serving,per_program_reads_per_s,"
+          f"{sat['per_program']['throughput_per_s']:.0f}")
+    print(f"serving,windowed_reads_per_s,"
+          f"{sat['windowed']['throughput_per_s']:.0f}")
+    print(f"serving,windowed_speedup,{sat['speedup']:.2f}")
+    print(f"serving,mean_window_batch,{sat['windowed']['mean_batch']:.1f}")
+    print(f"serving,low_load_p99_ratio,{swp['low_load_p99_ratio']:.2f}")
+    print(f"serving,goodput_flat_past_saturation,{swp['goodput_flat']:.2f}")
+    print(f"serving,equivalent,{out['equivalence']['equivalent']}")
+    print(f"serving,mixed_p99_ms,{out['mixed']['latency']['p99_ms']:.2f}")
+
+    assert out["equivalence"]["equivalent"] == 1, \
+        "windowed reads diverged from the per-program oracle"
+    if not SMOKE:
+        assert sat["speedup"] >= 3.0, \
+            f"windowed speedup {sat['speedup']:.2f} < 3x bar"
+        assert swp["low_load_p99_ratio"] <= 1.5, \
+            f"low-load p99 ratio {swp['low_load_p99_ratio']:.2f} > 1.5x bar"
+        assert swp["goodput_flat"] >= 0.8, \
+            f"goodput collapsed past saturation ({swp['goodput_flat']:.2f})"
+        save_result("serving", out)
+        root = os.path.join(os.path.dirname(__file__), "..")
+        with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
+            json.dump(out, f, indent=1, default=str)
+    else:
+        save_result("serving_smoke", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -46,6 +46,7 @@ def render_bench_table() -> str:
     npg = _bench("BENCH_nodeprog.json")
     wp = _bench("BENCH_writepath.json")
     rc = _bench("BENCH_recovery.json")
+    sv = _bench("BENCH_serving.json")
     x = lambda v: f"{v:.1f}x"
     rows = [
         ("Snapshot engine", "cold columnar build vs seed per-object path",
@@ -82,9 +83,16 @@ def render_bench_table() -> str:
          f"{rc['mttr'][-1]['replayed_ops']} replayed ops; shard failover "
          f"{rc['goodput']['recovery_ms']:.0f} ms, 0 lost acks)",
          x(rc["mttr"][-1]["walk_over_wal"])),
+        ("Serving",
+         f"windowed vs per-program read admission at saturation "
+         f"(mean window "
+         f"{sv['saturation']['windowed']['mean_batch']:.0f}, low-load p99 "
+         f"ratio {sv['sweep']['low_load_p99_ratio']:.2f}, goodput past "
+         f"saturation {sv['sweep']['goodput_flat']:.2f} of peak)",
+         x(sv["saturation"]["speedup"])),
     ]
     eq = all([sn["equivalent"], npg["equivalent"], wp["equivalent"],
-              rc["equivalent"]])
+              rc["equivalent"], sv["equivalence"]["equivalent"]])
     out = ["| Benchmark | Headline metric | Speedup |", "|---|---|---|"]
     out += [f"| {a} | {b} | **{c}** |" for a, b, c in rows]
     out.append("")
@@ -92,6 +100,7 @@ def render_bench_table() -> str:
                f"nodeprog={int(npg['equivalent'])} "
                f"writepath={int(wp['equivalent'])} "
                f"recovery={int(rc['equivalent'])} "
+               f"serving={int(sv['equivalence']['equivalent'])} "
                f"({'all identical to the scalar oracle' if eq else 'DIVERGED'}).")
     return "\n".join(out)
 

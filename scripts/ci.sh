@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 test suite, then the benchmark harness in smoke
-# mode (snapshot + nodeprog + writepath + coordination — the last one
-# covers the tau sweep's aggressive-concurrency corner, the historical
-# oracle CycleError; nodeprog's smoke includes the ragged
-# get_edges/clustering section), then the docs consistency check
+# mode (snapshot + nodeprog + writepath + coordination + recovery +
+# serving — coordination covers the tau sweep's aggressive-concurrency
+# corner, the historical oracle CycleError; nodeprog's smoke includes
+# the ragged get_edges/clustering section; serving asserts the windowed
+# read-admission equivalence bit and exercises the shed/retry sweep at
+# smoke sizes), then the docs consistency check
 # (README/docs exist, links + WeaverConfig/Counters/module references
 # resolve, README results table matches the checked-in BENCH files).
 # Exits non-zero on ANY failure (pytest failure, benchmark exception,

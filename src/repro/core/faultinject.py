@@ -25,10 +25,15 @@ by ``WeaverConfig.fault_plan``) evaluates them at two kinds of sites:
 
 * **Message faults** — ``Simulator.send`` asks :meth:`on_send` whether
   to drop, duplicate or delay a message.  Drops and dups are restricted
-  to client-boundary handlers (``reply``, ``submit_tx``, ``_resubmit``)
-  because gatekeeper->shard channels are FIFO-with-sequence-numbers: a
+  to client-boundary and read-path handlers (``reply``, ``submit_tx``,
+  ``_resubmit``, ``submit_program``, ``deliver_prog_batch``) because
+  gatekeeper->shard write channels are FIFO-with-sequence-numbers: a
   dropped ``enqueue`` would stall the channel forever, which models a
-  TCP connection loss, not a packet fault.
+  TCP connection loss, not a packet fault.  Read deliveries carry no
+  sequence numbers: a dropped window is recovered by the client read
+  sessions (``read_retry_timeout``), a duplicated one is absorbed by
+  shard coalescing plus the coordinator's per-delivery report guard
+  (single-hop programs; multi-hop dup semantics are not modeled).
 
 Occurrence counting (``after`` / ``count``) makes every plan
 deterministic for a given workload; :meth:`FaultPlan.random` draws a
@@ -126,7 +131,8 @@ class FaultInjector:
 
     #: handlers message faults may touch (client boundary only — see
     #: module docstring for why shard channel messages are exempt)
-    FAULTABLE_FNS = ("reply", "submit_tx", "_resubmit")
+    FAULTABLE_FNS = ("reply", "submit_tx", "_resubmit", "submit_program",
+                     "deliver_prog_batch")
 
     def __init__(self, plan: FaultPlan, sim, armed: bool = True):
         self.plan = plan

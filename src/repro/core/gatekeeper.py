@@ -72,6 +72,10 @@ class CostModel:
                                        # dispatch overhead (gk_stamp) is
                                        # paid once per window instead of
                                        # once per tx
+    gk_batch_prog: float = 2.0e-6      # per-program CPU inside a windowed
+                                       # read-admission flush (the read-
+                                       # side mirror of gk_batch_tx: one
+                                       # shared stamp, vectorized routing)
     bsp_update: float = 3.0e-6         # GraphLab engine overhead per vertex
                                        # update (scheduler + state commit;
                                        # OSDI'12 reports ~0.1-0.3M
@@ -83,11 +87,50 @@ class CostModel:
 MAX_RETRIES = 16
 
 
+class AdaptiveWindow:
+    """AIMD admission-window controller (the classic group-commit
+    refinement, applied to both the write and the read window).
+
+    ``current`` starts at zero so an idle server stamps each request
+    immediately — no latency tax on light traffic.  Every flush reports
+    its batch size and the server's serve backlog (seconds of queued CPU
+    at the flush instant).  A full window (``n >= cap``) or any serve
+    backlog grows the window multiplicatively toward ``max_window``
+    (entering at a floor of ``max_window * floor_frac``); a singleton
+    flush on an idle server halves it back toward zero.  The backlog
+    signal is what makes growth possible from ``current == 0``: with a
+    zero window every flush has batch size 1, so batch size alone could
+    never trigger growth."""
+
+    __slots__ = ("max_window", "floor", "grow", "shrink", "current")
+
+    def __init__(self, max_window: float, floor_frac: float = 1.0 / 16.0,
+                 grow: float = 2.0, shrink: float = 0.5):
+        self.max_window = max_window
+        self.floor = max_window * floor_frac
+        self.grow = grow
+        self.shrink = shrink
+        self.current = 0.0
+
+    def on_flush(self, n: int, cap: int, backlog: float) -> None:
+        """Observe one closed window: ``n`` requests flushed against a
+        cap of ``cap``, with ``backlog`` seconds of serve queue."""
+        if n >= cap or backlog > 0.0:
+            self.current = min(self.max_window,
+                               max(self.current * self.grow, self.floor))
+        elif n <= 1:
+            nxt = self.current * self.shrink
+            self.current = nxt if nxt >= self.floor else 0.0
+
+
 class Gatekeeper:
     def __init__(self, sim: Simulator, gid: int, n_gk: int,
                  store: BackingStore, oracle: OracleServer,
                  cost: CostModel, tau: float, tau_nop: float,
-                 group_window: float = 0.0, group_max: int = 64):
+                 group_window: float = 0.0, group_max: int = 64,
+                 read_window: float = 0.0, read_group_max: int = 128,
+                 adaptive: bool = False, admission_limit: int = 0,
+                 ack_on_apply: bool = False):
         self.sim = sim
         sim.register(self)
         self.gid = gid
@@ -114,6 +157,26 @@ class Gatekeeper:
         self._group: List[Tuple] = []       # (client, ops, reply, retries, t)
         self._group_flush_pending = False
         self._group_gen = 0                 # invalidates stale window timers
+        # windowed read admission (0 = per-program path, the oracle)
+        self.read_window = read_window
+        self.read_group_max = max(1, read_group_max)
+        self._rgroup: List[Tuple] = []      # (coordinator, name, entries, pid)
+        self._rgroup_flush_pending = False
+        self._rgroup_gen = 0                # invalidates stale window timers
+        # adaptive AIMD controllers (None = fixed configured window)
+        self._wwin = AdaptiveWindow(group_window) \
+            if adaptive and group_window > 0 else None
+        self._awin = AdaptiveWindow(read_window) \
+            if adaptive and read_window > 0 else None
+        # load leveling: admitted-but-unstamped requests (open windows +
+        # the serve queue); past admission_limit new arrivals are shed
+        # and the client session's ack timeout recovers them (0 = off)
+        self.admission_limit = admission_limit
+        self._admitted = 0
+        # read-your-writes: defer tx acks until every destination shard
+        # applied; stamp-key -> {"waiting": shard ids, "replies": [...]}
+        self.ack_on_apply = ack_on_apply
+        self._pending_acks: Dict[Tuple, dict] = {}
 
     # -- wiring ---------------------------------------------------------------
     def start(self, peers: List["Gatekeeper"], shards: List[object]) -> None:
@@ -140,6 +203,12 @@ class Gatekeeper:
         # the retry layer recovered every one of them.
         self.sim.counters.group_txs_lost += len(self._group)
         self._group.clear()
+        # reads admitted to a still-open window die the same way; their
+        # sessions (read_retry_timeout > 0) resubmit to the promoted
+        # backup, exactly like tx sessions
+        self.sim.counters.read_progs_lost += len(self._rgroup)
+        self._rgroup.clear()
+        self._pending_acks.clear()
 
     def _crash_point(self, point: str) -> bool:
         """Fault-injection hook: die here if the plan says so."""
@@ -156,6 +225,19 @@ class Gatekeeper:
         start = max(self.sim.now, self._busy_until)
         self._busy_until = start + service
         self.sim.schedule(self._busy_until - self.sim.now, fn, *args)
+
+    def _observe_admission(self, kind: str, window: float, depth: int) -> None:
+        """Histogram one closed admission window (``kind`` = "r"/"w"):
+        the effective window length (power-of-two us buckets) and the
+        flushed batch size (power-of-two buckets)."""
+        cnt = self.sim.counters
+        us = int(window * 1e6)
+        wb = 0 if us <= 0 else 1 << (us - 1).bit_length()
+        k = f"{kind}:{wb}us"
+        cnt.admission_window_hist[k] = cnt.admission_window_hist.get(k, 0) + 1
+        db = 1 << max(0, depth - 1).bit_length()
+        k = f"{kind}:{db}"
+        cnt.admission_depth_hist[k] = cnt.admission_depth_hist.get(k, 0) + 1
 
     # -- clocks ----------------------------------------------------------------
     def _tick(self) -> Stamp:
@@ -211,6 +293,14 @@ class Gatekeeper:
             return
         if t_submit is None:
             t_submit = self.sim.now
+        if self.admission_limit and self._admitted >= self.admission_limit:
+            # load leveling: shed past the depth bound — no serve round
+            # is charged, and the client session's ack timeout resubmits
+            # with backoff (PR 6 retry machinery), so overload turns
+            # into delay instead of a collapsing serve queue
+            self.sim.counters.txs_shed += 1
+            return
+        self._admitted += 1
 
         if self.group_window > 0:
             # ---- group-commit admission: join the open window --------
@@ -218,17 +308,24 @@ class Gatekeeper:
             if self._crash_point("mid_window"):
                 # the admitted-but-unflushed window dies with the server
                 self.sim.counters.group_txs_lost += len(self._group)
+                self._admitted -= len(self._group)
                 self._group.clear()
                 return
             if len(self._group) >= self.group_max:
                 self._flush_group()
             elif not self._group_flush_pending:
-                self._group_flush_pending = True
-                self.sim.schedule(self.group_window, self._flush_timer,
-                                  self._group_gen)
+                delay = (self._wwin.current if self._wwin is not None
+                         else self.group_window)
+                if delay <= 0.0:         # adaptive window shrunk to zero:
+                    self._flush_group()  # stamp immediately, stay latency-
+                else:                    # neutral while the system is idle
+                    self._group_flush_pending = True
+                    self.sim.schedule(delay, self._flush_timer,
+                                      self._group_gen)
             return
 
         def _go() -> None:
+            self._admitted -= 1
             if not self.alive:
                 return
             stamp = self._tick()
@@ -262,11 +359,19 @@ class Gatekeeper:
             return
         batch, self._group = self._group, []
         if self.paused:                 # re-buffer through the epoch barrier
+            self._admitted -= len(batch)   # re-counted on barrier replay
             for tx in batch:
                 self._pause_buffer.append((self.submit_tx, tx))
             return
+        backlog = max(0.0, self._busy_until - self.sim.now)
+        window = (self._wwin.current if self._wwin is not None
+                  else self.group_window)
+        if self._wwin is not None:
+            self._wwin.on_flush(len(batch), self.group_max, backlog)
+        self._observe_admission("w", window, len(batch))
 
         def _go() -> None:
+            self._admitted -= len(batch)
             if not self.alive:
                 return
             stamped = [(client, ops, self._tick(), reply, retries, t_submit,
@@ -302,8 +407,10 @@ class Gatekeeper:
         if ok and fwd:
             # the original forwards may have died with the old server;
             # re-send them — shards skip stamps they already applied
+            # (and still ack the skip in read-your-writes mode)
             self._forward(stamp, fwd)
-        self.sim.send(self.store, client, reply, ok, err, stamp, nbytes=64)
+        self._reply_after_apply(client, reply, ok, err, stamp,
+                                fwd if ok else None)
         return True
 
     def _forward(self, stamp, fwd) -> None:
@@ -317,6 +424,41 @@ class Gatekeeper:
             self.sim.send(self, shard, shard.enqueue, self.gid,
                           self._seq[sid], stamp, "tx", slice_ops,
                           nbytes=64 + 48 * len(slice_ops))
+
+    # -- read-your-writes ack mode (WeaverConfig.read_your_writes) -----------
+    def _reply_after_apply(self, client, reply, ok: bool, err, stamp,
+                           fwd) -> None:
+        """Send the client ack — or, in read-your-writes mode, defer it
+        until every destination shard acked applying this tx's slices,
+        so an acked write is visible to any subsequent read.  Aborts and
+        shard-less commits ack immediately either way.  The registry is
+        list-valued per stamp key because the dedup gate can re-forward
+        (and so re-defer) an already-recorded commit whose original ack
+        was lost."""
+        if not (self.ack_on_apply and ok and fwd):
+            self.sim.send(self.store, client, reply, ok, err, stamp, nbytes=64)
+            return
+        self.sim.counters.acks_deferred += 1
+        rec = self._pending_acks.setdefault(
+            stamp.key(), {"waiting": set(), "replies": []})
+        rec["waiting"].update(sid for sid, _ in fwd)
+        rec["replies"].append((client, reply, ok, err, stamp))
+
+    def on_shard_ack(self, keys: List[Tuple], sid: int) -> None:
+        """A shard applied the listed stamp keys; release any client
+        acks waiting on them once all their shards reported."""
+        if not self.alive:
+            return
+        for key in keys:
+            rec = self._pending_acks.get(key)
+            if rec is None:
+                continue
+            rec["waiting"].discard(sid)
+            if not rec["waiting"]:
+                del self._pending_acks[key]
+                for client, reply, ok, err, stamp in rec["replies"]:
+                    self.sim.send(self, client, reply, ok, err, stamp,
+                                  nbytes=64)
 
     def _at_store(self, client, ops, stamp, reply, retries, t_submit,
                   txid) -> None:
@@ -338,9 +480,12 @@ class Gatekeeper:
         tx = (client, ops, stamp, reply, retries, t_submit, txid)
         write_set = BackingStore.write_set(ops)
         seen: set = set()                  # last-update keys already refined
+        table_seen = [-1]                  # LastUpdateTable.mutations at the
+        #                                    last validation pass
 
         def _validate() -> Optional[List[Stamp]]:
             """Fresh concurrent residue, or None if a retry was issued."""
+            table_seen[0] = self.store.last_updates.mutations
             fresh: List[Stamp] = []
             for vid in write_set:
                 upd = self.store.last_update_of(vid)
@@ -376,12 +521,18 @@ class Gatekeeper:
         def _commit() -> None:
             if not self.alive or self._crash_point("pre_wal"):
                 return                     # nothing durable, nothing forwarded
-            fresh = _validate()            # revalidate at the commit instant
-            if fresh is None:
-                return
-            if fresh:
-                _refine_then(fresh, self.cost.oracle_rtt)
-                return
+            # revalidate at the commit instant — unless no last-update
+            # stamp was recorded since the previous pass (unchanged
+            # table ⇒ identical verdicts and an empty un-refined residue)
+            if self.store.last_updates.mutations == table_seen[0]:
+                cnt.revalidations_skipped += 1
+            else:
+                fresh = _validate()
+                if fresh is None:
+                    return
+                if fresh:
+                    _refine_then(fresh, self.cost.oracle_rtt)
+                    return
             try:
                 fwd = self.store.apply(ops, stamp, txid=txid)
             except ValueError as e:        # logical error -> abort, not forwarded
@@ -398,8 +549,10 @@ class Gatekeeper:
             # forward per-shard slices BEFORE acking, so an acked tx is
             # always either at its shards or recoverable from the log
             self._forward(stamp, fwd)
-            # response to client: commit point is the backing store (§4.4 part 2)
-            self.sim.send(self.store, client, reply, True, None, stamp, nbytes=64)
+            # response to client: commit point is the backing store (§4.4
+            # part 2); read-your-writes mode additionally holds the ack
+            # until every destination shard applied
+            self._reply_after_apply(client, reply, True, None, stamp, fwd)
 
         service = self.cost.store_op * max(1, len(ops))
         fresh = _validate()
@@ -432,12 +585,15 @@ class Gatekeeper:
         stamps = [t[2] for t in batch]
         write_sets = [BackingStore.write_set(t[1]) for t in batch]
         seen: set = set()              # (upd key, tx key) pairs already refined
+        table_seen = [-1]              # LastUpdateTable.mutations at the
+        #                                last classification pass
 
         def _classify(idx: List[int]
                       ) -> Tuple[List[int],
                                  List[Tuple[int, Stamp, List[Stamp]]]]:
             """Validate ``idx`` against the CURRENT table; issue retries,
             return survivors plus the not-yet-refined concurrent residue."""
+            table_seen[0] = self.store.last_updates.mutations
             verdicts, rows = classify_write_sets(
                 self.store.last_updates,
                 [write_sets[i] for i in idx], [stamps[i] for i in idx])
@@ -473,11 +629,17 @@ class Gatekeeper:
                 return                 # window dies undurable, unacked
             # revalidate at the durability instant: other gatekeepers'
             # windows may have applied since admission, and their writes
-            # must be refined against ours before shards see both
-            live_idx, residue = _classify(live_idx)
-            if residue:
-                _refine_then(residue, self.cost.oracle_rtt, live_idx)
-                return
+            # must be refined against ours before shards see both —
+            # skipped when the LastUpdateTable did not move since the
+            # previous pass (unchanged table ⇒ identical verdicts and an
+            # empty un-refined residue)
+            if self.store.last_updates.mutations == table_seen[0]:
+                cnt.revalidations_skipped += 1
+            else:
+                live_idx, residue = _classify(live_idx)
+                if residue:
+                    _refine_then(residue, self.cost.oracle_rtt, live_idx)
+                    return
             if not live_idx:
                 return
             torn = None
@@ -497,10 +659,10 @@ class Gatekeeper:
                 client, ops, stamp, reply = batch[i][:4]
                 if not ok:             # logical error: this tx only
                     cnt.tx_aborted += 1
-                    replies.append((client, reply, False, err, stamp))
+                    replies.append((client, reply, False, err, stamp, None))
                     continue
                 cnt.tx_committed += 1
-                replies.append((client, reply, True, None, stamp))
+                replies.append((client, reply, True, None, stamp, fwd))
                 per: Dict[int, List[dict]] = {}
                 for sid, op in fwd:
                     per.setdefault(sid, []).append(op)
@@ -517,10 +679,11 @@ class Gatekeeper:
                 self.sim.send(self, shard, shard.enqueue, self.gid,
                               self._seq[sid], wb.stamp, "txbatch", wb,
                               nbytes=wb.nbytes())
-            # reply after the group's durability point (§4.4 part 2)
-            for client, reply, ok, err, stamp in replies:
-                self.sim.send(self.store, client, reply, ok, err, stamp,
-                              nbytes=64)
+            # reply after the group's durability point (§4.4 part 2);
+            # read-your-writes mode holds each commit's ack until its
+            # destination shards applied
+            for client, reply, ok, err, stamp, fwd in replies:
+                self._reply_after_apply(client, reply, ok, err, stamp, fwd)
 
         live, pending_refine = _classify(list(range(len(batch))))
         total_ops = sum(len(batch[i][1]) for i in live)
@@ -548,13 +711,44 @@ class Gatekeeper:
     # -- node programs (§4.2) ------------------------------------------------------
     def submit_program(self, coordinator, prog_name: str,
                        entries: List[Tuple[str, object]], prog_id: int) -> None:
+        """Admit a node program: per-program (``read_window == 0``, the
+        semantic oracle — one ``_serve`` round and a fresh stamp per
+        program) or windowed (accumulate for ``read_window`` seconds /
+        ``read_group_max`` programs and stamp the whole window in ONE
+        serve round; see :meth:`_flush_rgroup`)."""
         if not self.alive:
             return
         if self.paused:
             self._pause_buffer.append((self.submit_program,
                                        (coordinator, prog_name, entries, prog_id)))
             return
+        if self.admission_limit and self._admitted >= self.admission_limit:
+            # load leveling: shed without charging a serve round — the
+            # read session's ack timeout resubmits with backoff
+            self.sim.counters.progs_shed += 1
+            return
+        self._admitted += 1
+
+        if self.read_window > 0:
+            # ---- windowed read admission: join the open window -------
+            self._rgroup.append((coordinator, prog_name, entries, prog_id))
+            if len(self._rgroup) >= self.read_group_max:
+                self._flush_rgroup()
+            elif not self._rgroup_flush_pending:
+                delay = (self._awin.current if self._awin is not None
+                         else self.read_window)
+                if delay <= 0.0:          # adaptive window at zero: stamp
+                    self._flush_rgroup()  # immediately (idle traffic pays
+                else:                     # no window latency)
+                    self._rgroup_flush_pending = True
+                    self.sim.schedule(delay, self._rflush_timer,
+                                      self._rgroup_gen)
+            return
+
         def _go() -> None:
+            self._admitted -= 1
+            if not self.alive:
+                return
             stamp = self._tick()
             by_shard: Dict[int, List[Tuple[str, object]]] = {}
             for vid, params in entries:
@@ -571,3 +765,73 @@ class Gatekeeper:
                               nbytes=64 + 48 * len(ent))
 
         self._serve(self.cost.gk_stamp, _go)
+
+    def _rflush_timer(self, gen: int) -> None:
+        """Read-window deadline; stale-generation timers are no-ops (the
+        write path's ``_flush_timer`` contract — a timer armed for a
+        window that a max-count trigger already flushed must not shorten
+        the NEXT window)."""
+        if gen == self._rgroup_gen:
+            self._flush_rgroup()
+
+    def _flush_rgroup(self) -> None:
+        """Close the read-admission window: stamp every pending program
+        with ONE shared ``_tick()`` stamp in ONE serve round (cost
+        ``gk_stamp + gk_batch_prog * (n-1)``) and ship ONE batched
+        delivery per destination shard for the whole window.
+
+        Reads are side-effect-free, so unlike the write window the
+        programs can SHARE a stamp (each keeps its own prog_id for
+        termination detection): every program in the window sees the
+        identical snapshot, which makes the shard-side plan LRU, the
+        settled-plan reuse, per-stamp queue-clearing state and oracle
+        refinement caches fire once per window instead of once per
+        program — that, plus the amortized serve round, is the whole
+        read-side win."""
+        self._rgroup_flush_pending = False
+        self._rgroup_gen += 1
+        if not self.alive or not self._rgroup:
+            return
+        batch, self._rgroup = self._rgroup, []
+        if self.paused:                 # re-buffer through the epoch barrier
+            self._admitted -= len(batch)   # re-counted on barrier replay
+            for r in batch:
+                self._pause_buffer.append((self.submit_program, r))
+            return
+        backlog = max(0.0, self._busy_until - self.sim.now)
+        window = (self._awin.current if self._awin is not None
+                  else self.read_window)
+        if self._awin is not None:
+            self._awin.on_flush(len(batch), self.read_group_max, backlog)
+        self._observe_admission("r", window, len(batch))
+        cnt = self.sim.counters
+        cnt.prog_batches += 1
+        cnt.prog_batch_size_sum += len(batch)
+
+        def _go() -> None:
+            self._admitted -= len(batch)
+            if not self.alive:
+                return
+            stamp = self._tick()        # ONE shared stamp for the window
+            per_shard: Dict[int, List[Tuple]] = {}
+            for coordinator, prog_name, entries, prog_id in batch:
+                by_shard: Dict[int, List[Tuple[str, object]]] = {}
+                for vid, params in entries:
+                    sid = self.store.shard_of(vid)
+                    if sid is None:
+                        continue
+                    by_shard.setdefault(sid, []).append((vid, params))
+                root_ids = [(f"g{self.gid}", i)
+                            for i in range(len(by_shard))]
+                coordinator.begin(prog_id, prog_name, stamp, root_ids)
+                for (sid, ent), rid in zip(by_shard.items(), root_ids):
+                    per_shard.setdefault(sid, []).append(
+                        (prog_id, rid, prog_name, stamp, ent, coordinator))
+            for sid, dels in per_shard.items():
+                shard = self.shards[sid]
+                nbytes = 64 + sum(32 + 48 * len(d[4]) for d in dels)
+                self.sim.send(self, shard, shard.deliver_prog_batch, dels,
+                              nbytes=nbytes)
+
+        self._serve(self.cost.gk_stamp
+                    + self.cost.gk_batch_prog * (len(batch) - 1), _go)

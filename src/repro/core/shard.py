@@ -102,7 +102,8 @@ class Shard:
                  use_frontier: bool = True,
                  plan_delta: bool = True,
                  coalesce: bool = True,
-                 plan_cache_entries: int = 4):
+                 plan_cache_entries: int = 4,
+                 ack_applies: bool = False):
         self.sim = sim
         sim.register(self)
         self.sid = sid
@@ -134,12 +135,22 @@ class Shard:
         self._order_cache: Dict[Tuple, Order] = {}
         # stamps this partition already holds (filled by recovery replay,
         # extended at every apply): re-forwarded slices of transactions
-        # that were durable before a crash are skipped, never re-applied
+        # that were durable before a crash are skipped, never re-applied.
+        # _applied_at records the apply time: GC must NOT prune an entry
+        # a client retry session could still re-forward (dedup-gate
+        # resubmission of a committed-but-unacked tx), or the re-forward
+        # would double-apply — same retention contract as the store's
+        # tx_results
         self._applied: Dict[Tuple, Stamp] = {}
+        self._applied_at: Dict[Tuple, float] = {}
         self.busy = False
         self.alive = True
         self.peers: List["Shard"] = []   # indexable by sid
         self._stall = 0.0
+        # read-your-writes support: ack applied tx stamps back to the
+        # forwarding gatekeeper (list wired by Weaver; indexable by gid)
+        self.ack_applies = ack_applies
+        self.gatekeepers: List[object] = []
 
     def start(self, peers: List["Shard"]) -> None:
         self.peers = peers
@@ -195,6 +206,29 @@ class Shard:
             # immediately instead of re-waiting.
             "cleared": self._prog_cleared.setdefault(stamp.key(), set()),
         })
+        self._kick()
+
+    def deliver_prog_batch(self, deliveries: List[Tuple]) -> None:
+        """One windowed read-admission flush's deliveries for this shard
+        (``repro.core.gatekeeper._flush_rgroup``): a list of
+        ``(prog_id, delivery_id, name, stamp, entries, coordinator)``
+        sharing the window's stamp, shipped as ONE message instead of
+        one per program.  Queue-clearing state is keyed by stamp, so the
+        whole window clears (and refines) once."""
+        if not self.alive:
+            return
+        for prog_id, delivery_id, name, stamp, entries, coordinator \
+                in deliveries:
+            if prog_id in self._finished_progs:
+                self.sim.send(self, coordinator, coordinator.report, prog_id,
+                              delivery_id, [], [], nbytes=32)
+                continue
+            self.pending_progs.append({
+                "prog_id": prog_id, "delivery_id": delivery_id, "name": name,
+                "stamp": stamp, "entries": entries,
+                "coordinator": coordinator,
+                "cleared": self._prog_cleared.setdefault(stamp.key(), set()),
+            })
         self._kick()
 
     def finish_prog(self, prog_id: int) -> None:
@@ -306,7 +340,7 @@ class Shard:
                 service = self._exec_batch_prefix(g)
             else:
                 item = self.queues[g].popleft()
-                service = self._exec_item(item)
+                service = self._exec_item(item, g)
             self._finish_after(service + self._stall)
             return
         # idle: wait for the next enqueue/NOP
@@ -371,7 +405,21 @@ class Shard:
         return None
 
     # ------------------------------------------------------------------ execute
-    def _exec_item(self, item: _QueueItem) -> float:
+    def _ack_applied(self, gid: int, stamps: List[Stamp]) -> None:
+        """Read-your-writes: tell the forwarding gatekeeper these tx
+        stamps are applied here (it releases deferred client acks).
+        Dedup-skipped stamps ack too — the write IS in the partition."""
+        if not self.ack_applies or not stamps:
+            return
+        gk = (self.gatekeepers[gid]
+              if gid < len(self.gatekeepers) else None)
+        if gk is None or not getattr(gk, "alive", False):
+            return
+        keys = [s.key() for s in stamps]
+        self.sim.send(self, gk, gk.on_shard_ack, keys, self.sid,
+                      nbytes=32 + 16 * len(keys))
+
+    def _exec_item(self, item: _QueueItem, gid: int) -> float:
         if item.kind == "nop":
             return 0.2e-6
         if self._crash_point("mid_shard_apply"):
@@ -380,11 +428,14 @@ class Shard:
         ts = item.stamp
         if ts.key() in self._applied:    # re-forwarded after a recovery
             self.sim.counters.shard_dedup_skips += 1
+            self._ack_applied(gid, [ts])
             return 0.2e-6
         for op in ops:
             # KeyError here would be replica divergence (store validated)
             self.partition.apply_op(op, ts)
         self._applied[ts.key()] = ts
+        self._applied_at[ts.key()] = self.sim.now
+        self._ack_applied(gid, [ts])
         return self.cost.shard_op * max(1, len(ops))
 
     def _exec_batch_prefix(self, g: int) -> float:
@@ -433,6 +484,7 @@ class Shard:
                 compare(items[take][0], s) is Order.BEFORE for s in bounds):
             take += 1
         n_ops = self._apply_deduped(items[:take])
+        self._ack_applied(g, [s for s, _ in items[:take]])
         if take < len(items):
             self.queues[g].appendleft(_QueueItem(
                 items[take][0], "txbatch", WriteBatch(items[take:])))
@@ -447,6 +499,7 @@ class Shard:
         n = self.partition.apply_batch(fresh)
         for s, _ in fresh:
             self._applied[s.key()] = s
+            self._applied_at[s.key()] = self.sim.now
         return n
 
     def _refine_batch(self, stamps: List[Stamp], at: Stamp) -> Dict:
@@ -591,6 +644,12 @@ class Shard:
                 if (p["prog_id"] == prog["prog_id"]
                         and p["name"] == prog["name"]
                         and p["stamp"].key() == prog["stamp"].key()
+                        # a message-dup of an already-merged delivery must
+                        # NOT concatenate its entries again; left queued,
+                        # it re-executes and the coordinator dedups its
+                        # same-id report
+                        and p["delivery_id"] != prog["delivery_id"]
+                        and p["delivery_id"] not in extra_s
                         and not isinstance(p["entries"], Frontier)):
                     merged_e.extend(p["entries"])
                     extra_s.append(p["delivery_id"])
@@ -609,6 +668,10 @@ class Shard:
             mergeable = (p["prog_id"] == prog["prog_id"]
                          and p["name"] == prog["name"]
                          and p["stamp"].key() == prog["stamp"].key()
+                         # message-dup guard: same contract as the scalar
+                         # branch above
+                         and p["delivery_id"] != prog["delivery_id"]
+                         and p["delivery_id"] not in extra
                          and isinstance(e, Frontier)
                          and e.depth == base.depth
                          and (e.vals is None) == (base.vals is None)
@@ -731,10 +794,17 @@ class Shard:
 
     # ------------------------------------------------------------------ GC / recovery
     def collect(self, horizon: Stamp) -> int:
+        # past-horizon dedup entries stay until no client retry session
+        # can re-forward them anymore (BackingStore.RESULT_RETENTION is
+        # the same bound for recorded tx outcomes)
+        from .store import BackingStore
+        keep_after = self.sim.now - BackingStore.RESULT_RETENTION
         drop = [k for k, s in self._applied.items()
-                if compare(s, horizon) is Order.BEFORE]
+                if compare(s, horizon) is Order.BEFORE
+                and self._applied_at.get(k, self.sim.now) < keep_after]
         for k in drop:
             del self._applied[k]
+            self._applied_at.pop(k, None)
         return self.partition.collect(horizon)
 
     def recover_from(self, ops: List[dict]) -> None:
@@ -747,10 +817,12 @@ class Shard:
         self.partition = MVGraphPartition(self.n_gk, self.intern)
         self._plans.clear()              # plans referenced the old columns
         self._applied = {}
+        self._applied_at = {}
         for op in ops:
             ts = op["ts"]
             self.partition.apply_op(op, ts)
             self._applied[ts.key()] = ts
+            self._applied_at[ts.key()] = self.sim.now
 
     def enter_epoch(self, epoch: int) -> None:
         """Cluster-manager barrier: fresh FIFO channels in the new epoch."""

@@ -111,9 +111,38 @@ class Counters:
     msgs_dropped: int = 0          # messages dropped by fault injection
     msgs_duplicated: int = 0       # messages duplicated by fault injection
     msgs_delayed: int = 0          # messages delayed by fault injection
+    prog_batches: int = 0          # windowed read-admission flushes
+    prog_batch_size_sum: int = 0   # programs admitted across read windows
+    read_progs_lost: int = 0       # window reads that died with their
+    #                                gatekeeper (read sessions recover
+    #                                them via timeout resubmission)
+    progs_shed: int = 0            # program submissions shed by gatekeeper
+    #                                admission backpressure
+    txs_shed: int = 0              # tx submissions shed by gatekeeper
+    #                                admission backpressure
+    prog_retries: int = 0          # read-session resubmissions after an
+    #                                ack timeout (shed/loss recovery)
+    prog_gaveup: int = 0           # read sessions that exhausted the
+    #                                retry budget (None result surfaced)
+    revalidations_skipped: int = 0  # commit-instant write-set
+    #                                 revalidations skipped because the
+    #                                 LastUpdateTable mutation sequence
+    #                                 number did not move since admission
+    acks_deferred: int = 0         # tx acks deferred until every
+    #                                destination shard applied
+    #                                (read_your_writes mode)
+    admission_window_hist: dict = field(default_factory=dict)
+    #                                effective admission-window length at
+    #                                flush, power-of-two us buckets keyed
+    #                                "r:<bucket>us" / "w:<bucket>us"
+    admission_depth_hist: dict = field(default_factory=dict)
+    #                                admission batch size at flush,
+    #                                power-of-two buckets keyed
+    #                                "r:<bucket>" / "w:<bucket>"
 
     def snapshot(self) -> dict:
-        return dict(self.__dict__)
+        return {k: (dict(v) if isinstance(v, dict) else v)
+                for k, v in self.__dict__.items()}
 
 
 class Simulator:

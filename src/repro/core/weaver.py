@@ -78,6 +78,9 @@ class ProgCoordinator:
         st = self.active.get(prog_id)
         if st is None:
             return
+        if delivery_id in st["reported"]:
+            return   # duplicated report (message-dup fault): outputs and
+        #              counters must not double-count
         st["reported"].add(delivery_id)
         st["announced"].update(children)
         st["announced"].add(delivery_id)
@@ -113,6 +116,21 @@ class ProgCoordinator:
             if cb is not None:
                 cb(result, st["stamp"], latency)
 
+    def reject(self, prog_id: int) -> None:
+        """A gatekeeper shed this submission before stamping (admission
+        backpressure): nothing was announced, so just surface the miss —
+        the read session's ack timeout resubmits."""
+        self.active.pop(prog_id, None)
+
+    def abandon(self, prog_id: int) -> None:
+        """A read session gave up on (or superseded) this attempt: drop
+        its termination state and ignore any late reports."""
+        self.active.pop(prog_id, None)
+        self.done.add(prog_id)
+        self.on_complete.pop(prog_id, None)
+        for sh in self.shards:
+            sh.finish_prog(prog_id)
+
 
 @dataclass
 class WeaverConfig:
@@ -130,6 +148,35 @@ class WeaverConfig:
     #                                   path, the semantic oracle); see
     #                                   repro.core.writepath
     write_group_max: int = 64    # flush a window early at this many txs
+    read_group_commit: float = 0.0    # windowed read admission: accumulate
+    #                                   submit_program calls for this many
+    #                                   simulated seconds and stamp the
+    #                                   whole window (ONE shared stamp) in
+    #                                   one serve round (0 = per-program
+    #                                   path, the semantic oracle)
+    read_group_max: int = 128    # flush a read window early at this many
+    #                              programs
+    adaptive_admission: bool = False  # AIMD controller on both admission
+    #                                   windows: shrink toward zero when
+    #                                   idle, grow toward the configured
+    #                                   max under load (see
+    #                                   gatekeeper.AdaptiveWindow)
+    admission_queue_limit: int = 0    # gatekeeper load leveling: shed new
+    #                                   admissions past this many admitted-
+    #                                   but-unstamped requests (0 = off);
+    #                                   client sessions recover sheds via
+    #                                   their ack timeouts
+    read_retry_timeout: float = 0.0   # read-session ack-timeout base in
+    #                                   simulated seconds: resubmit with
+    #                                   backoff + jitter on shed/loss,
+    #                                   fresh prog_id per attempt, bounded
+    #                                   by client_retry_budget (0 = the
+    #                                   legacy fire-and-wait path)
+    read_your_writes: bool = False    # hold tx acks until every destination
+    #                                   shard applied the write (client-
+    #                                   visible failover cost; shards ack
+    #                                   applied stamps to the forwarding
+    #                                   gatekeeper)
     wal_replay: bool = True      # promote shard backups by replaying the
     #                              redo WAL (False: the vertices-walk
     #                              oracle path, kept for equivalence tests)
@@ -165,7 +212,12 @@ class Weaver:
             Gatekeeper(self.sim, g, cfg.n_gatekeepers, self.store, self.oracle,
                        cfg.cost, cfg.tau, cfg.tau_nop,
                        group_window=cfg.write_group_commit,
-                       group_max=cfg.write_group_max)
+                       group_max=cfg.write_group_max,
+                       read_window=cfg.read_group_commit,
+                       read_group_max=cfg.read_group_max,
+                       adaptive=cfg.adaptive_admission,
+                       admission_limit=cfg.admission_queue_limit,
+                       ack_on_apply=cfg.read_your_writes)
             for g in range(cfg.n_gatekeepers)
         ]
         self.shards: List[Shard] = [
@@ -174,13 +226,17 @@ class Weaver:
                   use_frontier=cfg.frontier_progs,
                   plan_delta=cfg.frontier_plan_delta,
                   coalesce=cfg.frontier_coalesce,
-                  plan_cache_entries=cfg.plan_cache_entries)
+                  plan_cache_entries=cfg.plan_cache_entries,
+                  ack_applies=cfg.read_your_writes)
             for s in range(cfg.n_shards)
         ]
         for gk in self.gatekeepers:
             gk.start(self.gatekeepers, self.shards)
         for sh in self.shards:
             sh.start(self.shards)
+            # the LIST is shared (not copied) so gatekeeper promotions
+            # propagate to every shard's ack routing automatically
+            sh.gatekeepers = self.gatekeepers
         self.coordinator = ProgCoordinator(self.sim)
         self.coordinator.shards = self.shards
         self.coordinator.weaver = self
@@ -277,19 +333,75 @@ class Weaver:
 
     def submit_program(self, name: str, entries: List[Tuple[str, object]],
                        callback: Callable, gatekeeper: Optional[int] = None) -> int:
-        """Async node program; ``callback(result, stamp, latency)``."""
+        """Async node program; ``callback(result, stamp, latency)``.
+
+        With ``read_retry_timeout > 0`` the submission becomes a client
+        session like :meth:`submit_tx`: each attempt carries a FRESH
+        prog_id (reads are side-effect-free, so re-execution is safe —
+        no dedup layer needed), an ack timeout with exponential backoff
+        plus jitter resubmits to the next gatekeeper, superseded
+        attempts are abandoned at the coordinator, and a bounded budget
+        surfaces ``callback(None, None, latency)`` instead of hanging.
+        This is what recovers submissions shed by gatekeeper admission
+        backpressure or lost to a crash/drop.  The default (0) keeps
+        the legacy fire-and-wait behavior."""
         assert name in REGISTRY, f"unknown node program {name}"
-        pid = next(self._prog_ids)
-        g = (next(self._rr) % len(self.gatekeepers)
-             if gatekeeper is None else gatekeeper)
-        gk = self.gatekeepers[g]
-        if not gk.alive:
-            g = (g + 1) % len(self.gatekeepers)
+        base = self.cfg.read_retry_timeout
+        if base <= 0:
+            pid = next(self._prog_ids)
+            g = (next(self._rr) % len(self.gatekeepers)
+                 if gatekeeper is None else gatekeeper)
             gk = self.gatekeepers[g]
-        self.coordinator.on_complete[pid] = callback
-        self.sim.send(self, gk, gk.submit_program, self.coordinator, name,
-                      entries, pid, nbytes=64 + 48 * len(entries))
-        return pid
+            if not gk.alive:
+                g = (g + 1) % len(self.gatekeepers)
+                gk = self.gatekeepers[g]
+            self.coordinator.on_complete[pid] = callback
+            self.sim.send(self, gk, gk.submit_program, self.coordinator, name,
+                          entries, pid, nbytes=64 + 48 * len(entries))
+            return pid
+
+        pref = (next(self._rr) if gatekeeper is None else gatekeeper)
+        t0 = self.sim.now
+        st = {"done": False, "attempt": 0, "pids": []}
+
+        def finish(result, stamp, pid_done=None) -> None:
+            if st["done"]:
+                return
+            st["done"] = True
+            for pid in st["pids"]:
+                if pid != pid_done:
+                    self.coordinator.abandon(pid)
+            callback(result, stamp, self.sim.now - t0)
+
+        def attempt() -> None:
+            if st["done"]:
+                return
+            k = st["attempt"]
+            if k > self.cfg.client_retry_budget:
+                self.sim.counters.prog_gaveup += 1
+                finish(None, None)
+                return
+            if k > 0:
+                self.sim.counters.prog_retries += 1
+            st["attempt"] = k + 1
+            pid = next(self._prog_ids)
+            st["pids"].append(pid)
+            n = len(self.gatekeepers)
+            for off in range(n):         # rotate past known-dead servers
+                gk = self.gatekeepers[(pref + k + off) % n]
+                if gk.alive:
+                    break
+            self.coordinator.on_complete[pid] = (
+                lambda r, s, _l, pid=pid: finish(r, s, pid_done=pid))
+            self.sim.send(self, gk, gk.submit_program, self.coordinator,
+                          name, entries, pid, nbytes=64 + 48 * len(entries))
+            backoff = min(max(self.cfg.client_backoff_cap, base),
+                          base * (2 ** k))
+            backoff *= 1.0 + 0.25 * float(self._client_rng.random())
+            self.sim.schedule(backoff, attempt)
+
+        attempt()
+        return st["pids"][0]
 
     def _prog_finished(self, prog_id: int) -> None:
         self._outstanding_progs.pop(prog_id, None)
@@ -358,9 +470,11 @@ class Weaver:
                        use_frontier=self.cfg.frontier_progs,
                        plan_delta=self.cfg.frontier_plan_delta,
                        coalesce=self.cfg.frontier_coalesce,
-                       plan_cache_entries=self.cfg.plan_cache_entries)
+                       plan_cache_entries=self.cfg.plan_cache_entries,
+                       ack_applies=self.cfg.read_your_writes)
             nu.recover_from(self.store.recover_shard(
                 sid, use_wal=self.cfg.wal_replay))
+            nu.gatekeepers = self.gatekeepers
             self.shards[sid] = nu
             for sh in self.shards:
                 sh.start(self.shards)
@@ -379,7 +493,12 @@ class Weaver:
                             self.oracle, self.cfg.cost, self.cfg.tau,
                             self.cfg.tau_nop,
                             group_window=self.cfg.write_group_commit,
-                            group_max=self.cfg.write_group_max)
+                            group_max=self.cfg.write_group_max,
+                            read_window=self.cfg.read_group_commit,
+                            read_group_max=self.cfg.read_group_max,
+                            adaptive=self.cfg.adaptive_admission,
+                            admission_limit=self.cfg.admission_queue_limit,
+                            ack_on_apply=self.cfg.read_your_writes)
             self.gatekeepers[gid] = nu
             nu.start(self.gatekeepers, self.shards)
             # refresh surviving gatekeepers' peer lists (no new timers)

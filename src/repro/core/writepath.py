@@ -179,7 +179,17 @@ class LastUpdateTable:
     :meth:`collect` (driven by the store's GC hook) drops rows strictly
     before the global GC horizon — absence classifies identically, so
     the table stays bounded under churn instead of growing one row per
-    vertex ever written."""
+    vertex ever written.
+
+    ``mutations`` is a monotone sequence number bumped at every
+    :meth:`record` call: the gatekeeper's validate-at-commit loop
+    snapshots it at admission-time classification and skips the second
+    ``classify_write_sets`` pass at the durability instant when the
+    table did not move in between (an unchanged table yields identical
+    verdicts, and any already-refined residue is filtered by the
+    caller's ``seen`` set).  :meth:`collect` deliberately does NOT bump
+    it — GC only drops rows strictly before the global horizon, and
+    absence classifies identically to the dropped row."""
 
     def __init__(self, intern: Optional[VidIntern] = None) -> None:
         self.intern = intern if intern is not None else VidIntern()
@@ -187,6 +197,7 @@ class LastUpdateTable:
         self.rows: Optional[_GrowRows] = None
         self.stamps: List[Stamp] = []
         self.slot: Dict[int, int] = {}  # gid -> row
+        self.mutations = 0              # monotone record() sequence number
 
     def _ensure(self, ts: Stamp) -> None:
         if self.rows is None:
@@ -197,6 +208,7 @@ class LastUpdateTable:
         """Set the last-update stamp of every vid (post-commit)."""
         if not vids:
             return
+        self.mutations += 1
         self._ensure(ts)
         row = pack(ts, len(ts.clock))
         for vid in vids:

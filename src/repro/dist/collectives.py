@@ -21,6 +21,19 @@ per-(source device, destination shard) drop rule survives behind
 ``overflow="local"`` for callers that prefer a smaller wire buffer over
 drop parity; any other value, or ``overflow="global"`` without a
 ``capacity``, is an explicit config error raised at trace time.
+
+Two-phase exact sizing
+----------------------
+The static bound is safe but often far larger than what any (source
+device, destination shard) slab actually carries — the all-to-all then
+ships mostly zeros.  :func:`moe_alltoall_exact_c_dev` is a cheap
+phase-1 counting pass over the *logits only* (same routing math, same
+keep mask — factored into ``_route_keep`` so the two cannot drift)
+that returns the exact max kept-pairs-per-slab, rounded up to a
+multiple of 8 for lane alignment.  It must run OUTSIDE jit — the count
+becomes a static wire-buffer shape — and raises on tracer input.
+Passing its result with ``exact_c_dev=True`` skips the static clamp;
+outputs are elementwise identical for ANY ``c_dev`` >= the true max.
 """
 
 from __future__ import annotations
@@ -29,9 +42,52 @@ import jax
 import jax.numpy as jnp
 
 
+def _route_keep(logits_l, k, e, e_loc, n_model, tok_axes, mesh,
+                n_tok_dev, capacity, overflow):
+    """Per-device routing shared by the dispatch body and the phase-1
+    sizing pass: normalized router weights, flat expert ids, destination
+    shards, per-expert positions, and the ``overflow="global"`` keep
+    mask (all-ones for ``"local"`` — its cut is per-destination and
+    applied by the caller)."""
+    probs = jax.nn.softmax(logits_l.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)              # (t_loc, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    flat_e = idx.reshape(-1)                            # (N = t_loc*k,)
+    n = flat_e.shape[0]
+    dest = flat_e // e_loc
+    # local position of each pair inside its expert (stable sort:
+    # ties keep local flattened (token, slot) order)
+    order_e = jnp.argsort(flat_e)
+    e_sorted = flat_e[order_e]
+    starts_e = jnp.searchsorted(
+        e_sorted, jnp.arange(e, dtype=e_sorted.dtype))
+    pos_e_sorted = jnp.arange(n, dtype=jnp.int32) - starts_e[e_sorted]
+    pos_e = jnp.zeros((n,), jnp.int32).at[order_e].set(pos_e_sorted)
+
+    if overflow == "global":
+        # exclusive prefix of per-expert counts over all devices in
+        # global token order: device rank = row-major index over the
+        # token sharding axes, matching the (dp..., model) layout of
+        # the global token array
+        counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+        all_counts = jax.lax.all_gather(counts, tok_axes)
+        all_counts = all_counts.reshape(n_tok_dev, e)
+        my = jnp.int32(0)
+        for a in tok_axes:
+            my = my * int(mesh.shape[a]) + jax.lax.axis_index(a)
+        mask = (jnp.arange(n_tok_dev, dtype=jnp.int32)
+                < my)[:, None].astype(jnp.int32)
+        prefix = jnp.sum(all_counts * mask, axis=0)     # (e,)
+        keep = prefix[flat_e] + pos_e < capacity        # == scatter path
+    else:
+        keep = jnp.ones((n,), bool)                     # cut per-dest later
+    return weights, flat_e, dest, pos_e, keep
+
+
 def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
                       c_dev, local_capacity_factor=2.0, capacity=None,
-                      overflow="global"):
+                      overflow="global", exact_c_dev=False):
     """Expert-parallel MoE dispatch via explicit all-to-all.
 
     Tokens are sharded over (dp axes, 'model'); the expert axis of the
@@ -49,6 +105,11 @@ def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
     destination shard) drop at ``max(c_dev, ceil(t_loc*k*
     local_capacity_factor/n_model))``, which agrees with the scatter
     path only when capacity is ample.
+
+    ``exact_c_dev=True`` trusts the caller's ``c_dev`` instead of
+    clamping it up to the static bound — pass the result of the
+    phase-1 :func:`moe_alltoall_exact_c_dev` counting pass, which
+    guarantees every kept pair fits its slab.
     """
     import math
 
@@ -72,12 +133,18 @@ def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
                 "moe_alltoall_block(overflow='global') needs the global "
                 "per-expert `capacity` used by the scatter path; pass it, "
                 "or opt into the divergent overflow='local' semantics")
-        # every kept pair must fit its (source device, dest shard) slab:
-        # a device keeps at most min(its local pairs, e_loc*capacity)
-        # pairs for one destination shard — a STATIC bound, so parity
-        # needs no runtime assertion
-        c_dev = max(int(c_dev),
-                    min(t_loc * int(top_k), e_loc * int(capacity)))
+        if exact_c_dev:
+            # phase-1 counted the true max kept per slab; a larger
+            # buffer only ships more zeros, never changes the output
+            c_dev = min(int(c_dev),
+                        min(t_loc * int(top_k), e_loc * int(capacity)))
+        else:
+            # every kept pair must fit its (source device, dest shard)
+            # slab: a device keeps at most min(its local pairs,
+            # e_loc*capacity) pairs for one destination shard — a STATIC
+            # bound, so parity needs no runtime assertion
+            c_dev = max(int(c_dev),
+                        min(t_loc * int(top_k), e_loc * int(capacity)))
     elif overflow == "local":
         c_dev = max(int(c_dev),
                     math.ceil(t_loc * int(top_k)
@@ -90,39 +157,10 @@ def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
     def body(xf_l, logits_l, wg, wu, wd):
         t_loc, d = xf_l.shape
         k = top_k
-        probs = jax.nn.softmax(logits_l.astype(jnp.float32), axis=-1)
-        weights, idx = jax.lax.top_k(probs, k)          # (t_loc, k)
-        weights = weights / jnp.maximum(
-            jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
-        flat_e = idx.reshape(-1)                        # (N = t_loc*k,)
+        weights, flat_e, dest, pos_e, keep = _route_keep(
+            logits_l, k, e, e_loc, n_model, tok_axes, mesh, n_tok_dev,
+            capacity, overflow)
         n = flat_e.shape[0]
-        dest = flat_e // e_loc
-        # local position of each pair inside its expert (stable sort:
-        # ties keep local flattened (token, slot) order)
-        order_e = jnp.argsort(flat_e)
-        e_sorted = flat_e[order_e]
-        starts_e = jnp.searchsorted(
-            e_sorted, jnp.arange(e, dtype=e_sorted.dtype))
-        pos_e_sorted = jnp.arange(n, dtype=jnp.int32) - starts_e[e_sorted]
-        pos_e = jnp.zeros((n,), jnp.int32).at[order_e].set(pos_e_sorted)
-
-        if overflow == "global":
-            # exclusive prefix of per-expert counts over all devices in
-            # global token order: device rank = row-major index over the
-            # token sharding axes, matching the (dp..., model) layout of
-            # the global token array
-            counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
-            all_counts = jax.lax.all_gather(counts, tok_axes)
-            all_counts = all_counts.reshape(n_tok_dev, e)
-            my = jnp.int32(0)
-            for a in tok_axes:
-                my = my * int(mesh.shape[a]) + jax.lax.axis_index(a)
-            mask = (jnp.arange(n_tok_dev, dtype=jnp.int32)
-                    < my)[:, None].astype(jnp.int32)
-            prefix = jnp.sum(all_counts * mask, axis=0)   # (e,)
-            keep = prefix[flat_e] + pos_e < capacity      # == scatter path
-        else:
-            keep = jnp.ones((n,), bool)                   # cut per-dest below
 
         # position among the KEPT pairs of each destination shard
         d2 = jnp.where(keep, dest, n_model)               # dropped -> tail
@@ -171,6 +209,75 @@ def moe_alltoall_block(xf, logits, w_gate, w_up, w_down, mesh, top_k,
                      in_specs=(spec_tok, spec_tok, spec_w, spec_w, spec_w),
                      out_specs=spec_tok, check_vma=False)(
         xf, logits, w_gate, w_up, w_down)
+
+
+def moe_alltoall_exact_c_dev(logits, mesh, top_k, capacity=None,
+                             overflow="global",
+                             local_capacity_factor=2.0):
+    """Phase-1 of two-phase wire-buffer sizing: the exact max number of
+    kept (token, slot) pairs any (source device, destination shard)
+    slab carries, rounded up to a multiple of 8 (lane alignment) with a
+    floor of 8, never above the static safety bound.
+
+    Runs the SAME routing + keep math as :func:`moe_alltoall_block`
+    (``_route_keep``) over the logits only — no activations move — and
+    reduces the per-(device, dest) kept counts to one host integer.
+    The result is a static shape, so this MUST run outside jit: call it
+    on concrete logits (e.g. the previous step's, or a profiling
+    batch), then pass the result as ``c_dev`` with ``exact_c_dev=True``.
+    Outputs are elementwise identical for any ``c_dev`` >= the true
+    max, so resizing between steps never changes numerics.
+
+    ``overflow="local"`` already sizes its buffer from its own drop
+    rule — the legacy formula IS exact there and is returned directly.
+    """
+    import math
+
+    from jax.sharding import PartitionSpec as P
+
+    from . import shard_map
+    from .sharding import dp_axes
+
+    if isinstance(logits, jax.core.Tracer):
+        raise ValueError(
+            "moe_alltoall_exact_c_dev must run outside jit: its result "
+            "becomes a static wire-buffer shape (size on concrete "
+            "logits, then pass c_dev into the jitted step)")
+    n_model = int(mesh.shape["model"])
+    e = int(logits.shape[-1])
+    assert e % n_model == 0, (e, n_model)
+    e_loc = e // n_model
+    dp_names = dp_axes(mesh)
+    tok_axes = tuple(dp_names) + ("model",)
+    n_dp = int(math.prod(int(mesh.shape[a]) for a in dp_names)) \
+        if dp_names else 1
+    n_tok_dev = n_dp * n_model
+    t_loc = int(logits.shape[0]) // n_tok_dev
+    k = int(top_k)
+    if overflow == "local":
+        return math.ceil(t_loc * k * float(local_capacity_factor) / n_model)
+    if overflow != "global":
+        raise ValueError(f"unknown overflow mode {overflow!r} "
+                         "(expected 'global' or 'local')")
+    if capacity is None:
+        raise ValueError(
+            "moe_alltoall_exact_c_dev(overflow='global') needs the "
+            "global per-expert `capacity` used by the scatter path")
+    bound = min(t_loc * k, e_loc * int(capacity))
+
+    def count(logits_l):
+        _, _, dest, _, keep = _route_keep(
+            logits_l, k, e, e_loc, n_model, tok_axes, mesh, n_tok_dev,
+            capacity, "global")
+        kept = jnp.zeros((n_model,), jnp.int32).at[dest].add(
+            keep.astype(jnp.int32))
+        return kept[None, :]                 # (1, n_model) per device
+
+    spec_tok = P(tok_axes, None)
+    counts = shard_map(count, mesh=mesh, in_specs=(spec_tok,),
+                       out_specs=spec_tok, check_vma=False)(logits)
+    max_kept = int(jax.device_get(counts).max())
+    return min(bound, max(8, -(-max_kept // 8) * 8))
 
 
 def _pod_mean(x32, compress: bool):

@@ -21,7 +21,19 @@ from repro.models import sasrec, transformer
 
 
 class GraphQueryServer:
-    """Serve node programs / transactions against a Weaver deployment."""
+    """Serve node programs / transactions against a Weaver deployment.
+
+    Beyond fire-and-drain :meth:`submit`, this drives closed- and
+    open-loop client fleets entirely inside the discrete-event
+    simulation: :meth:`run_closed_loop` models N clients that each keep
+    exactly one request outstanding (throughput finds the system's
+    saturation point), and :meth:`run_open_loop` models a Poisson
+    arrival process at a fixed offered rate regardless of completions
+    (latency and goodput degrade visibly past saturation — the
+    serving-benchmark regime where admission windows and backpressure
+    matter).  Both return per-request latencies plus failure counts so
+    callers can compute percentile/goodput curves.
+    """
 
     def __init__(self, weaver):
         self.weaver = weaver
@@ -50,6 +62,107 @@ class GraphQueryServer:
         deadline = sim.now + timeout
         while self.inflight > 0 and sim.now < deadline and sim.pending():
             sim.run(until=min(deadline, sim.now + 10e-3))
+
+    # ---- client fleets -------------------------------------------------
+
+    def _issue(self, kind: str, payload, on_done: Callable) -> None:
+        """Issue one request; ``on_done(ok: bool, latency: float)``.
+
+        A program completing with result ``None`` (retry budget
+        exhausted / shed without a session) counts as a failure; a tx
+        reply of ``(None, None)`` (client session gave up) likewise.
+        """
+        if kind == "tx":
+            self.weaver.submit_tx(
+                payload, lambda r: on_done(r.ok, r.latency))
+        else:
+            name, entries = payload
+            self.weaver.submit_program(
+                name, entries, lambda r, s, lat: on_done(r is not None, lat))
+
+    def run_closed_loop(self, n_clients: int, n_requests: int,
+                        make_request: Callable[[int], Tuple[str, object]],
+                        timeout: float = 120.0) -> dict:
+        """N clients, one outstanding request each, until ``n_requests``
+        have been *issued*; returns latencies of everything completed."""
+        sim = self.weaver.sim
+        state = {"issued": 0, "done": 0, "ok": 0, "t_end": sim.now}
+        lat: List[float] = []
+        t0 = sim.now
+
+        def next_req() -> None:
+            if state["issued"] >= n_requests:
+                return
+            i = state["issued"]
+            state["issued"] += 1
+            kind, payload = make_request(i)
+
+            def _done(ok: bool, latency: float) -> None:
+                state["done"] += 1
+                state["t_end"] = sim.now
+                if ok:
+                    state["ok"] += 1
+                    lat.append(latency)
+                next_req()
+
+            self._issue(kind, payload, _done)
+
+        for _ in range(min(n_clients, n_requests)):
+            next_req()
+        deadline = t0 + timeout
+        while state["done"] < state["issued"] and sim.now < deadline \
+                and sim.pending():
+            sim.run(until=min(deadline, sim.now + 10e-3))
+        dur = max(state["t_end"] - t0, 1e-9)
+        return {"issued": state["issued"], "completed": state["done"],
+                "ok": state["ok"], "duration_s": dur,
+                "throughput_per_s": state["done"] / dur,
+                "goodput_per_s": state["ok"] / dur,
+                "latencies_s": lat}
+
+    def run_open_loop(self, rate: float, n_requests: int,
+                      make_request: Callable[[int], Tuple[str, object]],
+                      seed: int = 0, timeout: float = 120.0) -> dict:
+        """Poisson arrivals at ``rate``/sec, independent of completions.
+
+        Offered load past the service capacity is exactly the regime
+        where bounded admission queues must shed: completions that never
+        arrive (no session) would hang the drain, so failure surfacing
+        via sessions/give-ups is part of the contract being measured.
+        """
+        sim = self.weaver.sim
+        rng = np.random.default_rng(seed)
+        state = {"done": 0, "ok": 0, "t_end": sim.now}
+        lat: List[float] = []
+        t0 = sim.now
+
+        def _done(ok: bool, latency: float) -> None:
+            state["done"] += 1
+            state["t_end"] = sim.now
+            if ok:
+                state["ok"] += 1
+                lat.append(latency)
+
+        def arrive(i: int) -> None:
+            kind, payload = make_request(i)
+            self._issue(kind, payload, _done)
+
+        # pre-schedule the whole arrival process (deterministic given seed)
+        t = 0.0
+        for i in range(n_requests):
+            t += float(rng.exponential(1.0 / rate))
+            sim.schedule(t, arrive, i)
+        deadline = t0 + timeout
+        while state["done"] < n_requests and sim.now < deadline \
+                and sim.pending():
+            sim.run(until=min(deadline, sim.now + 10e-3))
+        dur = max(state["t_end"] - t0, 1e-9)
+        return {"offered_per_s": rate, "issued": n_requests,
+                "completed": state["done"], "ok": state["ok"],
+                "duration_s": dur,
+                "throughput_per_s": state["done"] / dur,
+                "goodput_per_s": state["ok"] / dur,
+                "latencies_s": lat}
 
 
 @dataclasses.dataclass

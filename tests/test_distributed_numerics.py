@@ -118,6 +118,54 @@ class TestShardMapVariants:
             collectives.moe_alltoall_block(
                 xf, None, np.zeros((2, 4, 4)), None, None, FakeMesh(),
                 top_k=1, c_dev=4, overflow="banana")
+        # local mode: the legacy drop-rule formula IS the exact size
+        # (host math only — no shard_map launched)
+        got = collectives.moe_alltoall_exact_c_dev(
+            np.zeros((8, 4), np.float32), FakeMesh(), top_k=1,
+            overflow="local", local_capacity_factor=2.0)
+        assert got == 4, got
+
+    def test_moe_a2a_two_phase_exact_sizing(self):
+        """Phase-1 counting shrinks the wire buffer below the static
+        bound, the exact-sized dispatch is bit-identical to the
+        statically-clamped one, and sizing under jit is an asserted
+        config error (the count must be a static shape)."""
+        run_sub("""
+            from repro import dist
+            from repro.dist import collectives
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            dist.set_mesh(mesh)
+            e, d, f, k, t, cap = 8, 32, 16, 2, 256, 32
+            ks = jax.random.split(jax.random.PRNGKey(0), 5)
+            xf = jax.random.normal(ks[0], (t, d), jnp.float32)
+            logits = jax.random.normal(ks[1], (t, e), jnp.float32)
+            wg = jax.random.normal(ks[2], (e, d, f), jnp.float32) * 0.1
+            wu = jax.random.normal(ks[3], (e, d, f), jnp.float32) * 0.1
+            wd = jax.random.normal(ks[4], (e, f, d), jnp.float32) * 0.1
+            t_loc, e_loc = t // 8, e // 4
+            bound = min(t_loc * k, e_loc * cap)
+            with mesh:
+                exact = collectives.moe_alltoall_exact_c_dev(
+                    logits, mesh, k, capacity=cap)
+                assert exact % 8 == 0 and 8 <= exact <= bound, (exact, bound)
+                # the point of phase 1: strictly smaller wire buffer
+                assert exact < bound, (exact, bound)
+                y_ref = collectives.moe_alltoall_block(
+                    xf, logits, wg, wu, wd, mesh, k, c_dev=0,
+                    capacity=cap)
+                y_exact = collectives.moe_alltoall_block(
+                    xf, logits, wg, wu, wd, mesh, k, c_dev=exact,
+                    capacity=cap, exact_c_dev=True)
+            assert np.array_equal(np.asarray(y_ref),
+                                  np.asarray(y_exact)), "not bit-identical"
+            try:
+                jax.jit(lambda lg: collectives.moe_alltoall_exact_c_dev(
+                    lg, mesh, k, capacity=cap))(logits)
+                raise SystemExit("expected ValueError under jit")
+            except ValueError as exc:
+                assert "outside jit" in str(exc), exc
+            print("MOE_A2A_TWO_PHASE_OK", exact, bound)
+        """)
 
     def test_cross_pod_allreduce(self):
         """The standalone cross-pod hook: pod-sharded input averages

@@ -1,0 +1,383 @@
+"""Batched read admission + serving-path machinery (ISSUE 7).
+
+* :class:`AdaptiveWindow` AIMD controller unit behavior (closed start,
+  backlog-driven growth, cap, hold, shrink-and-snap-to-zero);
+* the read-window stale-timer regression (mirror of the write path's
+  ``test_stale_window_timer_does_not_shorten_next_window``);
+* windowed reads == per-program reads on a quiescent graph after write
+  churn, including a windowed deployment running under drop/dup message
+  faults recovered by client read sessions;
+* dropped / duplicated read windows: sessions resubmit, the coordinator
+  dup-report guard absorbs replays, every submission completes;
+* gatekeeper admission backpressure: shed reads are recovered by the
+  session layer (``progs_shed > 0``, zero give-ups);
+* read-your-writes acks: a tx ack implies shard-side visibility for a
+  program submitted from inside the ack callback;
+* clean-window revalidation skip (``revalidations_skipped``) and dirty
+  concurrent windows still committing correctly;
+* windowed-admission counters and histograms.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Weaver, WeaverConfig
+from repro.core.faultinject import FaultAction, FaultPlan
+from repro.core.gatekeeper import AdaptiveWindow
+
+
+def make_weaver(seed=0, n_shards=4, n_gk=2, **kw):
+    return Weaver(WeaverConfig(n_gatekeepers=n_gk, n_shards=n_shards,
+                               gc_period=0, seed=seed, **kw))
+
+
+def seed_vertices(w, n):
+    vids = [f"u{i}" for i in range(n)]
+    tx = w.begin_tx()
+    for v in vids:
+        tx.create_vertex(v)
+    assert w.run_tx(tx).ok
+    w.settle(10e-3)
+    return vids
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveWindow (AIMD controller)
+# ---------------------------------------------------------------------------
+
+class TestAdaptiveWindow:
+    def test_starts_closed_and_enters_at_floor_on_backlog(self):
+        a = AdaptiveWindow(1e-3)
+        assert a.current == 0.0
+        a.on_flush(1, 64, backlog=0.0)       # idle singleton: stays closed
+        assert a.current == 0.0
+        a.on_flush(1, 64, backlog=5e-6)      # serve backlog: open at floor
+        assert a.current == pytest.approx(1e-3 / 16)
+
+    def test_full_windows_grow_to_max_and_cap(self):
+        a = AdaptiveWindow(1e-3)
+        for _ in range(12):
+            a.on_flush(64, 64, backlog=0.0)
+        assert a.current == pytest.approx(1e-3)
+        a.on_flush(64, 64, backlog=1e-3)     # already at max: stays there
+        assert a.current == pytest.approx(1e-3)
+
+    def test_midsize_flush_holds(self):
+        a = AdaptiveWindow(1e-3)
+        a.on_flush(64, 64, 0.0)
+        cur = a.current
+        a.on_flush(8, 64, 0.0)               # neither full nor singleton
+        assert a.current == cur
+
+    def test_singleton_idle_flushes_shrink_then_snap_to_zero(self):
+        a = AdaptiveWindow(1e-3)
+        a.on_flush(64, 64, 0.0)
+        a.on_flush(64, 64, 0.0)              # floor * 2 = max/8
+        assert a.current == pytest.approx(1e-3 / 8)
+        a.on_flush(1, 64, 0.0)
+        assert a.current == pytest.approx(1e-3 / 16)   # at the floor: kept
+        a.on_flush(1, 64, 0.0)
+        assert a.current == 0.0              # below the floor: snaps closed
+
+
+# ---------------------------------------------------------------------------
+# windowed read admission
+# ---------------------------------------------------------------------------
+
+class TestReadWindow:
+    def test_stale_read_window_timer_does_not_shorten_next_window(self):
+        """The write path's stale-timer contract, on the read window: a
+        timer armed for a window that a max-count trigger already
+        flushed must not fire into the NEXT window."""
+        w = make_weaver(seed=8, read_group_commit=10e-3, read_group_max=4)
+        seed_vertices(w, 4)
+        base = w.counters()["prog_batches"]
+        out = []
+        cb = lambda r, s, l: out.append(r)
+        for i in range(4):              # fills read_group_max -> instant flush
+            w.submit_program("get_node", [(f"u{i}", None)], cb, gatekeeper=0)
+        w.settle(4e-3)                  # stale timer now armed ~t+10ms
+        assert w.counters()["prog_batches"] == base + 1
+        for i in range(2):              # new window, deadline ~t+14ms
+            w.submit_program("get_node", [(f"u{i}", None)], cb, gatekeeper=0)
+        w.settle(8e-3)                  # ~t+12ms: past the stale deadline,
+        assert w.counters()["prog_batches"] == base + 1, \
+            "second read window flushed early (stale timer)"
+        w.settle(4e-3)                  # past the real deadline
+        assert w.counters()["prog_batches"] == base + 2
+        w.settle(10e-3)                 # drain the second window's reads
+        assert len(out) == 6 and all(r is not None for r in out)
+
+    def test_adaptive_read_window_opens_under_load(self):
+        """From ``current == 0`` the serve-backlog signal must open the
+        window (batch size alone never could: a zero window only ever
+        flushes singletons)."""
+        w = make_weaver(seed=12, n_gk=1, read_group_commit=500e-6,
+                        read_group_max=4, adaptive_admission=True)
+        seed_vertices(w, 8)
+        cb = lambda r, s, l: None
+        for _ in range(6):
+            for i in range(8):
+                w.submit_program("get_node", [(f"u{i}", None)], cb,
+                                 gatekeeper=0)
+            w.settle(2e-3)
+        assert w.gatekeepers[0]._awin.current > 0.0
+        c = w.counters()
+        assert c["prog_batches"] > 0
+        assert c["prog_batch_size_sum"] > c["prog_batches"], \
+            "adaptive window never batched anything"
+
+    def test_windowed_counters_and_histograms(self):
+        w = make_weaver(seed=11, read_group_commit=300e-6, read_group_max=8)
+        seed_vertices(w, 8)
+        cb = lambda r, s, l: None
+        for _ in range(3):
+            for i in range(8):
+                w.submit_program("get_node", [(f"u{i}", None)], cb,
+                                 gatekeeper=0)
+            w.settle(5e-3)
+        c = w.counters()
+        assert c["prog_batches"] >= 3
+        mean = c["prog_batch_size_sum"] / c["prog_batches"]
+        assert mean > 1.0, "fixed 300us window never formed a batch"
+        assert any(k.startswith("r:") for k in c["admission_window_hist"])
+        assert any(k.startswith("r:") for k in c["admission_depth_hist"])
+
+
+# ---------------------------------------------------------------------------
+# batched == per-program equivalence (quiescent reads after churn)
+# ---------------------------------------------------------------------------
+
+class TestEquivalence:
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_windowed_reads_equal_per_program(self, seed):
+        """Identical write churn into three deployments — per-program
+        (the semantic oracle), windowed+adaptive, and windowed under
+        drop/dup faults with read sessions — then the same quiescent
+        reads: result lists must match exactly (windows share one stamp,
+        so only results are compared, and reads are side-effect-free so
+        fault-driven re-execution cannot change them)."""
+        variants = [
+            dict(),
+            dict(read_group_commit=200e-6, read_group_max=16,
+                 adaptive_admission=True),
+            dict(read_group_commit=200e-6, read_group_max=16,
+                 read_retry_timeout=2e-3,
+                 fault_plan=FaultPlan([
+                     FaultAction("drop", target="deliver_prog_batch",
+                                 after=0, count=1),
+                     FaultAction("dup", target="deliver_prog_batch",
+                                 after=2, count=1)])),
+        ]
+        outs = []
+        for extra in variants:
+            w = make_weaver(seed=seed, **extra)
+            if w.sim.fault is not None:
+                w.sim.fault.disarm()
+            vids = seed_vertices(w, 16)
+            rng = np.random.default_rng(seed + 1)
+            for i in range(40):                       # write churn
+                a, b = (int(x) for x in rng.integers(0, 16, size=2))
+                tx = w.begin_tx()
+                if a == b:
+                    tx.set_vertex_prop(vids[a], "score", float(i))
+                else:
+                    tx.create_edge(vids[a], vids[b])
+                w.submit_tx(tx, lambda r: None)
+            w.settle(60e-3)
+            if w.sim.fault is not None:
+                w.sim.fault.arm()
+            results = []
+            for i in range(24):                       # quiescent reads
+                name = ("get_edges", "count_edges", "get_node")[i % 3]
+                w.submit_program(name, [(vids[i % 16], None)],
+                                 lambda r, s, l, i=i:
+                                 results.append((i, repr(r))))
+            w.settle(60e-3)
+            assert len(results) == 24, "a read never completed"
+            outs.append(sorted(results))
+        assert outs[0] == outs[1], "windowed reads diverged from oracle"
+        assert outs[0] == outs[2], "faulted windowed reads diverged"
+
+
+# ---------------------------------------------------------------------------
+# fault injection on the read path
+# ---------------------------------------------------------------------------
+
+class TestReadFaults:
+    @pytest.mark.parametrize("target", ["submit_program",
+                                        "deliver_prog_batch"])
+    def test_dropped_window_recovered_by_read_sessions(self, target):
+        """A dropped client submission or a dropped whole window: the
+        read sessions time out, abandon the dead attempt, and resubmit
+        with a fresh prog_id — every caller still gets a result."""
+        plan = FaultPlan([FaultAction("drop", target=target,
+                                      after=0, count=1)])
+        w = make_weaver(seed=3, read_group_commit=200e-6, read_group_max=8,
+                        read_retry_timeout=2e-3, fault_plan=plan)
+        w.sim.fault.disarm()
+        seed_vertices(w, 8)
+        w.sim.fault.arm()
+        out = {}
+        for i in range(8):
+            w.submit_program("get_node", [(f"u{i}", None)],
+                             lambda r, s, l, i=i: out.__setitem__(i, r),
+                             gatekeeper=0)
+        w.settle(80e-3)
+        assert len(out) == 8 and all(r is not None for r in out.values())
+        c = w.counters()
+        assert c["prog_retries"] > 0
+        assert c["prog_gaveup"] == 0
+
+    def test_duplicated_window_completes_each_program_once(self):
+        """A duplicated window delivery re-executes side-effect-free
+        reads; the coordinator's per-delivery report guard absorbs the
+        replayed reports so each program completes exactly once with the
+        correct result."""
+        plan = FaultPlan([FaultAction("dup", target="deliver_prog_batch",
+                                      after=0, count=2)])
+        w = make_weaver(seed=4, read_group_commit=200e-6, read_group_max=8,
+                        fault_plan=plan)
+        w.sim.fault.disarm()
+        seed_vertices(w, 8)
+        w.sim.fault.arm()
+        out = []
+        for i in range(8):
+            w.submit_program("get_node", [(f"u{i}", None)],
+                             lambda r, s, l, i=i: out.append((i, r)),
+                             gatekeeper=0)
+        w.settle(60e-3)
+        assert sorted(i for i, _ in out) == list(range(8)), \
+            "a duplicated delivery double-completed or lost a program"
+        assert all(r is not None and r["id"] == f"u{i}" for i, r in out)
+
+
+# ---------------------------------------------------------------------------
+# backpressure / load leveling
+# ---------------------------------------------------------------------------
+
+class TestBackpressure:
+    def test_shed_reads_are_recovered_by_sessions(self):
+        w = make_weaver(seed=5, n_gk=1, admission_queue_limit=4,
+                        read_retry_timeout=2e-3)
+        seed_vertices(w, 8)
+        out = {}
+        for i in range(48):
+            w.submit_program("get_node", [(f"u{i % 8}", None)],
+                             lambda r, s, l, i=i: out.__setitem__(i, r),
+                             gatekeeper=0)
+        w.settle(150e-3)
+        c = w.counters()
+        assert c["progs_shed"] > 0, "queue limit never tripped"
+        assert len(out) == 48, "a shed read was never recovered"
+        assert all(r is not None for r in out.values())
+        assert c["prog_retries"] > 0
+        assert c["prog_gaveup"] == 0
+
+    def test_give_up_surfaces_none_instead_of_hanging(self):
+        """With every gatekeeper shedding forever (limit saturated by a
+        dead-end deployment), the bounded budget must surface
+        ``callback(None, None, latency)``."""
+        w = make_weaver(seed=13, n_gk=1, admission_queue_limit=1,
+                        read_retry_timeout=0.5e-3, client_retry_budget=2)
+        seed_vertices(w, 2)
+        # wedge the only admission slot: a gatekeeper whose serve queue
+        # never drains because we keep it saturated below the limit is
+        # hard to build deterministically, so saturate by flooding far
+        # past what the budgeted retries can drain in time
+        out = []
+        for i in range(64):
+            w.submit_program("get_node", [("u0", None)],
+                             lambda r, s, l, i=i: out.append(r),
+                             gatekeeper=0)
+        w.settle(200e-3)
+        assert len(out) == 64, "a session neither completed nor gave up"
+        assert w.counters()["progs_shed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# read-your-writes acks
+# ---------------------------------------------------------------------------
+
+class TestReadYourWrites:
+    def test_ack_implies_shard_visibility(self):
+        """In read_your_writes mode a tx ack means every destination
+        shard applied the write: a program submitted from inside the ack
+        callback must see the edge."""
+        w = make_weaver(seed=6, n_gk=1, read_your_writes=True)
+        tx = w.begin_tx()
+        tx.create_vertex("a")
+        tx.create_vertex("b")
+        tx.create_edge("a", "b")
+        out = {}
+
+        def on_ack(r):
+            assert r.ok
+            w.submit_program("get_edges", [("a", None)],
+                             lambda res, s, l: out.__setitem__("r", res))
+
+        w.submit_tx(tx, on_ack)
+        w.settle(60e-3)
+        assert "r" in out, "read-your-writes read never completed"
+        edges = out["r"]
+        assert edges and any(dst == "b" for _eid, dst in edges), \
+            f"acked edge not visible to the follow-up read: {edges!r}"
+        assert w.counters()["acks_deferred"] >= 1
+
+    def test_acks_not_deferred_by_default(self):
+        w = make_weaver(seed=6, n_gk=1)
+        tx = w.begin_tx()
+        tx.create_vertex("a")
+        assert w.run_tx(tx).ok
+        assert w.counters()["acks_deferred"] == 0
+
+
+# ---------------------------------------------------------------------------
+# revalidation skip (LastUpdateTable.mutations seqno)
+# ---------------------------------------------------------------------------
+
+class TestRevalidationSkip:
+    def test_clean_commit_skips_revalidation(self):
+        """Sequential single-gatekeeper traffic: nothing mutates the
+        LastUpdateTable between admission and the durability instant, so
+        the second validation pass is skipped."""
+        w = make_weaver(seed=7, n_gk=1, n_shards=2)
+        for i in range(5):
+            tx = w.begin_tx()
+            tx.create_vertex(f"v{i}")
+            assert w.run_tx(tx).ok
+        assert w.counters()["revalidations_skipped"] >= 5
+
+    def test_clean_window_skips_revalidation_batched(self):
+        w = make_weaver(seed=7, n_gk=1, write_group_commit=0.5e-3,
+                        write_group_max=16)
+        results = []
+        for i in range(6):
+            tx = w.begin_tx()
+            tx.create_vertex(f"v{i}")
+            w.submit_tx(tx, results.append, gatekeeper=0)
+        w.settle(30e-3)
+        assert all(r.ok for r in results)
+        c = w.counters()
+        assert c["tx_batches"] >= 1
+        assert c["revalidations_skipped"] >= 1
+
+    def test_dirty_concurrent_windows_still_commit_correctly(self):
+        """Two gatekeepers writing the same vertex concurrently: the
+        mutations seqno moves between admission and commit, forcing the
+        real revalidation path — every write must still commit and
+        every version must land in the store."""
+        w = make_weaver(seed=9, n_gk=2, write_group_commit=0.5e-3,
+                        write_group_max=16)
+        tx = w.begin_tx()
+        tx.create_vertex("r")
+        assert w.run_tx(tx).ok
+        results = []
+        for i in range(12):
+            tx = w.begin_tx()
+            tx.set_vertex_prop("r", "a", i)
+            w.submit_tx(tx, results.append, gatekeeper=i % 2)
+        w.settle(80e-3)
+        assert len(results) == 12 and all(r.ok for r in results)
+        vers = w.store.vertices["r"].props["a"]
+        assert sorted(v[0] for v in vers) == list(range(12))
