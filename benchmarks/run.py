@@ -13,6 +13,10 @@ Prints ``name,metric,value`` CSV lines (simulated time; deterministic).
   traversal      — Fig. 11 (node programs vs BSP sync/async)
   scalability    — Fig. 12 / Fig. 13 (gatekeeper & shard scaling)
   coordination   — Fig. 14 (tau sweep: announce vs oracle)
+  scaling        — forced host-device sweep: sharded columnar snapshot
+                   equivalence + modeled device scaling; columnar BSP
+                   vs interpreted; Weaver vs columnar BSP (Fig. 11
+                   at the columnar baseline)
   roofline       — §Roofline summary from the dry-run artifacts
 
 A benchmark that raises is reported, the remaining modules still run,
@@ -21,12 +25,14 @@ silently skipped.
 
 ``--smoke`` (used by ``scripts/ci.sh``) sets ``REPRO_BENCH_SMOKE=1``
 (modules shrink their graph sizes / iteration counts) and runs only the
-snapshot + nodeprog + writepath + recovery + serving + coordination
-modules — a
+snapshot + nodeprog + writepath + recovery + serving + coordination +
+scaling modules — a
 minutes-scale end-to-end check that the data-plane benchmarks still
 build, run, and meet their equivalence bits (coordination rides along
 so the tau sweep's aggressive-concurrency corner — the historical
-oracle ``CycleError`` — stays covered in CI).
+oracle ``CycleError`` — stays covered in CI; scaling asserts the
+sharded-vs-host bit-identity through real forced-multi-device
+``shard_map`` launches).
 """
 
 from __future__ import annotations
@@ -43,19 +49,21 @@ def main(argv=None) -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     from . import (block_query, coordination, nodeprog, recovery, roofline,
-                   scalability, serving, snapshot, social, traversal,
-                   writepath)
+                   scalability, scaling, serving, snapshot, social,
+                   traversal, writepath)
 
     modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
                ("writepath", writepath), ("recovery", recovery),
                ("serving", serving), ("block_query", block_query),
                ("social", social), ("traversal", traversal),
                ("scalability", scalability),
-               ("coordination", coordination), ("roofline", roofline)]
+               ("coordination", coordination), ("scaling", scaling),
+               ("roofline", roofline)]
     if smoke:
         modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
                    ("writepath", writepath), ("recovery", recovery),
-                   ("serving", serving), ("coordination", coordination)]
+                   ("serving", serving), ("coordination", coordination),
+                   ("scaling", scaling)]
     t00 = time.time()
     failures = []
     for name, mod in modules:

@@ -308,6 +308,10 @@ class SnapshotEngine:
         self.n_gk = weaver.cfg.n_gatekeepers
         self.c = self.n_gk + 1
         self._valid = False
+        # device-sharded column plane (repro.dist.columns): cold builds
+        # take their create/delete masks from ONE sharded launch over
+        # the device-resident blocks instead of per-shard host passes
+        self.plane = getattr(weaver, "device_plane", None)
         self.stats = {"cold": 0, "delta": 0, "delta_noop": 0}
 
     # ------------------------------------------------------------- helpers
@@ -336,15 +340,22 @@ class SnapshotEngine:
             arr[i] = pos[s.key()] < p_at
 
     def _eval(self, create_rows, delete_rows, cstamp, dstamp, q, at,
-              refine, pend):
+              refine, pend, pre=None):
         """Conservative cb/db for a row block; queue concurrents on pend.
 
         ``cstamp``/``dstamp`` map a local row id to its original
         :class:`Stamp` and are only called for the (rare) rows whose
-        packed form is possibly concurrent with q.
+        packed form is possibly concurrent with q.  ``pre`` is a
+        precomputed ``(cb, db)`` pair (the device plane's sharded
+        launch, bit-identical to the host evaluation) — only the
+        concurrent-residue queueing runs here then.
         """
-        cb = np.array(_before_batch(create_rows, q))
-        db = np.array(_before_batch(delete_rows, q))
+        if pre is not None:
+            cb = np.array(pre[0], dtype=bool)
+            db = np.array(pre[1], dtype=bool)
+        else:
+            cb = np.array(_before_batch(create_rows, q))
+            db = np.array(_before_batch(delete_rows, q))
         if refine and create_rows.shape[0]:
             for rows, arr, stamp_of in ((create_rows, cb, cstamp),
                                         (delete_rows, db, dstamp)):
@@ -369,6 +380,16 @@ class SnapshotEngine:
         pend: List[tuple] = []
         self.sig = self._signature(shards)
         self.shard_cols = [sh.partition.columns for sh in shards]
+        # device-sharded path: one sync + ONE sharded kernel launch for
+        # every shard's create/delete masks; the per-shard loop below
+        # then only gathers views and queues the concurrent residue
+        # (resolved by the same single batched oracle trip)
+        mk = None
+        if self.plane is not None:
+            self.plane.sync(self.shard_cols)
+            self.plane.before_all(q)
+            mk = {id(c): self.plane.masks_for(c)
+                  for c in self.shard_cols if c is not None}
         # per shard: [n_v, n_e, v_log, e_log, n_compaction_events]
         self.consumed = []
         v_blocks, e_blocks = [], []   # (cb, db, create_view, delete_view)
@@ -387,7 +408,9 @@ class SnapshotEngine:
                 cb, db = self._eval(cv, dv,
                                     cols.v_create_stamp.__getitem__,
                                     cols.v_delete_stamp.__getitem__,
-                                    q, at, refine, pend)
+                                    q, at, refine, pend,
+                                    pre=None if mk is None
+                                    else mk[id(cols)][0:2])
                 v_blocks.append((cb, db, cv, dv))
                 v_sh.append(np.full(nv, si, np.int32))
                 v_sl.append(np.arange(nv, dtype=np.int32))
@@ -397,7 +420,9 @@ class SnapshotEngine:
                 cb, db = self._eval(ce, de,
                                     cols.e_create_stamp.__getitem__,
                                     cols.e_delete_stamp.__getitem__,
-                                    q, at, refine, pend)
+                                    q, at, refine, pend,
+                                    pre=None if mk is None
+                                    else mk[id(cols)][2:4])
                 e_blocks.append((cb, db, ce, de))
                 e_sh.append(np.full(ne, si, np.int32))
                 e_sl.append(np.arange(ne, dtype=np.int32))
@@ -651,6 +676,11 @@ class SnapshotEngine:
 
     def _refresh(self, at: Stamp, refine: bool) -> None:
         q = clock.pack(at, self.n_gk)
+        if self.plane is not None:
+            # residency stays O(changed) per device; the gathered-subset
+            # re-evaluation below is host-side (delta sets are tiny by
+            # contract and the masks are bit-identical either way)
+            self.plane.sync(self.shard_cols)
         ch_v, ch_e, app_v, app_e = self._consume_changes()
         ids_v = np.union1d(ch_v, self.v_unsettled).astype(np.int64)
         ids_e = np.union1d(ch_e, self.e_unsettled).astype(np.int64)

@@ -315,13 +315,15 @@ class ShardPlan:
     """
 
     def __init__(self, cols, at: Stamp, n_gk: int,
-                 refine_batch: Optional[Callable] = None):
+                 refine_batch: Optional[Callable] = None,
+                 device_plane=None):
         self.at = at
         self.version = cols.version
         self.cols = cols
         self.n_gk = n_gk
         self.q = clock.pack(at, n_gk)
         self._refine_batch = refine_batch
+        self._plane = device_plane
         self._prop_cache: Dict[Tuple[str, str], tuple] = {}
         #: rows evaluated by this build (simulated-cost accounting)
         self.built_rows = (cols.n_v + cols.n_e
@@ -335,12 +337,25 @@ class ShardPlan:
 
         nv, ne = cols.n_v, cols.n_e
         pend: List[tuple] = []
+        # device-sharded path: the create/delete stamp masks come from
+        # the resident blocks (one shard_map launch, shared across every
+        # consumer of the same query stamp); property stamps are not on
+        # the plane and evaluate host-side either way
+        mk = None
+        if device_plane is not None:
+            device_plane.sync([cols])
+            device_plane.before_all(self.q)
+            mk = device_plane.masks_for(cols)
         vc, vd = cols.v_create.view(), cols.v_delete.view()
-        cb = self._eval(vc, cols.v_create_stamp, pend)
-        db = self._eval(vd, cols.v_delete_stamp, pend)
+        cb = self._eval(vc, cols.v_create_stamp, pend,
+                        pre=None if mk is None else mk[0])
+        db = self._eval(vd, cols.v_delete_stamp, pend,
+                        pre=None if mk is None else mk[1])
         ec, ed = cols.e_create.view(), cols.e_delete.view()
-        ecb = self._eval(ec, cols.e_create_stamp, pend)
-        edb = self._eval(ed, cols.e_delete_stamp, pend)
+        ecb = self._eval(ec, cols.e_create_stamp, pend,
+                         pre=None if mk is None else mk[2])
+        edb = self._eval(ed, cols.e_delete_stamp, pend,
+                         pre=None if mk is None else mk[3])
         # property stamps are evaluated eagerly (one bool per version
         # row) — the per-key views are derived lazily from these masks
         # with no further oracle traffic
@@ -409,13 +424,18 @@ class ShardPlan:
                             or self.p_unsettled["e"].size)
 
     def _eval(self, rows: np.ndarray, stamp_of, pend: List[tuple],
-              ids: Optional[np.ndarray] = None) -> np.ndarray:
+              ids: Optional[np.ndarray] = None,
+              pre: Optional[np.ndarray] = None) -> np.ndarray:
         """rows ≺ q, queueing truly-concurrent stamps on ``pend`` for the
         single batched resolution.  ``ids`` maps local row positions back
-        to table slots when ``rows`` is a gathered subset."""
+        to table slots when ``rows`` is a gathered subset.  ``pre`` is a
+        precomputed ≺-mask (the device plane's sharded launch) — bit-
+        identical to the host evaluation, so only the concurrent-residue
+        queueing runs here."""
         if rows.shape[0] == 0:
             return np.zeros(0, bool)
-        out = _before_rows(rows, self.q)
+        out = (np.array(pre, dtype=bool) if pre is not None
+               else _before_rows(rows, self.q))
         if self._refine_batch is not None:
             for li in np.nonzero(
                     clock.concurrent_mask_np(rows, self.q))[0].tolist():
@@ -517,6 +537,12 @@ class ShardPlan:
             return False
         if refine_batch is not None:
             self._refine_batch = refine_batch
+        if self._plane is not None:
+            # keep the device-resident block tracking the change feed
+            # (O(changed) row scatters per device); the gathered-subset
+            # re-evaluation below stays host-side — the delta set is
+            # tiny by contract, and the masks are bit-identical
+            self._plane.sync([cols])
         stamp_moved = o is Order.BEFORE
         self.at = at
         self.q = clock.pack(at, self.n_gk)
@@ -819,7 +845,8 @@ class ShardPlan:
 
 def maintain_plan(plan: Optional[ShardPlan], cols, at: Stamp, n_gk: int,
                   refine_batch: Optional[Callable],
-                  allow_delta: bool = True
+                  allow_delta: bool = True,
+                  device_plane=None
                   ) -> Tuple[ShardPlan, str]:
     """The three-way plan maintenance policy, shared by the shard event
     loop (``Shard._frontier_plan``) and the synchronous driver
@@ -843,7 +870,8 @@ def maintain_plan(plan: Optional[ShardPlan], cols, at: Stamp, n_gk: int,
         if later and allow_delta and plan.refresh(
                 at, refine_batch=refine_batch):
             return plan, "delta"
-    return ShardPlan(cols, at, n_gk, refine_batch=refine_batch), "cold"
+    return ShardPlan(cols, at, n_gk, refine_batch=refine_batch,
+                     device_plane=device_plane), "cold"
 
 
 def g_len(a: np.ndarray) -> int:

@@ -123,6 +123,12 @@ class AdaptiveWindow:
             self.current = nxt if nxt >= self.floor else 0.0
 
 
+# sentinel error string a shed NACK carries in the tx reply path; the
+# client session intercepts it (re-route within the attempt) instead of
+# surfacing it as a commit failure
+SHED_NACK = "__shed_nack__"
+
+
 class Gatekeeper:
     def __init__(self, sim: Simulator, gid: int, n_gk: int,
                  store: BackingStore, oracle: OracleServer,
@@ -130,7 +136,7 @@ class Gatekeeper:
                  group_window: float = 0.0, group_max: int = 64,
                  read_window: float = 0.0, read_group_max: int = 128,
                  adaptive: bool = False, admission_limit: int = 0,
-                 ack_on_apply: bool = False):
+                 ack_on_apply: bool = False, nack_shed: bool = True):
         self.sim = sim
         sim.register(self)
         self.gid = gid
@@ -173,6 +179,10 @@ class Gatekeeper:
         # and the client session's ack timeout recovers them (0 = off)
         self.admission_limit = admission_limit
         self._admitted = 0
+        # shed NACKs: answer a shed with an explicit reject so sessions
+        # re-route within the same attempt instead of waiting out the
+        # ack timer (False = silent shed, the PR 7 behavior)
+        self.nack_shed = nack_shed
         # read-your-writes: defer tx acks until every destination shard
         # applied; stamp-key -> {"waiting": shard ids, "replies": [...]}
         self.ack_on_apply = ack_on_apply
@@ -299,6 +309,12 @@ class Gatekeeper:
             # with backoff (PR 6 retry machinery), so overload turns
             # into delay instead of a collapsing serve queue
             self.sim.counters.txs_shed += 1
+            if self.nack_shed:
+                # explicit reject: the session re-routes to the next
+                # gatekeeper immediately instead of burning the timeout
+                self.sim.counters.shed_nacks += 1
+                self.sim.send(self, client, reply, False, SHED_NACK, None,
+                              nbytes=32)
             return
         self._admitted += 1
 
@@ -726,6 +742,12 @@ class Gatekeeper:
             # load leveling: shed without charging a serve round — the
             # read session's ack timeout resubmits with backoff
             self.sim.counters.progs_shed += 1
+            if self.nack_shed:
+                # explicit reject through the coordinator's reject hook:
+                # the read session re-routes immediately
+                self.sim.counters.shed_nacks += 1
+                self.sim.send(self, coordinator, coordinator.on_reject,
+                              prog_id, nbytes=32)
             return
         self._admitted += 1
 

@@ -103,7 +103,8 @@ class Shard:
                  plan_delta: bool = True,
                  coalesce: bool = True,
                  plan_cache_entries: int = 4,
-                 ack_applies: bool = False):
+                 ack_applies: bool = False,
+                 device_plane=None):
         self.sim = sim
         sim.register(self)
         self.sid = sid
@@ -151,6 +152,9 @@ class Shard:
         # forwarding gatekeeper (list wired by Weaver; indexable by gid)
         self.ack_applies = ack_applies
         self.gatekeepers: List[object] = []
+        # device-sharded column plane (repro.dist.columns): plan builds
+        # evaluate visibility from device-resident blocks when set
+        self.device_plane = device_plane
 
     def start(self, peers: List["Shard"]) -> None:
         self.peers = peers
@@ -466,7 +470,28 @@ class Shard:
         exactly per-tx semantics.  The uncontended case (all other
         heads dominate the window, no gated programs) applies the
         whole batch in one ``MVGraphPartition.apply_batch`` — one
-        stamp-matrix append + one patch-log extend per table."""
+        stamp-matrix append + one patch-log extend per table.
+
+        Reorder buffer (cross-gatekeeper contention): under heavy
+        concurrency every other queue head is ALSO a txbatch whose
+        stamps interleave with ours, so the strict-before prefix above
+        collapses to one item per turn — per-item interleaving with a
+        full service round each.  Instead, treat this batch plus every
+        other queue's head txbatch as candidate streams and k-way-merge
+        their runnable prefixes into ONE bulk apply: an item is
+        consumed when its stamp is strictly vector-before every other
+        stream's next unconsumed item, every non-batch queue head, and
+        every pending program stamp.  Per-gatekeeper stamps are
+        elementwise monotone (a gk's vector only grows), so a stream's
+        next item bounds everything later in that stream, and strict
+        vector-before is transitive — the consumed sequence is exactly
+        the order the per-item loop would have applied, with no oracle
+        traffic.  A stream that runs dry is bounded by the next item
+        behind it in its queue; with nothing behind it the merge stops
+        (a future item from that gatekeeper could order anywhere).
+        Acks are routed per ORIGIN gatekeeper, and partially consumed
+        foreign batches are requeued as their queue's new head —
+        identical to the single-stream remainder contract."""
         item = self.queues[g].popleft()
         wb: WriteBatch = item.payload
         items = wb.items
@@ -476,18 +501,76 @@ class Shard:
             # replays the whole window from the store's log)
             self._apply_deduped(items[:max(1, len(items) // 2)])
             return 0.0
-        bounds = [self.queues[h][0].stamp for h in range(self.n_gk)
-                  if h != g and self.queues[h]]
-        bounds += [p["stamp"] for p in self.pending_progs]
-        take = 1
-        while take < len(items) and all(
-                compare(items[take][0], s) is Order.BEFORE for s in bounds):
-            take += 1
-        n_ops = self._apply_deduped(items[:take])
-        self._ack_applied(g, [s for s, _ in items[:take]])
-        if take < len(items):
+        fixed_bounds = [p["stamp"] for p in self.pending_progs]
+        streams: Dict[int, List[Tuple[Stamp, List[dict]]]] = {g: items}
+        for h in range(self.n_gk):
+            if h == g or not self.queues[h]:
+                continue
+            head = self.queues[h][0]
+            if head.kind == "txbatch":
+                streams[h] = head.payload.items
+            else:
+                fixed_bounds.append(head.stamp)
+        ci = {h: 0 for h in streams}     # consumed-prefix cursor per stream
+        consumed: List[Tuple[Stamp, List[dict]]] = [items[0]]
+        origin: List[int] = [g]
+        ci[g] = 1
+
+        def bound_of(h: int) -> Optional[Stamp]:
+            s = streams[h]
+            if ci[h] < len(s):
+                return s[ci[h]][0]
+            if h == g:                   # this batch was popped already
+                return self.queues[g][0].stamp if self.queues[g] else None
+            if len(self.queues[h]) > 1:  # next item behind the head batch
+                return self.queues[h][1].stamp
+            return None                  # unknown future: blocks the merge
+
+        progress = True
+        while progress:
+            progress = False
+            for h in streams:
+                i = ci[h]
+                s = streams[h]
+                if i >= len(s):
+                    continue
+                cand = s[i][0]
+                ok = all(compare(cand, b) is Order.BEFORE
+                         for b in fixed_bounds)
+                if ok:
+                    for k in streams:
+                        if k == h:
+                            continue
+                        b = bound_of(k)
+                        if b is None or compare(cand, b) is not Order.BEFORE:
+                            ok = False
+                            break
+                if ok:
+                    consumed.append(s[i])
+                    origin.append(h)
+                    ci[h] = i + 1
+                    progress = True
+        n_merged = sum(1 for h in origin if h != g)
+        if n_merged:
+            self.sim.counters.crossgk_batch_merges += 1
+            self.sim.counters.crossgk_merged_txs += n_merged
+        n_ops = self._apply_deduped(consumed)
+        by_origin: Dict[int, List[Stamp]] = {}
+        for (s, _), h in zip(consumed, origin):
+            by_origin.setdefault(h, []).append(s)
+        for h, stamps in by_origin.items():
+            self._ack_applied(h, stamps)
+        if ci[g] < len(items):
             self.queues[g].appendleft(_QueueItem(
-                items[take][0], "txbatch", WriteBatch(items[take:])))
+                items[ci[g]][0], "txbatch", WriteBatch(items[ci[g]:])))
+        for h in streams:
+            if h == g or ci[h] == 0:
+                continue
+            self.queues[h].popleft()
+            rest = streams[h][ci[h]:]
+            if rest:
+                self.queues[h].appendleft(_QueueItem(
+                    rest[0][0], "txbatch", WriteBatch(rest)))
         return self.cost.shard_op * max(1, n_ops)
 
     def _apply_deduped(self, items: List[Tuple[Stamp, List[dict]]]) -> int:
@@ -583,7 +666,8 @@ class Shard:
         plan, kind = maintain_plan(
             cand, cols, stamp, self.n_gk,
             lambda ss, at=stamp: self._refine_batch(ss, at),
-            allow_delta=self.plan_delta)
+            allow_delta=self.plan_delta,
+            device_plane=self.device_plane)
         if kind == "delta":
             ctr.plan_delta_refreshes += 1
             ctr.plan_rows_refreshed += plan.last_refresh_rows

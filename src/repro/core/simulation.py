@@ -131,6 +131,17 @@ class Counters:
     acks_deferred: int = 0         # tx acks deferred until every
     #                                destination shard applied
     #                                (read_your_writes mode)
+    shed_nacks: int = 0            # explicit reject replies sent for
+    #                                admission sheds (nack_shed mode)
+    nack_reroutes: int = 0         # session re-routes to another
+    #                                gatekeeper triggered by a shed NACK
+    #                                (same attempt — no timer burned)
+    crossgk_batch_merges: int = 0  # shard reorder-buffer merges that
+    #                                pulled runnable items from another
+    #                                gatekeeper's queued batch into one
+    #                                bulk apply
+    crossgk_merged_txs: int = 0    # foreign-queue txs applied by those
+    #                                merges
     admission_window_hist: dict = field(default_factory=dict)
     #                                effective admission-window length at
     #                                flush, power-of-two us buckets keyed

@@ -18,7 +18,7 @@ import numpy as np
 from .clock import Stamp, compare, Order, zero
 from .cluster import ClusterManager, HeartbeatSender
 from .faultinject import FaultInjector
-from .gatekeeper import CostModel, Gatekeeper
+from .gatekeeper import CostModel, Gatekeeper, SHED_NACK
 from .mvgraph import VidIntern
 from .nodeprog import REGISTRY
 from .oracle import OracleServer
@@ -56,6 +56,7 @@ class ProgCoordinator:
         self.active: Dict[int, dict] = {}
         self.done: set = set()
         self.on_complete: Dict[int, Callable] = {}
+        self.on_nack: Dict[int, Callable] = {}
         self.shards: List[Shard] = []
         self.weaver = None
         self.last_prog_stats: dict = {}
@@ -113,6 +114,7 @@ class ProgCoordinator:
             if self.weaver is not None:
                 self.weaver._prog_finished(prog_id)
             cb = self.on_complete.pop(prog_id, None)
+            self.on_nack.pop(prog_id, None)
             if cb is not None:
                 cb(result, st["stamp"], latency)
 
@@ -122,12 +124,23 @@ class ProgCoordinator:
         the read session's ack timeout resubmits."""
         self.active.pop(prog_id, None)
 
+    def on_reject(self, prog_id: int) -> None:
+        """Wire entry for an explicit shed NACK: clear any state, then
+        tell the submitting session so it can re-route to another
+        gatekeeper within the same attempt instead of waiting out its
+        ack timer."""
+        self.reject(prog_id)
+        cb = self.on_nack.pop(prog_id, None)
+        if cb is not None:
+            cb()
+
     def abandon(self, prog_id: int) -> None:
         """A read session gave up on (or superseded) this attempt: drop
         its termination state and ignore any late reports."""
         self.active.pop(prog_id, None)
         self.done.add(prog_id)
         self.on_complete.pop(prog_id, None)
+        self.on_nack.pop(prog_id, None)
         for sh in self.shards:
             sh.finish_prog(prog_id)
 
@@ -188,6 +201,18 @@ class WeaverConfig:
     client_backoff_base: float = 8e-3  # first ack-timeout; doubles per
     #                                    attempt (plus jitter)
     client_backoff_cap: float = 80e-3  # ack-timeout ceiling
+    shed_nack: bool = True       # admission sheds send an explicit reject
+    #                              (NACK) so sessions re-route to another
+    #                              gatekeeper within the SAME attempt
+    #                              instead of waiting out the ack timer
+    #                              (False = the silent-shed legacy path)
+    device_shard_columns: bool = False  # keep packed stamp columns
+    #                                     resident per mesh device and
+    #                                     evaluate visibility with one
+    #                                     repro.dist.columns shard_map
+    #                                     launch (host-global numpy stays
+    #                                     the default equivalence oracle
+    #                                     on CPU)
     fault_plan: Optional[object] = None  # repro.core.faultinject.FaultPlan
     #                                      (None = no fault injection)
     seed: int = 0
@@ -208,6 +233,10 @@ class Weaver:
         self.oracle = OracleServer(self.sim)
         self.manager = ClusterManager(self.sim, cfg.heartbeat_period)
         self.manager.weaver = self
+        self.device_plane = None
+        if cfg.device_shard_columns:
+            from ..dist.columns import DeviceColumnPlane
+            self.device_plane = DeviceColumnPlane(cfg.n_gatekeepers)
         self.gatekeepers: List[Gatekeeper] = [
             Gatekeeper(self.sim, g, cfg.n_gatekeepers, self.store, self.oracle,
                        cfg.cost, cfg.tau, cfg.tau_nop,
@@ -217,7 +246,8 @@ class Weaver:
                        read_group_max=cfg.read_group_max,
                        adaptive=cfg.adaptive_admission,
                        admission_limit=cfg.admission_queue_limit,
-                       ack_on_apply=cfg.read_your_writes)
+                       ack_on_apply=cfg.read_your_writes,
+                       nack_shed=cfg.shed_nack)
             for g in range(cfg.n_gatekeepers)
         ]
         self.shards: List[Shard] = [
@@ -227,7 +257,8 @@ class Weaver:
                   plan_delta=cfg.frontier_plan_delta,
                   coalesce=cfg.frontier_coalesce,
                   plan_cache_entries=cfg.plan_cache_entries,
-                  ack_applies=cfg.read_your_writes)
+                  ack_applies=cfg.read_your_writes,
+                  device_plane=self.device_plane)
             for s in range(cfg.n_shards)
         ]
         for gk in self.gatekeepers:
@@ -293,15 +324,43 @@ class Weaver:
         txid = next(self._txids)
         pref = (next(self._rr) if gatekeeper is None else gatekeeper)
         t0 = self.sim.now
-        st = {"done": False, "attempt": 0}
+        st = {"done": False, "attempt": 0, "nack": None}
 
         def reply(ok: bool, err: Optional[str], stamp: Stamp) -> None:
             if st["done"]:
                 return                   # duplicate/late ack of an earlier try
+            if err == SHED_NACK:
+                # admission shed NACK: re-route to the next gatekeeper
+                # within the SAME attempt (the backoff timer chain and
+                # retry budget are untouched — a re-route is free, not a
+                # retry); an exhausted rotation waits out the timer
+                nk = st["nack"]
+                if nk is not None:
+                    nk()
+                return
             st["done"] = True
             callback(TxResult(ok=ok, stamp=stamp, error=err,
                               retries=st["attempt"] - 1,
                               latency=self.sim.now - t0))
+
+        def send(k: int, j: int) -> None:
+            n = len(self.gatekeepers)
+            for off in range(n):         # rotate past known-dead servers
+                gk = self.gatekeepers[(pref + k + j + off) % n]
+                if gk.alive:
+                    break
+
+            def nack(k=k, j=j) -> None:
+                st["nack"] = None
+                if st["done"] or st["attempt"] != k + 1 \
+                        or j + 1 >= len(self.gatekeepers):
+                    return               # stale, or rotation exhausted
+                self.sim.counters.nack_reroutes += 1
+                send(k, j + 1)
+
+            st["nack"] = nack
+            self.sim.send(self, gk, gk.submit_tx, self, tx.ops, reply,
+                          0, None, txid, nbytes=64 + 48 * len(tx.ops))
 
         def attempt() -> None:
             if st["done"]:
@@ -317,13 +376,7 @@ class Weaver:
             if k > 0:
                 self.sim.counters.client_retries += 1
             st["attempt"] = k + 1
-            n = len(self.gatekeepers)
-            for off in range(n):         # rotate past known-dead servers
-                gk = self.gatekeepers[(pref + k + off) % n]
-                if gk.alive:
-                    break
-            self.sim.send(self, gk, gk.submit_tx, self, tx.ops, reply,
-                          0, None, txid, nbytes=64 + 48 * len(tx.ops))
+            send(k, 0)
             backoff = min(self.cfg.client_backoff_cap,
                           self.cfg.client_backoff_base * (2 ** k))
             backoff *= 1.0 + 0.25 * float(self._client_rng.random())
@@ -373,6 +426,31 @@ class Weaver:
                     self.coordinator.abandon(pid)
             callback(result, stamp, self.sim.now - t0)
 
+        def send(k: int, j: int) -> None:
+            pid = next(self._prog_ids)
+            st["pids"].append(pid)
+            n = len(self.gatekeepers)
+            for off in range(n):         # rotate past known-dead servers
+                gk = self.gatekeepers[(pref + k + j + off) % n]
+                if gk.alive:
+                    break
+            self.coordinator.on_complete[pid] = (
+                lambda r, s, _l, pid=pid: finish(r, s, pid_done=pid))
+
+            def nack(k=k, j=j, pid=pid) -> None:
+                # shed NACK for this exact attempt: re-route within the
+                # attempt (fresh pid, same timer chain and budget); an
+                # exhausted rotation waits out the ack timer
+                if st["done"] or pid != st["pids"][-1] \
+                        or j + 1 >= len(self.gatekeepers):
+                    return
+                self.sim.counters.nack_reroutes += 1
+                send(k, j + 1)
+
+            self.coordinator.on_nack[pid] = nack
+            self.sim.send(self, gk, gk.submit_program, self.coordinator,
+                          name, entries, pid, nbytes=64 + 48 * len(entries))
+
         def attempt() -> None:
             if st["done"]:
                 return
@@ -384,17 +462,7 @@ class Weaver:
             if k > 0:
                 self.sim.counters.prog_retries += 1
             st["attempt"] = k + 1
-            pid = next(self._prog_ids)
-            st["pids"].append(pid)
-            n = len(self.gatekeepers)
-            for off in range(n):         # rotate past known-dead servers
-                gk = self.gatekeepers[(pref + k + off) % n]
-                if gk.alive:
-                    break
-            self.coordinator.on_complete[pid] = (
-                lambda r, s, _l, pid=pid: finish(r, s, pid_done=pid))
-            self.sim.send(self, gk, gk.submit_program, self.coordinator,
-                          name, entries, pid, nbytes=64 + 48 * len(entries))
+            send(k, 0)
             backoff = min(max(self.cfg.client_backoff_cap, base),
                           base * (2 ** k))
             backoff *= 1.0 + 0.25 * float(self._client_rng.random())
@@ -471,7 +539,8 @@ class Weaver:
                        plan_delta=self.cfg.frontier_plan_delta,
                        coalesce=self.cfg.frontier_coalesce,
                        plan_cache_entries=self.cfg.plan_cache_entries,
-                       ack_applies=self.cfg.read_your_writes)
+                       ack_applies=self.cfg.read_your_writes,
+                       device_plane=self.device_plane)
             nu.recover_from(self.store.recover_shard(
                 sid, use_wal=self.cfg.wal_replay))
             nu.gatekeepers = self.gatekeepers
@@ -498,7 +567,8 @@ class Weaver:
                             read_group_max=self.cfg.read_group_max,
                             adaptive=self.cfg.adaptive_admission,
                             admission_limit=self.cfg.admission_queue_limit,
-                            ack_on_apply=self.cfg.read_your_writes)
+                            ack_on_apply=self.cfg.read_your_writes,
+                            nack_shed=self.cfg.shed_nack)
             self.gatekeepers[gid] = nu
             nu.start(self.gatekeepers, self.shards)
             # refresh surviving gatekeepers' peer lists (no new timers)

@@ -44,6 +44,48 @@ def _visibility_kernel(q_ref, create_ref, delete_ref, out_ref):
     out_ref[...] = (before(c) & ~before(d))[None, :]
 
 
+def _before_kernel(q_ref, rows_ref, out_ref):
+    q = q_ref[...]                      # (C, 1)
+    rows = rows_ref[...]                # (C, BN)
+    is_no = rows[0] == NO_STAMP
+    lower_epoch = rows[0] < q[0, 0]
+    same_epoch = rows[0] == q[0, 0]
+    le = jnp.all(rows[1:] <= q[1:], axis=0)
+    eq = jnp.all(rows[1:] == q[1:], axis=0)
+    out_ref[...] = jnp.where(is_no, False,
+                             lower_epoch | (same_epoch & le & ~eq))[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def before_pallas(rows_cm: jnp.ndarray, q: jnp.ndarray,
+                  block_n: int = DEFAULT_BLOCK_N,
+                  interpret: bool = None) -> jnp.ndarray:
+    """rows (C, N) int32, q (C,) -> (N,) bool ``row ≺ q``.
+
+    The single-table half of :func:`visibility_pallas` — same (C, N)
+    layout, block specs and grid; the device-sharded column plane
+    launches it per mesh device where create and delete tables live in
+    one stacked block and want independent masks.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    c_dim, n = rows_cm.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        _before_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c_dim, 1), lambda i: (0, 0)),      # q (broadcast)
+            pl.BlockSpec((c_dim, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.bool_),
+        interpret=interpret,
+    )(q[:, None], rows_cm)
+    return out[0]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def visibility_pallas(create_cm: jnp.ndarray, delete_cm: jnp.ndarray,
                       q: jnp.ndarray, block_n: int = DEFAULT_BLOCK_N,

@@ -16,9 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import DEFAULT_BLOCK_N, NO_STAMP, default_interpret, \
-    visibility_pallas
-from .ref import visibility_ref
+from .kernel import DEFAULT_BLOCK_N, NO_STAMP, before_pallas, \
+    default_interpret, visibility_pallas
+from .ref import before_cm, visibility_ref
 
 
 def visibility_mask(create_rows: jnp.ndarray, delete_rows: jnp.ndarray,
@@ -44,3 +44,24 @@ def visibility_mask(create_rows: jnp.ndarray, delete_rows: jnp.ndarray,
     mask = visibility_pallas(create_cm, delete_cm, q, block_n=block_n,
                              interpret=interpret)
     return mask[:n]
+
+
+def before_mask(rows: jnp.ndarray, q: jnp.ndarray,
+                block_n: int = DEFAULT_BLOCK_N,
+                interpret: Optional[bool] = None,
+                use_ref: bool = False) -> jnp.ndarray:
+    """(N, C) stamp rows + (C,) query -> (N,) bool ``row ≺ q`` mask
+    (the single-table half of :func:`visibility_mask`)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, c = rows.shape
+    rows_cm = jnp.asarray(rows).T
+    q = jnp.asarray(q)
+    if use_ref:
+        return before_cm(rows_cm, q)
+    n_pad = -(-n // block_n) * block_n
+    if n_pad != n:
+        rows_cm = jnp.pad(rows_cm, ((0, 0), (0, n_pad - n)),
+                          constant_values=NO_STAMP)
+    return before_pallas(rows_cm, q, block_n=block_n,
+                         interpret=interpret)[:n]

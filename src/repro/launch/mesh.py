@@ -31,3 +31,20 @@ def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
     import jax
 
     return jax.make_mesh(shape, axes, devices=jax.devices()[:1])
+
+
+def make_columns_mesh(n_devices=None):
+    """1-D ``("data",)`` mesh over (up to) all local devices for the
+    device-sharded columnar data plane (``repro.dist.columns``).
+
+    Deliberately NOT registered through ``repro.dist.set_mesh`` — the
+    plane passes it to ``shard_map`` explicitly, so the process-global
+    mesh that the model helpers consult stays whatever the deployment
+    installed (usually unset on CPU).
+    """
+    import jax
+
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else min(int(n_devices),
+                                                   len(devices))
+    return jax.make_mesh((n,), ("data",), devices=devices[:n])

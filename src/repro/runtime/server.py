@@ -122,29 +122,63 @@ class GraphQueryServer:
 
     def run_open_loop(self, rate: float, n_requests: int,
                       make_request: Callable[[int], Tuple[str, object]],
-                      seed: int = 0, timeout: float = 120.0) -> dict:
+                      seed: int = 0, timeout: float = 120.0,
+                      request_deadline: Optional[float] = None) -> dict:
         """Poisson arrivals at ``rate``/sec, independent of completions.
 
         Offered load past the service capacity is exactly the regime
         where bounded admission queues must shed: completions that never
         arrive (no session) would hang the drain, so failure surfacing
         via sessions/give-ups is part of the contract being measured.
+
+        ``request_deadline`` (simulated seconds; defaults to
+        ``min(timeout, 10.0)``) arms a watchdog: if any *issued* request
+        stays outstanding past the deadline — i.e. the retry machinery
+        silently swallowed its completion instead of surfacing a failure
+        — the driver raises ``RuntimeError`` with a diagnostic (oldest
+        stuck request, its kind and age, progress and shed counters)
+        rather than spinning until the wall-clock timeout and returning
+        a result that under-reports the bug.
         """
         sim = self.weaver.sim
         rng = np.random.default_rng(seed)
-        state = {"done": 0, "ok": 0, "t_end": sim.now}
+        if request_deadline is None:
+            request_deadline = min(timeout, 10.0)
+        state = {"done": 0, "ok": 0, "issued": 0, "t_end": sim.now}
+        outstanding: Dict[int, Tuple[float, str]] = {}
         lat: List[float] = []
         t0 = sim.now
 
-        def _done(ok: bool, latency: float) -> None:
-            state["done"] += 1
-            state["t_end"] = sim.now
-            if ok:
-                state["ok"] += 1
-                lat.append(latency)
+        def _diagnose(reason: str) -> RuntimeError:
+            c = sim.counters
+            if outstanding:
+                oldest = min(outstanding, key=lambda i: outstanding[i][0])
+                issue_t, kind = outstanding[oldest]
+                stuck = (f"oldest stuck: req#{oldest} kind={kind} "
+                         f"age={sim.now - issue_t:.3f}s")
+            else:
+                stuck = "no requests outstanding"
+            return RuntimeError(
+                f"open-loop watchdog: {reason}; "
+                f"issued={state['issued']}/{n_requests} "
+                f"completed={state['done']} ok={state['ok']}; {stuck}; "
+                f"counters: progs_shed={c.progs_shed} "
+                f"txs_shed={c.txs_shed} prog_gaveup={c.prog_gaveup} "
+                f"client_gaveup={c.client_gaveup}")
 
         def arrive(i: int) -> None:
+            state["issued"] += 1
             kind, payload = make_request(i)
+            outstanding[i] = (sim.now, kind)
+
+            def _done(ok: bool, latency: float) -> None:
+                outstanding.pop(i, None)
+                state["done"] += 1
+                state["t_end"] = sim.now
+                if ok:
+                    state["ok"] += 1
+                    lat.append(latency)
+
             self._issue(kind, payload, _done)
 
         # pre-schedule the whole arrival process (deterministic given seed)
@@ -156,6 +190,16 @@ class GraphQueryServer:
         while state["done"] < n_requests and sim.now < deadline \
                 and sim.pending():
             sim.run(until=min(deadline, sim.now + 10e-3))
+            if outstanding:
+                oldest_t = min(it for it, _ in outstanding.values())
+                if sim.now - oldest_t > request_deadline:
+                    raise _diagnose(
+                        f"request exceeded deadline "
+                        f"({request_deadline:.3f}s simulated)")
+        # a hang can also surface as the event queue running dry with
+        # issued requests still outstanding: nothing can complete them
+        if outstanding and not sim.pending():
+            raise _diagnose("event queue drained with requests outstanding")
         dur = max(state["t_end"] - t0, 1e-9)
         return {"offered_per_s": rate, "issued": n_requests,
                 "completed": state["done"], "ok": state["ok"],

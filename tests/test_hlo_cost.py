@@ -58,9 +58,44 @@ class TestLoopAwareCosting:
             r.while_trips
 
     def test_collectives_inside_scan_multiplied(self):
-        import os
         if len(jax.devices()) < 2:
             pytest.skip("needs >1 device (run under forced host devices)")
+        from jax.sharding import PartitionSpec as P
+
+        from repro import dist
+
+        ndev = len(jax.devices())
+        mesh = jax.make_mesh((ndev,), ("d",))
+        d, n = 64, 8
+        x = jax.ShapeDtypeStruct((ndev, d), jnp.float32)
+
+        def scanned(x):
+            def inner(xs):
+                def body(c, _):
+                    return c + jax.lax.psum(c, "d"), None
+                y, _ = jax.lax.scan(body, xs, None, length=n)
+                return y
+            return dist.shard_map(inner, mesh=mesh, in_specs=P("d"),
+                                  out_specs=P("d"))(x)
+
+        def unrolled(x):
+            def inner(xs):
+                c = xs
+                for _ in range(n):
+                    c = c + jax.lax.psum(c, "d")
+                return c
+            return dist.shard_map(inner, mesh=mesh, in_specs=P("d"),
+                                  out_specs=P("d"))(x)
+
+        r_scan = hlo_cost.analyze(_compile(scanned, x).as_text())
+        r_unroll = hlo_cost.analyze(_compile(unrolled, x).as_text())
+        # the unrolled body materializes n distinct all-reduces; the scan
+        # must charge its single in-loop all-reduce n times to match
+        assert r_unroll.total_collective_bytes > 0
+        assert r_scan.total_collective_bytes == pytest.approx(
+            r_unroll.total_collective_bytes, rel=0.05), \
+            (r_scan.collective_bytes, r_unroll.collective_bytes,
+             r_scan.while_trips)
 
     def test_dot_contraction_flops(self):
         a = jax.ShapeDtypeStruct((32, 64), jnp.float32)

@@ -381,3 +381,95 @@ class TestRevalidationSkip:
         assert len(results) == 12 and all(r.ok for r in results)
         vers = w.store.vertices["r"].props["a"]
         assert sorted(v[0] for v in vers) == list(range(12))
+
+
+# ---------------------------------------------------------------------------
+# shed NACKs (immediate re-route) + open-loop watchdog
+# ---------------------------------------------------------------------------
+
+class TestShedNack:
+    def _burst(self, shed_nack):
+        """Read burst pinned to gatekeeper 0 with a tiny admission queue
+        on a two-gatekeeper deployment; gatekeeper 1 sits idle, so every
+        shed could be served immediately by re-routing."""
+        w = make_weaver(seed=5, n_gk=2, n_shards=1,
+                        admission_queue_limit=2,
+                        read_retry_timeout=4e-3, shed_nack=shed_nack)
+        seed_vertices(w, 8)
+        lats = {}
+        for i in range(40):
+            w.submit_program(
+                "get_node", [(f"u{i % 8}", None)],
+                lambda r, s, l, i=i: lats.__setitem__(i, (r, l)),
+                gatekeeper=0)
+        w.settle(300e-3)
+        assert len(lats) == 40, "a shed read was never recovered"
+        assert all(r is not None for r, _ in lats.values())
+        mean = sum(l for _, l in lats.values()) / len(lats)
+        return mean, w.counters()
+
+    def test_nack_reroutes_cut_recovery_latency(self):
+        mean_on, c_on = self._burst(shed_nack=True)
+        mean_off, c_off = self._burst(shed_nack=False)
+        # both shed; only nack mode re-routes inside the attempt
+        assert c_on["progs_shed"] > 0 and c_off["progs_shed"] > 0
+        assert c_on["shed_nacks"] > 0
+        assert c_on["nack_reroutes"] > 0
+        assert c_off["shed_nacks"] == 0 and c_off["nack_reroutes"] == 0
+        # silent sheds wait out the full ack-timeout backoff; NACKed
+        # sessions re-route in one network hop
+        assert mean_on < mean_off, (mean_on, mean_off)
+        assert c_on["prog_retries"] <= c_off["prog_retries"]
+
+    def test_tx_shed_nack_reroutes(self):
+        """The tx-session mirror: shed writes re-route without burning
+        the retry timer and all commit."""
+        w = make_weaver(seed=7, n_gk=2, n_shards=1,
+                        admission_queue_limit=1, shed_nack=True)
+        seed_vertices(w, 4)
+        res = []
+        for i in range(24):
+            tx = w.begin_tx()
+            tx.set_vertex_prop(f"u{i % 4}", "k", i)
+            w.submit_tx(tx, res.append, gatekeeper=0)
+        w.settle(300e-3)
+        assert len(res) == 24 and all(r.ok for r in res)
+        c = w.counters()
+        assert c["txs_shed"] > 0
+        assert c["shed_nacks"] > 0
+        assert c["nack_reroutes"] > 0
+
+
+class TestOpenLoopWatchdog:
+    def _server(self, **kw):
+        from repro.runtime.server import GraphQueryServer
+        w = make_weaver(**kw)
+        seed_vertices(w, 4)
+        return GraphQueryServer(w)
+
+    def test_silent_drop_raises_with_diagnostic(self):
+        """shed_nack off + no read sessions: a shed program's callback
+        never fires.  The watchdog must fail the run with a diagnostic
+        instead of spinning to the wall-clock timeout."""
+        srv = self._server(seed=3, n_gk=1, n_shards=1,
+                           admission_queue_limit=1,
+                           read_retry_timeout=0.0, shed_nack=False)
+        with pytest.raises(RuntimeError) as ei:
+            srv.run_open_loop(
+                rate=20000.0, n_requests=40,
+                make_request=lambda i: ("prog",
+                                        ("get_node", [(f"u{i % 4}", None)])),
+                timeout=5.0, request_deadline=50e-3)
+        msg = str(ei.value)
+        assert "watchdog" in msg
+        assert "progs_shed=" in msg and "oldest stuck" in msg
+
+    def test_healthy_run_returns_normally(self):
+        srv = self._server(seed=3, n_gk=2, n_shards=1,
+                           read_retry_timeout=4e-3)
+        out = srv.run_open_loop(
+            rate=2000.0, n_requests=30,
+            make_request=lambda i: ("prog",
+                                    ("get_node", [(f"u{i % 4}", None)])),
+            timeout=10.0)
+        assert out["completed"] == 30 and out["ok"] == 30

@@ -655,3 +655,102 @@ class TestScalarCoalescing:
         assert results[True][0] == results[False][0]
         assert results[True][1] > 0, "no scalar deliveries merged"
         assert results[False][1] == 0
+
+
+# ---------------------------------------------------------------------------
+# shard reorder buffer (cross-gatekeeper batch merging)
+# ---------------------------------------------------------------------------
+
+class TestReorderBuffer:
+    def test_merges_foreign_runnable_prefix(self):
+        """Synthetic interleaving a1 ≺ b1 ≺ a2 ≺ b2 ≺ a3 across two
+        gatekeeper batches: executing gk0's batch must pull b1/b2 into
+        the same bulk apply, stop at a3 (gk1's stream exhausts with no
+        next-item bound), and requeue the leftover."""
+        from repro.core.writepath import WriteBatch
+
+        w = make_weaver(seed=0, n_gk=2, n_shards=1)
+        sh = w.shards[0]
+        a = [Stamp(0, (1, 0), 0, 1), Stamp(0, (2, 1), 0, 2),
+             Stamp(0, (3, 2), 0, 3)]
+        b = [Stamp(0, (1, 1), 1, 1), Stamp(0, (2, 2), 1, 2)]
+        mk = lambda i: [{"op": "create_vertex", "vid": f"x{i}"}]
+        sh.enqueue(0, 1, a[0], "txbatch",
+                   WriteBatch([(a[0], mk(0)), (a[1], mk(1)),
+                               (a[2], mk(2))]))
+        # gk1 queue was empty -> nothing ran yet
+        assert w.counters()["crossgk_batch_merges"] == 0
+        sh.enqueue(1, 1, b[0], "txbatch",
+                   WriteBatch([(b[0], mk(3)), (b[1], mk(4))]))
+        c = w.counters()
+        assert c["crossgk_batch_merges"] == 1
+        assert c["crossgk_merged_txs"] == 2
+        # a1, b1, a2, b2 applied; a3 requeued as the gk0 leftover
+        assert set(sh.partition.vertices) == {"x0", "x1", "x3", "x4"}
+        assert len(sh.queues[0]) == 1
+        assert sh.queues[0][0].kind == "txbatch"
+        assert [s for s, _ in sh.queues[0][0].payload.items] == [a[2]]
+        assert not sh.queues[1]
+        # the merged items acked to their ORIGIN gatekeepers' stamps
+        for s in (a[0], a[1], b[0], b[1]):
+            assert s.key() in sh._applied
+
+    def test_concurrent_foreign_head_not_merged(self):
+        """A foreign batch whose head is vector-concurrent with the
+        executing batch's items must NOT be pulled in (ordering it
+        would need the oracle — the buffer is refinement-free)."""
+        from repro.core.writepath import WriteBatch
+
+        w = make_weaver(seed=0, n_gk=2, n_shards=1)
+        sh = w.shards[0]
+        a = [Stamp(0, (1, 0), 0, 1), Stamp(0, (2, 0), 0, 2)]
+        b = [Stamp(0, (0, 1), 1, 1)]          # concurrent with both
+        mk = lambda i: [{"op": "create_vertex", "vid": f"y{i}"}]
+        sh.enqueue(0, 1, a[0], "txbatch",
+                   WriteBatch([(a[0], mk(0)), (a[1], mk(1))]))
+        sh.enqueue(1, 1, b[0], "txbatch", WriteBatch([(b[0], mk(2))]))
+        c = w.counters()
+        assert c["crossgk_batch_merges"] == 0
+        assert c["crossgk_merged_txs"] == 0
+
+    def test_end_to_end_merge_and_state_equivalence(self):
+        """Staggered interleaved cross-gk submissions with fast
+        vector-clock announcements: merges fire in the real pipeline and
+        the final state matches the per-tx (window=0) oracle.  One shard
+        so timing is independent of the per-process vid hash seed."""
+        modes = {}
+        for window in (0.0, 0.3e-3):
+            rng = np.random.default_rng(0)
+            w = make_weaver(seed=2, n_shards=1, write_group_commit=window,
+                            write_group_max=32, tau=0.05e-3,
+                            tau_nop=0.05e-3)
+            vids = [f"n{i}" for i in range(20)]
+            tx = w.begin_tx()
+            for v in vids:
+                tx.create_vertex(v)
+            assert w.run_tx(tx).ok
+            w.settle(5e-3)
+            res = []
+
+            def submit(g):
+                tx = w.begin_tx()
+                u = vids[int(rng.integers(len(vids)))]
+                v = vids[int(rng.integers(len(vids)))]
+                tx.create_edge(u, v)
+                w.submit_tx(tx, res.append, gatekeeper=g)
+
+            t = 0.0
+            for i in range(80):
+                g = i % 2
+                # gk1's arrivals lag half a window so its flushed batch
+                # interleaves (vector-ordered) with gk0's next batch
+                w.sim.schedule(t + (0.15e-3 if g else 0.0), submit, g)
+                t += 0.15e-3
+            w.settle(100e-3)
+            assert len(res) == 80 and all(r.ok for r in res)
+            modes[window] = (_fingerprint(w), w.counters())
+        (f1, c1), (f2, c2) = modes[0.0], modes[0.3e-3]
+        assert f1 == f2, "final committed state diverged"
+        assert c2["crossgk_batch_merges"] >= 1
+        assert c2["crossgk_merged_txs"] >= c2["crossgk_batch_merges"]
+        assert c1["crossgk_batch_merges"] == 0   # no batches, no merges
