@@ -24,8 +24,17 @@ Four sections (all simulated seconds; deterministic for a given seed):
   mixed        — TAO read/write mix through GraphQueryServer with
                  ``read_your_writes=True``: tx acks wait for shard
                  apply (acks_deferred > 0) and every request completes.
+  obs          — tracing overhead + purity (ISSUE 9): the same seeded
+                 mixed workload untraced twice (run-to-run noise
+                 floor) and fully traced; results and non-obs
+                 counters must be bit-identical, and the traced
+                 run's critical-path stage attribution must tile
+                 every request's e2e latency.  Smoke mode exports
+                 the trace to trace_serving_smoke.json for
+                 scripts/check_trace.py.
 
-Full mode writes BENCH_serving.json at the repo root.
+Full mode writes BENCH_serving.json and BENCH_obs.json at the repo
+root.
 """
 
 from __future__ import annotations
@@ -33,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import time
 from typing import Dict, List, Tuple
 
 import numpy as np
@@ -40,6 +50,9 @@ import numpy as np
 from repro.configs import PAPER_DEPLOYMENT
 from repro.core import Weaver
 from repro.core.gatekeeper import CostModel
+from repro.core.obs import (OBS_COUNTER_FIELDS, attribution_table,
+                            export_trace, format_stage_table,
+                            run_invariant_checks)
 from repro.data import synth
 from repro.runtime.server import GraphQueryServer
 
@@ -228,12 +241,87 @@ def mixed(seed: int) -> Dict:
     return res
 
 
+# ---- section 5: observability overhead + purity ------------------------
+
+
+def obs(seed: int) -> Dict:
+    """Tracing is pure observation: the traced run must be
+    bit-identical to the untraced one, and near-free in wall clock.
+    Two untraced runs bound the run-to-run timing noise the overhead
+    ratio is judged against."""
+    n_users = 40 if SMOKE else 120
+    n_requests = 600 if SMOKE else 4000
+    n_clients = 64 if SMOKE else 192
+
+    def run_once(rate: float):
+        w, vertices = _deploy(seed, n_users, trace_sample_rate=rate,
+                              **WINDOWED)
+        srv = GraphQueryServer(w)
+        rng = np.random.default_rng(seed + 6)
+        picks = rng.integers(0, len(vertices), size=n_requests)
+
+        def make(i, picks=picks, vertices=vertices):
+            return "prog", ("get_node", [(vertices[int(picks[i])], None)])
+
+        t0 = time.perf_counter()
+        res = srv.run_closed_loop(n_clients, n_requests, make)
+        wall = time.perf_counter() - t0
+        assert res["completed"] == n_requests, res
+        c = w.counters()
+        for f in OBS_COUNTER_FIELDS:
+            c.pop(f, None)
+        lat = tuple(np.round(res["latencies_s"], 12).tolist())
+        return w, wall, lat, c
+
+    _, wall_a, lat_a, c_a = run_once(0.0)
+    _, wall_b, lat_b, c_b = run_once(0.0)
+    # armed-but-idle: the tracer exists (every hook runs its guard +
+    # sampling stride) but records ~nothing — the disabled-overhead bar
+    _, wall_i, lat_i, c_i = run_once(1e-9)
+    w_t, wall_t, lat_t, c_t = run_once(1.0)
+
+    assert lat_a == lat_b == lat_i == lat_t, \
+        "tracing changed request latencies"
+    assert c_a == c_b == c_i == c_t, "tracing changed simulator counters"
+
+    tr = w_t.sim.tracer
+    attr = attribution_table(tr)
+    checks = run_invariant_checks(tr)
+    base = max(min(wall_a, wall_b), 1e-9)
+    noise = abs(wall_a - wall_b) / base
+    out = {
+        "n_requests": n_requests,
+        "identical": 1,
+        "wall_untraced_s": [wall_a, wall_b],
+        "wall_idle_tracer_s": wall_i,
+        "wall_traced_s": wall_t,
+        "noise_floor": noise,
+        "idle_overhead": wall_i / base - 1.0,
+        "traced_overhead": wall_t / base - 1.0,
+        "n_traces": len(tr.traces()),
+        "n_spans": len(tr.spans),
+        "attribution_max_rel_err": attr["max_rel_err"],
+        "stages_ms": attr["stages"],
+        "invariants_ok": int(all(not v for v in checks.values())),
+    }
+    assert attr["max_rel_err"] < 0.01, attr["max_rel_err"]
+    assert out["invariants_ok"], checks
+    print(format_stage_table(attr))
+    if SMOKE:
+        root = os.path.join(os.path.dirname(__file__), "..")
+        doc = export_trace(w_t.sim.tracer,
+                           os.path.join(root, "trace_serving_smoke.json"))
+        out["trace_events"] = len(doc["traceEvents"])
+    return out
+
+
 def main(seed: int = 0) -> None:
     out = {
         "saturation": saturation(seed),
         "sweep": sweep(seed),
         "equivalence": equivalence(seed),
         "mixed": mixed(seed),
+        "obs": obs(seed),
     }
     sat = out["saturation"]
     swp = out["sweep"]
@@ -247,6 +335,11 @@ def main(seed: int = 0) -> None:
     print(f"serving,goodput_flat_past_saturation,{swp['goodput_flat']:.2f}")
     print(f"serving,equivalent,{out['equivalence']['equivalent']}")
     print(f"serving,mixed_p99_ms,{out['mixed']['latency']['p99_ms']:.2f}")
+    ob = out["obs"]
+    print(f"serving,obs_identical,{ob['identical']}")
+    print(f"serving,obs_idle_overhead,{ob['idle_overhead']:.3f}")
+    print(f"serving,obs_traced_overhead,{ob['traced_overhead']:.3f}")
+    print(f"serving,obs_max_rel_err,{ob['attribution_max_rel_err']:.2e}")
 
     assert out["equivalence"]["equivalent"] == 1, \
         "windowed reads diverged from the per-program oracle"
@@ -257,10 +350,16 @@ def main(seed: int = 0) -> None:
             f"low-load p99 ratio {swp['low_load_p99_ratio']:.2f} > 1.5x bar"
         assert swp["goodput_flat"] >= 0.8, \
             f"goodput collapsed past saturation ({swp['goodput_flat']:.2f})"
+        # the 3% bar applies to tracing *disabled*; the armed-but-idle
+        # run is its measurable proxy, judged against the run-to-run
+        # noise floor of the two untraced runs
+        assert ob["idle_overhead"] <= 0.03 + 2 * ob["noise_floor"], ob
         save_result("serving", out)
         root = os.path.join(os.path.dirname(__file__), "..")
         with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
             json.dump(out, f, indent=1, default=str)
+        with open(os.path.join(root, "BENCH_obs.json"), "w") as f:
+            json.dump(ob, f, indent=1, default=str)
     else:
         save_result("serving_smoke", out)
 

@@ -25,7 +25,8 @@ import re
 import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/CONFIG.md"]
+DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/CONFIG.md",
+        "docs/OBSERVABILITY.md"]
 START, END = "<!-- BENCH:START -->", "<!-- BENCH:END -->"
 
 sys.path.insert(0, os.path.join(ROOT, "src"))

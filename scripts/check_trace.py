@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Trace-export gate (wired into scripts/ci.sh).
+
+Either validates an existing Chrome trace-event JSON file, or — with
+no argument — runs a small traced serving workload, exports the
+trace, and gates on it.  Checks, without external deps:
+
+* the document passes ``repro.core.obs.validate_trace_events``
+  (Chrome trace-event schema: ``traceEvents`` list, ``ph``/``ts``/
+  ``dur``/``pid``/``tid`` fields, non-negative µs durations);
+* it contains at least one complete (``ph: "X"``) event;
+* when generating the trace itself, the critical-path analyzer's
+  per-request stage sums match the measured end-to-end latency within
+  ``--eps`` (default 1%), and the trace-driven invariant checkers
+  (completeness, exactly-once apply, stamp monotonicity) all pass.
+
+Exit non-zero with a findings list on any failure.
+
+Usage:
+    scripts/check_trace.py [trace.json] [--eps 0.01]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def check_doc(doc: dict, errs: list) -> None:
+    from repro.core.obs import validate_trace_events
+    errs.extend(validate_trace_events(doc))
+    evs = doc.get("traceEvents", [])
+    if not any(isinstance(e, dict) and e.get("ph") == "X" for e in evs):
+        errs.append("no complete ('X') events in trace")
+
+
+def run_and_check(eps: float, errs: list) -> str:
+    """Traced smoke workload -> export -> attribution + invariants."""
+    from repro.core import Weaver, WeaverConfig
+    from repro.core.obs import (attribution_table, export_trace,
+                                format_stage_table, run_invariant_checks)
+    cfg = WeaverConfig(trace_sample_rate=1.0, write_group_commit=1e-3,
+                       read_group_commit=1e-3, adaptive_admission=True,
+                       seed=17)
+    w = Weaver(cfg)
+    for i in range(16):
+        tx = w.begin_tx()
+        tx.create_vertex(f"c{i}")
+        if i:
+            tx.create_edge(f"c{i - 1}", f"c{i}")
+        r = w.run_tx(tx)
+        if not r.ok:
+            errs.append(f"smoke tx {i} failed: {r.error}")
+    for i in range(8):
+        res = w.run_program("count_edges", [(f"c{i}", None)])
+        if res[0] is None:
+            errs.append(f"smoke program {i} returned None")
+    w.settle()
+
+    tr = w.sim.tracer
+    attr = attribution_table(tr)
+    rows = [r for r in attr["requests"] if "e2e" in r]
+    if not rows:
+        errs.append("no complete traces to attribute")
+    if attr["max_rel_err"] >= eps:
+        errs.append(f"stage sums diverge from e2e: max_rel_err "
+                    f"{attr['max_rel_err']:.2e} >= {eps}")
+    for name, findings in run_invariant_checks(tr).items():
+        for f in findings[:5]:
+            errs.append(f"invariant {name}: {f}")
+
+    out = os.path.join(ROOT, "trace_smoke.json")
+    doc = export_trace(tr, out)
+    check_doc(doc, errs)
+    print(format_stage_table(attr))
+    print(f"trace: {len(tr.traces())} traces, {len(tr.spans)} spans, "
+          f"{len(doc['traceEvents'])} events -> {out}")
+    return out
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    eps = 0.01
+    if "--eps" in argv:
+        i = argv.index("--eps")
+        eps = float(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    errs: list = []
+    if argv:
+        path = argv[0]
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"TRACE CHECK FAILED: cannot read {path}: {e}",
+                  file=sys.stderr)
+            return 1
+        check_doc(doc, errs)
+        n = len(doc.get("traceEvents", []))
+        if not errs:
+            print(f"trace check OK ({path}: {n} events)")
+    else:
+        run_and_check(eps, errs)
+        if not errs:
+            print("trace check OK (generated smoke trace)")
+    if errs:
+        print("TRACE CHECK FAILED:", file=sys.stderr)
+        for e in errs:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,8 +4,12 @@
 # serving — coordination covers the tau sweep's aggressive-concurrency
 # corner, the historical oracle CycleError; nodeprog's smoke includes
 # the ragged get_edges/clustering section; serving asserts the windowed
-# read-admission equivalence bit and exercises the shed/retry sweep at
-# smoke sizes), then the docs consistency check
+# read-admission equivalence bit, exercises the shed/retry sweep at
+# smoke sizes, and exports a causal trace from its obs section), then
+# the trace gate (Chrome trace-event schema on the exported smoke
+# trace, plus a generated traced run asserting critical-path stage
+# sums tile each request's e2e latency within 1% and the trace-driven
+# protocol invariants hold), then the docs consistency check
 # (README/docs exist, links + WeaverConfig/Counters/module references
 # resolve, README results table matches the checked-in BENCH files).
 # Exits non-zero on ANY failure (pytest failure, benchmark exception,
@@ -30,6 +34,13 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 
 echo "=== benchmarks (smoke) ==="
 python -m benchmarks.run --smoke
+
+echo "=== trace check ==="
+# schema-validate the trace the serving smoke run exported, then run
+# the generated-trace gate (attribution tiling + invariant checkers)
+python scripts/check_trace.py trace_serving_smoke.json
+python scripts/check_trace.py
+rm -f trace_serving_smoke.json trace_smoke.json
 
 echo "=== docs check ==="
 python scripts/check_docs.py

@@ -146,6 +146,69 @@ def ragged_offsets(lens: np.ndarray) -> np.ndarray:
                            np.cumsum(np.asarray(lens, np.int64))])
 
 
+def blank_ragged_rows(rg: Ragged, mask: np.ndarray) -> Ragged:
+    """Ship rows the receiver already caches as zero-length MARKERS:
+    keys stay (the receiver reconstitutes by key), values and aligned
+    ``extra`` positions drop — the wire dedup for per-row side tables
+    (clustering phase 1 ships each origin's packed neighbour list once
+    per destination shard).  ``mask`` is a per-row boolean: True rows
+    are blanked."""
+    keep = ~np.asarray(mask, bool)
+    ln = rg.lens() * keep
+    off = ragged_offsets(ln)
+    total = int(off[-1])
+    if total:
+        pos = (np.arange(total, dtype=np.int64)
+               - np.repeat(off[:-1], ln) + np.repeat(rg.offsets[:-1], ln))
+    else:
+        pos = np.zeros(0, np.int64)
+    return Ragged(offsets=off, values=rg.values[pos], keys=rg.keys,
+                  extra={k: v[pos] for k, v in rg.extra.items()})
+
+
+def fill_ragged_rows(rg: Ragged, lookup: dict) -> Tuple[Ragged, int]:
+    """Receiver-side inverse of :func:`blank_ragged_rows`: zero-length
+    rows whose key is in ``lookup`` (key -> ``(values, extra_dict)``)
+    get their packed payload re-inserted.  Returns the filled ragged
+    and the number of reconstituted rows (0 leaves ``rg`` untouched —
+    legitimately empty keyed rows without a cache entry pass through)."""
+    if rg.keys is None or len(rg) == 0:
+        return rg, 0
+    ln = rg.lens()
+    fills = {}
+    for i in np.nonzero(ln == 0)[0].tolist():
+        hit = lookup.get(int(rg.keys[i]))
+        if hit is not None:
+            fills[i] = hit
+    if not fills:
+        return rg, 0
+    vals: List[np.ndarray] = []
+    extras: Dict[str, List[np.ndarray]] = {k: [] for k in rg.extra}
+    new_ln = ln.copy()
+    for i in range(len(rg)):
+        hit = fills.get(i)
+        if hit is not None:
+            v, ex = hit
+            vals.append(v)
+            new_ln[i] = v.size
+            for k in extras:
+                extras[k].append(ex[k])
+        else:
+            sl = slice(int(rg.offsets[i]), int(rg.offsets[i + 1]))
+            vals.append(rg.values[sl])
+            for k in extras:
+                extras[k].append(rg.extra[k][sl])
+    filled = Ragged(
+        offsets=ragged_offsets(new_ln),
+        values=(np.concatenate(vals).astype(np.int64) if vals
+                else np.zeros(0, np.int64)),
+        keys=rg.keys,
+        extra={k: (np.concatenate(v).astype(np.int64) if v
+                   else np.zeros(0, np.int64))
+               for k, v in extras.items()})
+    return filled, len(fills)
+
+
 class RaggedReply:
     """Ragged per-entry program OUTPUT: every delivered entry's full edge
     list (ids + endpoints + optional property columns) from ONE batched

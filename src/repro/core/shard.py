@@ -75,13 +75,16 @@ from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from .clock import Order, Stamp, compare
 from .frontier import (Frontier, RaggedReply, ShardPlan, _merge_frontiers,
-                       execute_step, maintain_plan, reply_nbytes,
-                       route_frontier)
+                       blank_ragged_rows, execute_step, fill_ragged_rows,
+                       maintain_plan, reply_nbytes, route_frontier)
 from .gatekeeper import CostModel
 from .mvgraph import MVGraphPartition, VidIntern
 from .nodeprog import REGISTRY, run_entries_scalar
+from .obs import stamp_attr
 from .oracle import KIND_PROG, KIND_TX, OracleServer
 from .simulation import Simulator
 from .writepath import WriteBatch
@@ -92,6 +95,7 @@ class _QueueItem:
     stamp: Stamp
     kind: str          # "tx" | "nop"
     payload: Optional[List[dict]]
+    t: float = 0.0     # arrival time (queue-wait span attribution)
 
 
 class Shard:
@@ -104,11 +108,18 @@ class Shard:
                  coalesce: bool = True,
                  plan_cache_entries: int = 4,
                  ack_applies: bool = False,
-                 device_plane=None):
+                 device_plane=None,
+                 incarnation: int = 0):
         self.sim = sim
         sim.register(self)
         self.sid = sid
         self.name = f"shard{sid}"        # fault-injection crash-point id
+        # bumped per backup promotion: the exactly-once trace invariant
+        # allows one apply span per (shard, incarnation), and the wire-
+        # dedup sender keys shipped rows by receiver incarnation so a
+        # promoted (empty-cache) receiver never gets a blanked marker
+        # for a row it lacks
+        self.incarnation = incarnation
         self.n_gk = n_gk
         self.oracle = oracle
         self.cost = cost
@@ -155,6 +166,14 @@ class Shard:
         # device-sharded column plane (repro.dist.columns): plan builds
         # evaluate visibility from device-resident blocks when set
         self.device_plane = device_plane
+        # clustering phase-1 wire dedup (ISSUE 9 satellite): sender-side
+        # shipped-row sets keyed (dst sid, dst incarnation, prog name,
+        # stamp key) and receiver-side full-row cache keyed (prog name,
+        # stamp key) -> {row key: (values, extra)}.  FIFO channels
+        # guarantee a full row always precedes its blanked marker.
+        self._shipped_rows: Dict[Tuple, set] = {}
+        self._nbr_cache: Dict[Tuple, Dict] = {}
+        self._last_plan_kind = "scalar"  # span attr: plan path per exec
 
     def start(self, peers: List["Shard"]) -> None:
         self.peers = peers
@@ -178,18 +197,19 @@ class Shard:
             return
         exp = self._expected_seq[gid]
         if seq == exp + 1:
-            self.queues[gid].append(_QueueItem(stamp, kind, payload))
+            self.queues[gid].append(_QueueItem(stamp, kind, payload,
+                                               self.sim.now))
             self._expected_seq[gid] = seq
             # drain stash
             stash = self._stash[gid]
             nxt = seq + 1
             while nxt in stash:
-                s, k, p = stash.pop(nxt)
-                self.queues[gid].append(_QueueItem(s, k, p))
+                s, k, p, t = stash.pop(nxt)
+                self.queues[gid].append(_QueueItem(s, k, p, t))
                 self._expected_seq[gid] = nxt
                 nxt += 1
         elif seq > exp + 1:
-            self._stash[gid][seq] = (stamp, kind, payload)
+            self._stash[gid][seq] = (stamp, kind, payload, self.sim.now)
         # duplicate/old -> drop
         self._kick()
 
@@ -201,9 +221,11 @@ class Shard:
             self.sim.send(self, coordinator, coordinator.report, prog_id,
                           delivery_id, [], [], nbytes=32)
             return
+        entries = self._reconstitute(name, stamp, entries)
         self.pending_progs.append({
             "prog_id": prog_id, "delivery_id": delivery_id, "name": name,
             "stamp": stamp, "entries": entries, "coordinator": coordinator,
+            "t": self.sim.now,
             # queue-clearing state is PER PROGRAM per shard (monotone:
             # once every queue head dominated T_prog, all later arrivals
             # do too) — so follow-up deliveries of the same program run
@@ -229,8 +251,10 @@ class Shard:
                 continue
             self.pending_progs.append({
                 "prog_id": prog_id, "delivery_id": delivery_id, "name": name,
-                "stamp": stamp, "entries": entries,
+                "stamp": stamp,
+                "entries": self._reconstitute(name, stamp, entries),
                 "coordinator": coordinator,
+                "t": self.sim.now,
                 "cleared": self._prog_cleared.setdefault(stamp.key(), set()),
             })
         self._kick()
@@ -243,6 +267,57 @@ class Shard:
             self._prog_cleared.clear()
         if len(self._finished_progs) > 100_000:
             self._finished_progs.clear()
+
+    # ---------------------------------------------- ragged wire dedup
+    def _reconstitute(self, name: str, stamp: Stamp, entries):
+        """Receiver half of the neighbour-list wire dedup: fill blanked
+        marker rows from this shard's (prog, stamp)-keyed cache, then
+        remember every full row for future markers.  A row's payload is
+        a pure function of (prog, stamp, row key), so cross-sender cache
+        hits are sound."""
+        if not isinstance(entries, Frontier) or entries.ragged is None \
+                or entries.ragged.keys is None:
+            return entries
+        cache = self._nbr_cache.setdefault((name, stamp.key()), {})
+        rg, n = fill_ragged_rows(entries.ragged, cache)
+        if n:
+            self.sim.counters.nbr_rows_cached += n
+            entries.ragged = rg
+        ln = rg.lens()
+        for i in np.nonzero(ln > 0)[0].tolist():
+            k = int(rg.keys[i])
+            if k not in cache:
+                sl = slice(int(rg.offsets[i]), int(rg.offsets[i + 1]))
+                cache[k] = (rg.values[sl].copy(),
+                            {c: v[sl].copy()
+                             for c, v in rg.extra.items()})
+        return entries
+
+    def _dedup_ship(self, fr: Frontier, sid: int, target,
+                    name: str, stamp: Stamp) -> Frontier:
+        """Sender half: rows already shipped to this (shard,
+        incarnation) under this (prog, stamp) go out as zero-length
+        markers (keys kept); the FIFO channel guarantees the earlier
+        full row arrives first, and a promoted receiver's fresh
+        incarnation never matches old shipped sets."""
+        rg = fr.ragged
+        if rg is None or rg.keys is None or len(rg) == 0:
+            return fr
+        shipped = self._shipped_rows.setdefault(
+            (sid, getattr(target, "incarnation", 0), name, stamp.key()),
+            set())
+        ln = rg.lens()
+        mask = np.zeros(len(rg), bool)
+        for i, k in enumerate(rg.keys.tolist()):
+            if ln[i] == 0:
+                continue
+            if k in shipped:
+                mask[i] = True
+            else:
+                shipped.add(k)
+        if mask.any():
+            fr.ragged = blank_ragged_rows(rg, mask)
+        return fr
 
     # ------------------------------------------------------------------ ordering
     def _order(self, a: Stamp, b: Stamp, kind_a: int, kind_b: int) -> Order:
@@ -334,6 +409,25 @@ class Shard:
                 prog["prog_id"], prog["delivery_id"], prog["name"],
                 prog["stamp"], prog["entries"], prog["coordinator"],
                 extra_ids=extra)
+            tr = self.sim.tracer
+            if tr is not None:
+                ctx = tr.ctx_for_prog(prog["prog_id"])
+                if ctx is not None:
+                    now = self.sim.now
+                    st = stamp_attr(prog["stamp"])
+                    tr.span("shard_queue", prog.get("t", now), now,
+                            actor=self.name, ctx=ctx, shard=self.sid,
+                            stamp=st)
+                    t = now
+                    if self._stall > 0:
+                        tr.span("oracle_refine", t, t + self._stall,
+                                actor=self.name, ctx=ctx, stamp=st)
+                        t += self._stall
+                    e = prog["entries"]
+                    tr.span("frontier_hop", t, t + service,
+                            actor=self.name, ctx=ctx, shard=self.sid,
+                            stamp=st, plan=self._last_plan_kind,
+                            depth=getattr(e, "depth", 0), entries=len(e))
             self._finish_after(service + self._stall)
             return
         # 2) transactions: need every queue non-empty (Fig. 6)
@@ -430,8 +524,14 @@ class Shard:
             return 0.0                   # died mid-drain; recovery replays
         ops = item.payload or []
         ts = item.stamp
+        tr = self.sim.tracer
+        ctx = tr.ctx_for_stamp(ts) if tr is not None else None
         if ts.key() in self._applied:    # re-forwarded after a recovery
             self.sim.counters.shard_dedup_skips += 1
+            if ctx is not None:
+                tr.span("shard_dedup", self.sim.now, self.sim.now,
+                        actor=self.name, ctx=ctx, shard=self.sid,
+                        stamp=stamp_attr(ts))
             self._ack_applied(gid, [ts])
             return 0.2e-6
         for op in ops:
@@ -440,7 +540,17 @@ class Shard:
         self._applied[ts.key()] = ts
         self._applied_at[ts.key()] = self.sim.now
         self._ack_applied(gid, [ts])
-        return self.cost.shard_op * max(1, len(ops))
+        service = self.cost.shard_op * max(1, len(ops))
+        if ctx is not None:
+            now = self.sim.now
+            st = stamp_attr(ts)
+            tr.span("shard_queue", item.t, now, actor=self.name, ctx=ctx,
+                    shard=self.sid, stamp=st)
+            # oracle stall from head ordering precedes the apply work
+            tr.span("shard_apply", now + self._stall,
+                    now + self._stall + service, actor=self.name, ctx=ctx,
+                    shard=self.sid, incarnation=self.incarnation, stamp=st)
+        return service
 
     def _exec_batch_prefix(self, g: int) -> float:
         """Apply the safe prefix of the ``txbatch`` at queue ``g``'s head
@@ -503,12 +613,14 @@ class Shard:
             return 0.0
         fixed_bounds = [p["stamp"] for p in self.pending_progs]
         streams: Dict[int, List[Tuple[Stamp, List[dict]]]] = {g: items}
+        arr: Dict[int, float] = {g: item.t}   # queue arrival per stream
         for h in range(self.n_gk):
             if h == g or not self.queues[h]:
                 continue
             head = self.queues[h][0]
             if head.kind == "txbatch":
                 streams[h] = head.payload.items
+                arr[h] = head.t
             else:
                 fixed_bounds.append(head.stamp)
         ci = {h: 0 for h in streams}     # consumed-prefix cursor per stream
@@ -554,7 +666,32 @@ class Shard:
         if n_merged:
             self.sim.counters.crossgk_batch_merges += 1
             self.sim.counters.crossgk_merged_txs += n_merged
+        pre_applied = {s.key() for s, _ in consumed
+                       if s.key() in self._applied}
         n_ops = self._apply_deduped(consumed)
+        tr = self.sim.tracer
+        if tr is not None:
+            now = self.sim.now
+            t = now + self._stall        # head-ordering stall, then apply
+            for (s, ops), h in zip(consumed, origin):
+                ctx = tr.ctx_for_stamp(s)
+                if s.key() in pre_applied:
+                    if ctx is not None:
+                        tr.span("shard_dedup", now, now, actor=self.name,
+                                ctx=ctx, shard=self.sid,
+                                stamp=stamp_attr(s))
+                    continue
+                dt = self.cost.shard_op * max(1, len(ops))
+                if ctx is not None:
+                    st = stamp_attr(s)
+                    tr.span("shard_queue", arr.get(h, now), now,
+                            actor=self.name, ctx=ctx, shard=self.sid,
+                            stamp=st)
+                    tr.span("shard_apply", t, t + dt, actor=self.name,
+                            ctx=ctx, shard=self.sid,
+                            incarnation=self.incarnation, stamp=st,
+                            batched=True)
+                t += dt
         by_origin: Dict[int, List[Stamp]] = {}
         for (s, _), h in zip(consumed, origin):
             by_origin.setdefault(h, []).append(s)
@@ -668,6 +805,7 @@ class Shard:
             lambda ss, at=stamp: self._refine_batch(ss, at),
             allow_delta=self.plan_delta,
             device_plane=self.device_plane)
+        self._last_plan_kind = kind or "reuse"
         if kind == "delta":
             ctr.plan_delta_refreshes += 1
             ctr.plan_rows_refreshed += plan.last_refresh_rows
@@ -802,6 +940,7 @@ class Shard:
         states = self.prog_states.setdefault(prog_id, {})
         frontier = self._frontier_of(name, entries)
         children = []
+        self._last_plan_kind = "scalar"  # _frontier_plan overwrites
         if frontier is not None:
             # ---- batched path: one vectorized step over the shard plan
             plan = self._frontier_plan(stamp)
@@ -824,6 +963,8 @@ class Shard:
                     child_id = (self.sid, self._next_delivery())
                     children.append(child_id)
                     target = self.peers[sid]
+                    out_fr = self._dedup_ship(out_fr, sid, target, name,
+                                              stamp)
                     self.sim.send(self, target, target.deliver_prog,
                                   prog_id, child_id, name, stamp, out_fr,
                                   coordinator, nbytes=out_fr.nbytes())
@@ -889,6 +1030,17 @@ class Shard:
         for k in drop:
             del self._applied[k]
             self._applied_at.pop(k, None)
+        # wire-dedup caches: a stamp strictly before the horizon has no
+        # outstanding program (the horizon is bounded by active stamps),
+        # so its shipped sets / cached rows can never be referenced again
+        for k in [k for k in self._shipped_rows
+                  if compare(Stamp(k[3][0], k[3][1], k[3][2], 0),
+                             horizon) is Order.BEFORE]:
+            del self._shipped_rows[k]
+        for k in [k for k in self._nbr_cache
+                  if compare(Stamp(k[1][0], k[1][1], k[1][2], 0),
+                             horizon) is Order.BEFORE]:
+            del self._nbr_cache[k]
         return self.partition.collect(horizon)
 
     def recover_from(self, ops: List[dict]) -> None:
@@ -907,6 +1059,20 @@ class Shard:
             self.partition.apply_op(op, ts)
             self._applied[ts.key()] = ts
             self._applied_at[ts.key()] = self.sim.now
+        tr = self.sim.tracer
+        if tr is not None:
+            # zero-width recovered-apply spans: the exactly-once checker
+            # counts them toward shard coverage but exempts them from
+            # the one-per-incarnation rule (replay is re-application by
+            # design, not a double-apply bug)
+            now = self.sim.now
+            for ts in self._applied.values():
+                ctx = tr.ctx_for_stamp(ts)
+                if ctx is not None:
+                    tr.span("shard_apply", now, now, actor=self.name,
+                            ctx=ctx, shard=self.sid,
+                            incarnation=self.incarnation, recovered=True,
+                            stamp=stamp_attr(ts))
 
     def enter_epoch(self, epoch: int) -> None:
         """Cluster-manager barrier: fresh FIFO channels in the new epoch."""

@@ -8,8 +8,11 @@ parameterized network model.  All benchmark numbers derived from it are in
 
 Design notes
 ------------
-* Events are ``(time, seq, fn, args)`` in a heap; ``seq`` breaks ties so
-  ordering never depends on callback identity.
+* Events are ``(time, seq, fn, args, ctx)`` in a heap; ``seq`` breaks ties
+  so ordering never depends on callback identity.  ``ctx`` is the trace
+  context captured at the scheduling site (None when tracing is off) and
+  restored as the tracer's ambient context around the callback — causal
+  span parentage flows with events at zero cost to event ordering.
 * ``NetworkModel`` charges per-message latency = base + size/bandwidth +
   jitter drawn from a seeded RNG.  Channels between a fixed (src, dst)
   pair are FIFO: the simulator enforces in-order delivery per channel by
@@ -24,7 +27,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import numpy as np
@@ -142,14 +145,25 @@ class Counters:
     #                                bulk apply
     crossgk_merged_txs: int = 0    # foreign-queue txs applied by those
     #                                merges
-    admission_window_hist: dict = field(default_factory=dict)
-    #                                effective admission-window length at
-    #                                flush, power-of-two us buckets keyed
-    #                                "r:<bucket>us" / "w:<bucket>us"
-    admission_depth_hist: dict = field(default_factory=dict)
-    #                                admission batch size at flush,
-    #                                power-of-two buckets keyed
-    #                                "r:<bucket>" / "w:<bucket>"
+    #                              (the admission window / batch-depth
+    #                               histograms formerly kept here as
+    #                               dict fields now live in the metrics
+    #                               registry: sim.metrics histograms
+    #                               "admission_window_us" and
+    #                               "admission_depth")
+    window_grows_shared: int = 0   # AdaptiveWindow growth steps
+    #                                triggered ONLY by the shared
+    #                                deployment load signal (local
+    #                                backlog idle, a peer saturated)
+    read_windows_aliased: int = 0  # read windows that reused the
+    #                                previous window's stamp because
+    #                                the LastUpdateTable mutation seqno
+    #                                did not move (plans/caches shared)
+    nbr_rows_cached: int = 0       # clustering phase-1 origin rows
+    #                                shipped as cache markers instead of
+    #                                re-sending the packed values
+    spans_recorded: int = 0        # [obs] trace spans recorded
+    metrics_samples: int = 0       # [obs] metrics timeline rows sampled
 
     def snapshot(self) -> dict:
         return {k: (dict(v) if isinstance(v, dict) else v)
@@ -169,6 +183,11 @@ class Simulator:
         # optional repro.core.faultinject.FaultInjector; consulted by
         # send() for message faults and by actors at named crash points
         self.fault = None
+        # optional repro.core.obs.Tracer (None == tracing disabled; every
+        # hook site guards on this) and the always-on metrics registry
+        self.tracer = None
+        from repro.core.obs import MetricsRegistry
+        self.metrics = MetricsRegistry()
         # FIFO enforcement: last scheduled delivery time per (src_id, dst_id)
         self._channel_clock: dict[tuple[int, int], float] = {}
         self._actor_ids = itertools.count()
@@ -181,8 +200,14 @@ class Simulator:
         return aid
 
     # ---- scheduling ----------------------------------------------------
+    def _ctx(self):
+        """Ambient trace context to attach to a new event (None when
+        tracing is off or the current event is untraced)."""
+        return self.tracer.current if self.tracer is not None else None
+
     def schedule(self, delay: float, fn: Callable, *args) -> None:
-        heapq.heappush(self._heap, (self.now + delay, next(self._seq), fn, args))
+        heapq.heappush(self._heap, (self.now + delay, next(self._seq),
+                                    fn, args, self._ctx()))
 
     def send(self, src: Any, dst: Any, fn: Callable, *args, nbytes: int = 256,
              local: bool = False) -> None:
@@ -207,7 +232,8 @@ class Simulator:
                 self.counters.msgs_duplicated += 1
                 d2 = self.network.delay(nbytes, self.rng, local=local)
                 heapq.heappush(self._heap,
-                               (self.now + d2, next(self._seq), fn, args))
+                               (self.now + d2, next(self._seq), fn, args,
+                                self._ctx()))
             elif verdict == "delay":
                 self.counters.msgs_delayed += 1
         d = self.network.delay(nbytes, self.rng, local=local) + extra
@@ -217,7 +243,8 @@ class Simulator:
         if t < prev:
             t = prev + 1e-9
         self._channel_clock[key] = t
-        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args,
+                                    self._ctx()))
 
     def call_after(self, delay: float, fn: Callable, *args) -> None:
         self.schedule(delay, fn, *args)
@@ -227,13 +254,20 @@ class Simulator:
         self._stopped = False
         n = 0
         while self._heap and not self._stopped:
-            t, _, fn, args = self._heap[0]
+            t, _, fn, args, ctx = self._heap[0]
             if until is not None and t > until:
                 self.now = until
                 return
             heapq.heappop(self._heap)
             self.now = t
-            fn(*args)
+            if self.tracer is not None:
+                self.tracer.current = ctx
+                try:
+                    fn(*args)
+                finally:
+                    self.tracer.current = None
+            else:
+                fn(*args)
             n += 1
             if n >= max_events:
                 raise RuntimeError(f"simulation exceeded {max_events} events")

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import json
 import os
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -103,8 +104,11 @@ class BackingStore:
     # ---- directory -------------------------------------------------------
     def place(self, vid: str) -> int:
         """Static placement hash; dynamic migration (§4.6) is out of scope
-        for the evaluation (the paper disables it too)."""
-        return hash(vid) % self.n_shards
+        for the evaluation (the paper disables it too).  crc32, not
+        ``hash()``: placement must be identical across processes (Python
+        randomizes str hashing per process) or traces and counters from
+        the same seeded workload would not be comparable run-to-run."""
+        return zlib.crc32(vid.encode()) % self.n_shards
 
     def shard_of(self, vid: str) -> Optional[int]:
         v = self.vertices.get(vid)
@@ -171,11 +175,26 @@ class BackingStore:
         if entries:
             self.wal.append(WalRecord("group", entries, valid=valid))
             self.sim.counters.wal_records += 1
+            for ts, _txid, _fwd in entries[:valid]:
+                self._wal_span(ts, group=True)
         # durability point: the group record is on the log, so the
         # outcomes become answerable to resubmissions exactly now
         for ts, txid, fwd in entries[:valid]:
             self.record_result(txid, True, None, ts, fwd)
         return out
+
+    def _wal_span(self, ts: Stamp, group: bool) -> None:
+        """Zero-width durability marker on a sampled trace: the instant
+        this stamp's redo record hit the log (stage ``wal_append``)."""
+        tr = self.sim.tracer
+        if tr is None:
+            return
+        ctx = tr.ctx_for_stamp(ts)
+        if ctx is not None:
+            from .obs import stamp_attr
+            tr.span("wal_append", self.sim.now, self.sim.now,
+                    actor="store", ctx=ctx, group=group,
+                    stamp=stamp_attr(ts))
 
     def _torn_fwd(self, ops: List[dict], ts: Stamp) -> List[Tuple[int, dict]]:
         """Best-effort forward list for a half-written (never applied)
@@ -362,6 +381,7 @@ class BackingStore:
             if fwd:
                 self.wal.append(WalRecord("tx", [(ts, txid, fwd)], valid=1))
                 self.sim.counters.wal_records += 1
+                self._wal_span(ts, group=False)
             self.record_result(txid, True, None, ts, fwd)
         return fwd
 

@@ -213,6 +213,26 @@ class WeaverConfig:
     #                                     launch (host-global numpy stays
     #                                     the default equivalence oracle
     #                                     on CPU)
+    trace_sample_rate: float = 0.0  # head-based causal-trace sampling:
+    #                                 every round(1/rate)-th client request
+    #                                 records a span tree (0 = tracing off,
+    #                                 zero overhead; see repro.core.obs)
+    metrics_period: float = 0.0  # metrics-timeline sampling cadence in
+    #                              simulated seconds (0 = no timeline; the
+    #                              sampler adds heap events, so equivalence
+    #                              comparisons must hold it constant)
+    shared_load_signal: bool = False  # AIMD admission windows read the
+    #                                   deployment-level gk_load gauges: a
+    #                                   saturated peer holds this server's
+    #                                   window OPEN so traffic re-routed
+    #                                   off the hot gatekeeper is absorbed
+    #                                   instead of shed (closes the
+    #                                   "load-blind" AIMD gap)
+    read_window_alias: bool = True  # alias a read window onto the previous
+    #                                 window's stamp when the store interval
+    #                                 is unchanged (LastUpdateTable.mutations
+    #                                 seqno): shard plan/refinement caches
+    #                                 hit warm across windows
     fault_plan: Optional[object] = None  # repro.core.faultinject.FaultPlan
     #                                      (None = no fault injection)
     seed: int = 0
@@ -225,6 +245,9 @@ class Weaver:
     def __init__(self, cfg: WeaverConfig = WeaverConfig()):
         self.cfg = cfg
         self.sim = Simulator(seed=cfg.seed, network=cfg.network)
+        if cfg.trace_sample_rate > 0:
+            from .obs import Tracer
+            self.sim.tracer = Tracer(self.sim, cfg.trace_sample_rate)
         if cfg.fault_plan is not None:
             self.sim.fault = FaultInjector(cfg.fault_plan, self.sim)
         self.intern = VidIntern()       # deployment-wide vid interning
@@ -247,7 +270,9 @@ class Weaver:
                        adaptive=cfg.adaptive_admission,
                        admission_limit=cfg.admission_queue_limit,
                        ack_on_apply=cfg.read_your_writes,
-                       nack_shed=cfg.shed_nack)
+                       nack_shed=cfg.shed_nack,
+                       shared_load_signal=cfg.shared_load_signal,
+                       read_window_alias=cfg.read_window_alias)
             for g in range(cfg.n_gatekeepers)
         ]
         self.shards: List[Shard] = [
@@ -289,8 +314,11 @@ class Weaver:
         self._client_rng = np.random.default_rng((cfg.seed << 8) ^ 0xC11E47)
         self._rr = itertools.count()
         self._outstanding_progs: Dict[int, Stamp] = {}
+        self._incarnations: Dict[str, int] = {}
         if cfg.gc_period > 0:
             PeriodicTimer(self.sim, cfg.gc_period, self._gc)
+        if cfg.metrics_period > 0:
+            PeriodicTimer(self.sim, cfg.metrics_period, self._sample_metrics)
 
     # ---- client API -----------------------------------------------------
     def begin_tx(self) -> Transaction:
@@ -325,6 +353,8 @@ class Weaver:
         pref = (next(self._rr) if gatekeeper is None else gatekeeper)
         t0 = self.sim.now
         st = {"done": False, "attempt": 0, "nack": None}
+        tr = self.sim.tracer
+        ctx = tr.maybe_start() if tr is not None else None
 
         def reply(ok: bool, err: Optional[str], stamp: Stamp) -> None:
             if st["done"]:
@@ -339,6 +369,10 @@ class Weaver:
                     nk()
                 return
             st["done"] = True
+            if ctx is not None:
+                tr.root_span(ctx, "request", t0, self.sim.now,
+                             actor="client", kind="tx", ok=ok,
+                             retries=st["attempt"] - 1)
             callback(TxResult(ok=ok, stamp=stamp, error=err,
                               retries=st["attempt"] - 1,
                               latency=self.sim.now - t0))
@@ -369,6 +403,10 @@ class Weaver:
             if k > self.cfg.client_retry_budget:
                 self.sim.counters.client_gaveup += 1
                 st["done"] = True
+                if ctx is not None:
+                    tr.root_span(ctx, "request", t0, self.sim.now,
+                                 actor="client", kind="tx", ok=False,
+                                 retries=k - 1, gaveup=True)
                 callback(TxResult(ok=False,
                                   error="client retry budget exhausted",
                                   retries=k - 1, latency=self.sim.now - t0))
@@ -382,7 +420,18 @@ class Weaver:
             backoff *= 1.0 + 0.25 * float(self._client_rng.random())
             self.sim.schedule(backoff, attempt)
 
-        attempt()
+        if tr is not None:
+            # seed the ambient trace context for the first attempt: every
+            # downstream send/schedule inherits it through the heap, so
+            # retries, NACK re-routes and store legs stay on this trace
+            prev = tr.current
+            tr.current = ctx
+            try:
+                attempt()
+            finally:
+                tr.current = prev
+        else:
+            attempt()
 
     def submit_program(self, name: str, entries: List[Tuple[str, object]],
                        callback: Callable, gatekeeper: Optional[int] = None) -> int:
@@ -400,6 +449,8 @@ class Weaver:
         the legacy fire-and-wait behavior."""
         assert name in REGISTRY, f"unknown node program {name}"
         base = self.cfg.read_retry_timeout
+        tr = self.sim.tracer
+        ctx = tr.maybe_start() if tr is not None else None
         if base <= 0:
             pid = next(self._prog_ids)
             g = (next(self._rr) % len(self.gatekeepers)
@@ -408,9 +459,29 @@ class Weaver:
             if not gk.alive:
                 g = (g + 1) % len(self.gatekeepers)
                 gk = self.gatekeepers[g]
-            self.coordinator.on_complete[pid] = callback
-            self.sim.send(self, gk, gk.submit_program, self.coordinator, name,
-                          entries, pid, nbytes=64 + 48 * len(entries))
+            if ctx is not None:
+                t0 = self.sim.now
+
+                def _cb(r, s, l, _cb=callback) -> None:
+                    tr.root_span(ctx, "request", t0, self.sim.now,
+                                 actor="client", kind="prog",
+                                 ok=r is not None)
+                    _cb(r, s, l)
+
+                self.coordinator.on_complete[pid] = _cb
+                prev = tr.current
+                tr.current = ctx
+                try:
+                    self.sim.send(self, gk, gk.submit_program,
+                                  self.coordinator, name, entries, pid,
+                                  nbytes=64 + 48 * len(entries))
+                finally:
+                    tr.current = prev
+            else:
+                self.coordinator.on_complete[pid] = callback
+                self.sim.send(self, gk, gk.submit_program, self.coordinator,
+                              name, entries, pid,
+                              nbytes=64 + 48 * len(entries))
             return pid
 
         pref = (next(self._rr) if gatekeeper is None else gatekeeper)
@@ -424,6 +495,11 @@ class Weaver:
             for pid in st["pids"]:
                 if pid != pid_done:
                     self.coordinator.abandon(pid)
+            if ctx is not None:
+                tr.root_span(ctx, "request", t0, self.sim.now,
+                             actor="client", kind="prog",
+                             ok=result is not None,
+                             retries=st["attempt"] - 1)
             callback(result, stamp, self.sim.now - t0)
 
         def send(k: int, j: int) -> None:
@@ -468,11 +544,39 @@ class Weaver:
             backoff *= 1.0 + 0.25 * float(self._client_rng.random())
             self.sim.schedule(backoff, attempt)
 
-        attempt()
+        if tr is not None:
+            prev = tr.current
+            tr.current = ctx
+            try:
+                attempt()
+            finally:
+                tr.current = prev
+        else:
+            attempt()
         return st["pids"][0]
 
     def _prog_finished(self, prog_id: int) -> None:
         self._outstanding_progs.pop(prog_id, None)
+
+    # ---- metrics timeline (repro.core.obs) --------------------------------
+    def _sample_metrics(self) -> None:
+        """One metrics-timeline row on simulated time: queue depths,
+        admission windows, backlog and in-flight programs across the
+        whole deployment (``metrics_period`` knob)."""
+        m = self.sim.metrics
+        now = self.sim.now
+        for gk in self.gatekeepers:
+            if gk.alive:
+                m.gauge(f"gk_admitted:{gk.gid}", float(gk._admitted), now)
+                m.gauge(f"gk_backlog:{gk.gid}",
+                        max(0.0, gk._busy_until - now), now)
+        for sh in self.shards:
+            if sh.alive:
+                depth = (sum(len(q) for q in sh.queues.values())
+                         + len(sh.pending_progs))
+                m.gauge(f"shard_queue:{sh.sid}", float(depth), now)
+        m.sample(now, {"progs_in_flight": len(self.coordinator.active)})
+        self.sim.counters.metrics_samples += 1
 
     # ---- synchronous conveniences (drive the simulator) --------------------
     def run_tx(self, tx: Transaction, timeout: float = 5.0) -> TxResult:
@@ -533,6 +637,8 @@ class Weaver:
             sid = int(name[len("shard"):])
             old = self.shards[sid]
             old.stop()
+            inc = self._incarnations.get(name, 0) + 1
+            self._incarnations[name] = inc
             nu = Shard(self.sim, sid, self.cfg.n_gatekeepers, self.oracle,
                        self.cfg.cost, self.store.shard_of, intern=self.intern,
                        use_frontier=self.cfg.frontier_progs,
@@ -540,7 +646,8 @@ class Weaver:
                        coalesce=self.cfg.frontier_coalesce,
                        plan_cache_entries=self.cfg.plan_cache_entries,
                        ack_applies=self.cfg.read_your_writes,
-                       device_plane=self.device_plane)
+                       device_plane=self.device_plane,
+                       incarnation=inc)
             nu.recover_from(self.store.recover_shard(
                 sid, use_wal=self.cfg.wal_replay))
             nu.gatekeepers = self.gatekeepers
@@ -568,7 +675,9 @@ class Weaver:
                             adaptive=self.cfg.adaptive_admission,
                             admission_limit=self.cfg.admission_queue_limit,
                             ack_on_apply=self.cfg.read_your_writes,
-                            nack_shed=self.cfg.shed_nack)
+                            nack_shed=self.cfg.shed_nack,
+                            shared_load_signal=self.cfg.shared_load_signal,
+                            read_window_alias=self.cfg.read_window_alias)
             self.gatekeepers[gid] = nu
             nu.start(self.gatekeepers, self.shards)
             # refresh surviving gatekeepers' peer lists (no new timers)

@@ -1,0 +1,277 @@
+"""Deployment-wide observability (ISSUE 9): causal spans, metrics
+timeline, critical-path attribution, trace invariants, and the two
+ride-along optimisations (shared AIMD load signal, read-window
+aliasing + clustering wire dedup).
+
+The load-bearing property throughout: tracing is *pure observation*.
+A traced run and an untraced run of the same seeded workload must be
+bit-identical in results and in every counter except the obs tallies
+themselves (``OBS_COUNTER_FIELDS``).
+"""
+
+import json
+
+import pytest
+
+from repro.core import Weaver, WeaverConfig
+from repro.core.faultinject import FaultPlan
+from repro.core.obs import (OBS_COUNTER_FIELDS, attribution_table,
+                            check_completeness, export_trace,
+                            run_invariant_checks, validate_trace_events)
+
+
+def _tx_read_workload(rate: float, seed: int = 11):
+    """The equivalence workload: adaptive admission, bounded queues,
+    retry sessions — enough machinery that any tracing side effect
+    (an extra event, an RNG draw) would shift results or counters."""
+    cfg = WeaverConfig(trace_sample_rate=rate, write_group_commit=1e-3,
+                       read_group_commit=1e-3, adaptive_admission=True,
+                       admission_queue_limit=8, read_retry_timeout=4e-3,
+                       seed=seed)
+    w = Weaver(cfg)
+    results = []
+    for i in range(30):
+        tx = w.begin_tx()
+        tx.create_vertex(f"v{i}")
+        if i:
+            tx.create_edge(f"v{i - 1}", f"v{i}")
+        r = w.run_tx(tx)
+        results.append((r.ok, round(r.latency, 12)))
+    for i in range(10):
+        res = w.run_program("count_edges", [(f"v{i}", None)])
+        results.append((res[0], round(res[2], 12)))
+    w.settle()
+    return w, results
+
+
+class TestPureObservation:
+    def test_tracing_changes_nothing(self):
+        """Results and non-obs counters are bit-identical across
+        sampling rates 0.0 / 0.5 / 1.0 on the same seeded workload."""
+        runs = {}
+        for rate in (0.0, 0.5, 1.0):
+            w, results = _tx_read_workload(rate)
+            c = w.counters()
+            for f in OBS_COUNTER_FIELDS:
+                c.pop(f, None)
+            runs[rate] = (results, c)
+        base_res, base_c = runs[0.0]
+        for rate in (0.5, 1.0):
+            res, c = runs[rate]
+            assert res == base_res, f"rate {rate} changed results"
+            diff = {k: (base_c.get(k), c.get(k))
+                    for k in set(base_c) | set(c)
+                    if base_c.get(k) != c.get(k)}
+            assert not diff, f"rate {rate} changed counters: {diff}"
+
+    def test_disabled_tracer_records_nothing(self):
+        w, _ = _tx_read_workload(0.0)
+        assert w.sim.tracer is None
+        assert w.sim.counters.spans_recorded == 0
+
+
+class TestAttribution:
+    def test_stage_sums_match_e2e(self):
+        """The critical-path analyzer tiles every sampled request's
+        root exactly: per-request stage sums equal measured e2e."""
+        w, _ = _tx_read_workload(1.0)
+        tr = w.sim.tracer
+        assert tr.spans and len(tr.traces()) >= 10
+        attr = attribution_table(tr)
+        rows = [r for r in attr["requests"] if "e2e" in r]
+        assert rows, "no complete traces to attribute"
+        assert attr["max_rel_err"] < 0.01, attr["max_rel_err"]
+        for r in rows:
+            assert abs(sum(r["stages"].values()) - r["e2e"]) \
+                <= 0.01 * max(r["e2e"], 1e-12)
+        # the stage taxonomy actually shows up (not everything "network")
+        stages = set(attr["stages"])
+        assert {"gk_stamp", "store_commit"} <= stages, stages
+
+    def test_chrome_trace_export(self, tmp_path):
+        w, _ = _tx_read_workload(1.0)
+        path = tmp_path / "trace.json"
+        doc = export_trace(w.sim.tracer, str(path))
+        assert validate_trace_events(doc) == []
+        on_disk = json.loads(path.read_text())
+        assert validate_trace_events(on_disk) == []
+        evs = on_disk["traceEvents"]
+        assert any(e["ph"] == "X" for e in evs)
+        assert any(e["ph"] == "M" and e["name"] == "thread_name"
+                   for e in evs)
+        # counter parity: every span became exactly one complete event
+        assert sum(e["ph"] == "X" for e in evs) \
+            == w.sim.counters.spans_recorded == len(w.sim.tracer.spans)
+
+
+class TestMetricsTimeline:
+    def test_periodic_sampling_and_hists(self):
+        cfg = WeaverConfig(write_group_commit=1e-3, read_group_commit=1e-3,
+                           adaptive_admission=True, metrics_period=2e-3,
+                           seed=13)
+        w = Weaver(cfg)
+        for i in range(20):
+            tx = w.begin_tx()
+            tx.create_vertex(f"m{i}")
+            assert w.run_tx(tx).ok
+        for i in range(8):
+            w.run_program("get_node", [(f"m{i}", None)])
+        w.settle()
+        m = w.sim.metrics
+        assert w.sim.counters.metrics_samples > 0
+        out = m.export()
+        assert out["timeline"], "periodic timer never sampled"
+        # gauges carry the shared load + queue depth signals
+        names = {k for s in out["timeline"] for k in s}
+        assert any(k.startswith("gk_admitted:") for k in names), names
+        assert any(k.startswith("shard_queue:") for k in names), names
+        # admission histograms moved off the ad-hoc Counters lists
+        assert m.hists.get("admission_window_us_w") \
+            or m.hists.get("admission_window_us_r")
+        c = w.counters()
+        assert "admission_window_hist" not in c
+        assert "admission_depth_hist" not in c
+
+
+class TestTraceInvariantsUnderFaults:
+    """Chaos schedules from the fault-injection harness: every sampled
+    request still yields a complete, invariant-clean trace."""
+
+    @pytest.mark.parametrize("chaos_seed", [0, 2, 4])
+    def test_complete_and_invariant_clean(self, chaos_seed):
+        plan = FaultPlan.random(chaos_seed, n_gk=2, n_shards=3)
+        cfg = WeaverConfig(n_gatekeepers=2, n_shards=3, seed=7,
+                           write_group_commit=0.5e-3,
+                           trace_sample_rate=1.0, fault_plan=plan)
+        w = Weaver(cfg)
+        w.sim.fault.disarm()           # fault-free setup traffic
+        tx = w.begin_tx()
+        tx.create_vertex("hub")
+        assert w.run_tx(tx).ok
+        w.sim.fault.arm()
+        results = {}
+        for i in range(24):
+            v = f"x{i}"
+            tx = w.begin_tx()
+            tx.create_vertex(v)
+            tx.create_edge(v, "hub")
+            w.submit_tx(tx, lambda r, v=v: results.__setitem__(v, r))
+        w.settle(2.0)
+        w.sim.fault.disarm()
+        assert len(results) == 24, "a client session hung"
+
+        tr = w.sim.tracer
+        assert check_completeness(tr) == []
+        checks = run_invariant_checks(tr)
+        for name, findings in checks.items():
+            assert findings == [], (chaos_seed, name, findings[:5])
+        # attribution still tiles the completed requests
+        attr = attribution_table(tr)
+        assert attr["max_rel_err"] < 0.01
+
+
+class TestSharedLoadSignal:
+    def _hammer(self, shared: bool):
+        cfg = WeaverConfig(write_group_commit=1e-3, adaptive_admission=True,
+                           admission_queue_limit=4, shed_nack=True,
+                           shared_load_signal=shared, seed=4)
+        w = Weaver(cfg)
+        done = []
+        # all load on gk0: it saturates and sheds; with the shared
+        # signal its peers (serving the NACK reroutes) see the
+        # deployment-level pressure and grow their windows
+        for i in range(60):
+            tx = w.begin_tx()
+            tx.create_vertex(f"x{i}")
+            w.submit_tx(tx, done.append, gatekeeper=0)
+        while len(done) < 60 and w.sim.pending():
+            w.sim.run(until=w.sim.now + 5e-3)
+        return done, w.counters()
+
+    def test_peer_load_grows_windows(self):
+        done_off, c_off = self._hammer(False)
+        done_on, c_on = self._hammer(True)
+        assert sum(r.ok for r in done_off) == 60
+        assert sum(r.ok for r in done_on) == 60
+        assert c_off["window_grows_shared"] == 0
+        assert c_on["window_grows_shared"] > 0, c_on
+
+
+class TestReadWindowAliasing:
+    def _reads(self, alias: bool):
+        cfg = WeaverConfig(read_group_commit=1e-3, read_window_alias=alias,
+                           seed=5)
+        w = Weaver(cfg)
+        tx = w.begin_tx()
+        tx.create_vertex("a")
+        tx.create_vertex("b")
+        tx.create_edge("a", "b")
+        assert w.run_tx(tx).ok
+        out = [w.run_program("count_edges", [("a", None)])[0]
+               for _ in range(6)]
+        return out, w.sim.counters.read_windows_aliased
+
+    def test_quiescent_reads_alias(self):
+        res_on, aliased_on = self._reads(True)
+        res_off, aliased_off = self._reads(False)
+        assert aliased_on > 0 and aliased_off == 0
+        assert res_on == res_off == [1] * 6
+
+    def test_write_invalidates_alias(self):
+        """A mutation between read windows must bump the seqno and
+        force a fresh stamp — the next read sees the write."""
+        cfg = WeaverConfig(read_group_commit=1e-3, seed=5)
+        w = Weaver(cfg)
+        tx = w.begin_tx()
+        tx.create_vertex("a")
+        tx.create_vertex("b")
+        tx.create_edge("a", "b")
+        assert w.run_tx(tx).ok
+        assert w.run_program("count_edges", [("a", None)])[0] == 1
+        tx = w.begin_tx()
+        tx.create_vertex("c")
+        tx.create_edge("a", "c")
+        assert w.run_tx(tx).ok
+        assert w.run_program("count_edges", [("a", None)])[0] == 2
+
+
+class TestClusteringWireDedup:
+    def _clique_run(self, alias: bool):
+        """Dense 14-clique; repeated clustering queries pinned to gk0 so
+        they share stamps (the round-robin router would otherwise split
+        them across gatekeepers and defeat the same-stamp cache)."""
+        cfg = WeaverConfig(read_group_commit=2e-3, read_window_alias=alias,
+                           seed=7)
+        w = Weaver(cfg)
+        tx = w.begin_tx()
+        N = 14
+        for i in range(N):
+            tx.create_vertex(f"k{i}")
+        for i in range(N):
+            for j in range(N):
+                if i != j:
+                    tx.create_edge(f"k{i}", f"k{j}")
+        assert w.run_tx(tx).ok
+        done = []
+        for _ in range(2):
+            w.submit_program("clustering", [("k0", {"phase": 0})],
+                             lambda r, s, l: done.append(r), gatekeeper=0)
+        while len(done) < 2 and w.sim.pending():
+            w.sim.run(until=w.sim.now + 5e-3)
+        done2 = []
+        w.submit_program("clustering", [("k0", {"phase": 0})],
+                         lambda r, s, l: done2.append(r), gatekeeper=0)
+        while len(done2) < 1 and w.sim.pending():
+            w.sim.run(until=w.sim.now + 5e-3)
+        return (done + done2, w.sim.counters.bytes_sent,
+                w.sim.counters.nbr_rows_cached)
+
+    def test_bytes_regression(self):
+        res_on, bytes_on, cached_on = self._clique_run(alias=True)
+        res_off, bytes_off, cached_off = self._clique_run(alias=False)
+        assert res_on == res_off, "dedup changed clustering results"
+        assert all(r == pytest.approx(1.0) for r in res_on), res_on
+        assert cached_on > cached_off > 0, (cached_on, cached_off)
+        assert bytes_on < bytes_off, \
+            f"aliased windows shipped no fewer bytes ({bytes_on} vs " \
+            f"{bytes_off})"

@@ -140,8 +140,11 @@ class TestReadWindow:
         assert c["prog_batches"] >= 3
         mean = c["prog_batch_size_sum"] / c["prog_batches"]
         assert mean > 1.0, "fixed 300us window never formed a batch"
-        assert any(k.startswith("r:") for k in c["admission_window_hist"])
-        assert any(k.startswith("r:") for k in c["admission_depth_hist"])
+        hists = w.sim.metrics.hists
+        assert hists.get("admission_window_us_r"), \
+            "read admission-window histogram empty"
+        assert hists.get("admission_depth_r"), \
+            "read admission-depth histogram empty"
 
 
 # ---------------------------------------------------------------------------
