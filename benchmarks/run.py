@@ -6,6 +6,10 @@ Prints ``name,metric,value`` CSV lines (simulated time; deterministic).
   nodeprog       — frontier-batched vs per-vertex node programs
   writepath      — group-commit write engine vs per-tx commits
   recovery       — WAL-replay vs store-walk MTTR; goodput dip on failure
+  replication    — change-feed read replicas: read-throughput scaling
+                   with replica count (bit-identical results), in-pod vs
+                   cross-pod read latency, goodput through primary kill
+                   with replica promotion
   serving        — windowed read admission vs per-program; offered-load
                    sweep past saturation with backpressure; SLO curves
   block_query    — Fig. 7 / Table 2 (CoinGraph vs relational explorer)
@@ -25,8 +29,8 @@ silently skipped.
 
 ``--smoke`` (used by ``scripts/ci.sh``) sets ``REPRO_BENCH_SMOKE=1``
 (modules shrink their graph sizes / iteration counts) and runs only the
-snapshot + nodeprog + writepath + recovery + serving + coordination +
-scaling modules — a
+snapshot + nodeprog + writepath + recovery + replication + serving +
+coordination + scaling modules — a
 minutes-scale end-to-end check that the data-plane benchmarks still
 build, run, and meet their equivalence bits (coordination rides along
 so the tau sweep's aggressive-concurrency corner — the historical
@@ -48,12 +52,13 @@ def main(argv=None) -> None:
     if smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
-    from . import (block_query, coordination, nodeprog, recovery, roofline,
-                   scalability, scaling, serving, snapshot, social,
-                   traversal, writepath)
+    from . import (block_query, coordination, nodeprog, recovery,
+                   replication, roofline, scalability, scaling, serving,
+                   snapshot, social, traversal, writepath)
 
     modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
                ("writepath", writepath), ("recovery", recovery),
+               ("replication", replication),
                ("serving", serving), ("block_query", block_query),
                ("social", social), ("traversal", traversal),
                ("scalability", scalability),
@@ -62,6 +67,7 @@ def main(argv=None) -> None:
     if smoke:
         modules = [("snapshot", snapshot), ("nodeprog", nodeprog),
                    ("writepath", writepath), ("recovery", recovery),
+                   ("replication", replication),
                    ("serving", serving), ("coordination", coordination),
                    ("scaling", scaling)]
     t00 = time.time()

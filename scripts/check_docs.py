@@ -48,6 +48,7 @@ def render_bench_table() -> str:
     wp = _bench("BENCH_writepath.json")
     rc = _bench("BENCH_recovery.json")
     sv = _bench("BENCH_serving.json")
+    rp = _bench("BENCH_replication.json")
     x = lambda v: f"{v:.1f}x"
     rows = [
         ("Snapshot engine", "cold columnar build vs seed per-object path",
@@ -91,9 +92,19 @@ def render_bench_table() -> str:
          f"ratio {sv['sweep']['low_load_p99_ratio']:.2f}, goodput past "
          f"saturation {sv['sweep']['goodput_flat']:.2f} of peak)",
          x(sv["saturation"]["speedup"])),
+        ("Replication",
+         f"read throughput with {rp['read_scaling']['rows'][-1]['n_replicas']}"
+         f" change-feed replicas/shard vs none (bit-identical results; "
+         f"in-pod reads "
+         f"{rp['pod_latency']['in_pod_speedup_p50']:.1f}x faster than "
+         f"cross-pod; primary kill -> promotion in "
+         f"{rp['promotion']['recovery_ms']:.0f} ms)",
+         x(rp["read_scaling"]["rows"][-1]["throughput_per_s"]
+           / rp["read_scaling"]["rows"][0]["throughput_per_s"])),
     ]
     eq = all([sn["equivalent"], npg["equivalent"], wp["equivalent"],
-              rc["equivalent"], sv["equivalence"]["equivalent"]])
+              rc["equivalent"], sv["equivalence"]["equivalent"],
+              rp["equivalent"]])
     out = ["| Benchmark | Headline metric | Speedup |", "|---|---|---|"]
     out += [f"| {a} | {b} | **{c}** |" for a, b, c in rows]
     out.append("")
@@ -102,6 +113,7 @@ def render_bench_table() -> str:
                f"writepath={int(wp['equivalent'])} "
                f"recovery={int(rc['equivalent'])} "
                f"serving={int(sv['equivalence']['equivalent'])} "
+               f"replication={int(rp['equivalent'])} "
                f"({'all identical to the scalar oracle' if eq else 'DIVERGED'}).")
     return "\n".join(out)
 

@@ -9,7 +9,10 @@
 # the trace gate (Chrome trace-event schema on the exported smoke
 # trace, plus a generated traced run asserting critical-path stage
 # sums tile each request's e2e latency within 1% and the trace-driven
-# protocol invariants hold), then the docs consistency check
+# protocol invariants hold), then the replication hardening stages
+# (the replica test battery under three distinct PYTHONHASHSEED values
+# — bit-identity must not hinge on dict iteration order — and a forced
+# two-pod replication smoke), then the docs consistency check
 # (README/docs exist, links + WeaverConfig/Counters/module references
 # resolve, README results table matches the checked-in BENCH files).
 # Exits non-zero on ANY failure (pytest failure, benchmark exception,
@@ -41,6 +44,18 @@ echo "=== trace check ==="
 python scripts/check_trace.py trace_serving_smoke.json
 python scripts/check_trace.py
 rm -f trace_serving_smoke.json trace_smoke.json
+
+echo "=== replication tests x3 hash seeds ==="
+# replica reads must be bit-identical to the primary regardless of
+# Python's per-process hash randomization (dict/set iteration order)
+for hs in 0 1 2; do
+    echo "--- PYTHONHASHSEED=$hs ---"
+    PYTHONHASHSEED=$hs python -m pytest -q tests/test_replica.py
+done
+
+echo "=== forced multi-pod smoke ==="
+# two-pod deployment: in-pod replica routing must beat cross-pod reads
+REPRO_FORCE_PODS=1 REPRO_BENCH_SMOKE=1 python -m benchmarks.replication
 
 echo "=== docs check ==="
 python scripts/check_docs.py

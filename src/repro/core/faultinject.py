@@ -34,6 +34,11 @@ by ``WeaverConfig.fault_plan``) evaluates them at two kinds of sites:
   sessions (``read_retry_timeout``), a duplicated one is absorbed by
   shard coalescing plus the coordinator's per-delivery report guard
   (single-hop programs; multi-hop dup semantics are not modeled).
+  Replica change-feed handlers (``feed_pull`` / ``feed_apply`` /
+  ``feed_reset``) are also faultable: strict cursor matching makes a
+  dropped, duplicated or delayed feed response a no-op beyond added
+  lag, which the replica-consistency battery exercises directly
+  (``replica_faults``).
 
 Occurrence counting (``after`` / ``count``) makes every plan
 deterministic for a given workload; :meth:`FaultPlan.random` draws a
@@ -96,9 +101,13 @@ class FaultPlan:
 
     @staticmethod
     def random(seed: int, n_gk: int, n_shards: int, n_crashes: int = 2,
-               msg_faults: bool = True, max_after: int = 6) -> "FaultPlan":
+               msg_faults: bool = True, max_after: int = 6,
+               replica_faults: bool = False) -> "FaultPlan":
         """A seeded randomized kill schedule over every named crash
-        point (the chaos property test's generator)."""
+        point (the chaos property test's generator).  With
+        ``replica_faults`` the plan also hits the change-feed channel:
+        random drop/dup/delay on each feed handler plus one sustained
+        delayed-``feed_apply`` burst that models a lagging replica."""
         rng = np.random.default_rng(seed)
         actors = [f"gk{g}" for g in range(n_gk)] + \
                  [f"shard{s}" for s in range(n_shards)]
@@ -122,6 +131,19 @@ class FaultPlan:
                     k, target=fn, after=int(rng.integers(max_after)),
                     count=1 + int(rng.integers(3)),
                     delay=float(rng.uniform(0.5e-3, 3e-3))))
+        if replica_faults:
+            for fn in ("feed_pull", "feed_apply", "feed_reset"):
+                k = ("drop", "dup", "delay")[int(rng.integers(3))]
+                actions.append(FaultAction(
+                    k, target=fn, after=int(rng.integers(max_after)),
+                    count=1 + int(rng.integers(4)),
+                    delay=float(rng.uniform(0.5e-3, 3e-3))))
+            # sustained replica lag: a burst of delayed feed responses
+            actions.append(FaultAction(
+                "delay", target="feed_apply",
+                after=int(rng.integers(max_after)),
+                count=8 + int(rng.integers(8)),
+                delay=float(rng.uniform(2e-3, 8e-3))))
         return FaultPlan(actions, seed=seed)
 
 
@@ -129,10 +151,12 @@ class FaultInjector:
     """Evaluates a :class:`FaultPlan` deterministically; install as
     ``sim.fault``.  All hits are tallied into the simulator counters."""
 
-    #: handlers message faults may touch (client boundary only — see
-    #: module docstring for why shard channel messages are exempt)
+    #: handlers message faults may touch: client boundary plus the
+    #: replica change-feed channel (see module docstring for why shard
+    #: write channels are exempt)
     FAULTABLE_FNS = ("reply", "submit_tx", "_resubmit", "submit_program",
-                     "deliver_prog_batch")
+                     "deliver_prog_batch",
+                     "feed_pull", "feed_apply", "feed_reset")
 
     def __init__(self, plan: FaultPlan, sim, armed: bool = True):
         self.plan = plan

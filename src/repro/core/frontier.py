@@ -224,17 +224,25 @@ class RaggedReply:
 
     kind = "ragged"
 
-    __slots__ = ("intern", "roots", "offsets", "eids", "dsts", "props")
+    __slots__ = ("intern", "roots", "offsets", "eids", "dsts", "props",
+                 "vals")
 
     def __init__(self, intern, roots: np.ndarray, offsets: np.ndarray,
                  eids: np.ndarray, dsts: np.ndarray,
-                 props: Optional[Dict[str, list]] = None):
+                 props: Optional[Dict[str, list]] = None,
+                 vals=None):
         self.intern = intern
         self.roots = roots                 # (R,) int64 root gids
         self.offsets = offsets             # (R+1,) int64
         self.eids = eids                   # (T,) edge ids
         self.dsts = dsts                   # (T,) int64 dst gids
-        self.props = props                 # key -> (T,)-aligned value list
+        self.props = props                 # key -> (T,)-aligned value list,
+        #                                    OR (T,) int64 value-id columns
+        #                                    when ``vals`` is set
+        # deployment-wide PropIntern value table (shared by construction,
+        # like ``intern``): when present, property columns stay packed
+        # value IDS end to end and rows decode lazily in lists()
+        self.vals = vals
 
     def __len__(self) -> int:
         return int(self.roots.size)
@@ -256,14 +264,20 @@ class RaggedReply:
         vids = self.intern.vids
         eids = self.eids.tolist()
         dsts = self.dsts.tolist()
+        props = self.props
+        if props is not None and self.vals is not None:
+            table = self.vals.vals
+            props = {k: [table[i] if i >= 0 else None
+                         for i in np.asarray(col).tolist()]
+                     for k, col in props.items()}
         out: List[list] = []
         for i in range(len(self)):
             lo, hi = int(self.offsets[i]), int(self.offsets[i + 1])
-            if self.props is None:
+            if props is None:
                 out.append([(eids[p], vids[dsts[p]]) for p in range(lo, hi)])
             else:
                 out.append([(eids[p], vids[dsts[p]],
-                             {k: col[p] for k, col in self.props.items()})
+                             {k: col[p] for k, col in props.items()})
                             for p in range(lo, hi)])
         return out
 

@@ -218,6 +218,18 @@ class Gatekeeper:
         self.read_window_alias = read_window_alias
         self._last_read_stamp: Optional[Stamp] = None
         self._last_read_mut = -1
+        # deployment pod (None = unplaced; Weaver assigns when pods > 1)
+        self.pod: Optional[int] = None
+        # replica read routing (repro.core.replica): Weaver wires the
+        # {sid: [ReplicaShard, ...]} map; primaries broadcast settlement
+        # tokens (stamp -> feed position, incarnation-tagged) and
+        # replicas advertise applied frontiers.  A settled-stamp read
+        # window ships to a caught-up replica (in-pod preferred,
+        # round-robin), falling back to the primary otherwise.
+        self.replicas: Dict[int, List[object]] = {}
+        self._settled: Dict[Tuple, Tuple[int, int]] = {}
+        self._replica_front: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        self._rr_replica = 0
 
     # -- wiring ---------------------------------------------------------------
     def start(self, peers: List["Gatekeeper"], shards: List[object]) -> None:
@@ -1061,9 +1073,62 @@ class Gatekeeper:
                     per_shard.setdefault(sid, []).append(
                         (prog_id, rid, prog_name, stamp, ent, coordinator))
             for sid, dels in per_shard.items():
-                shard = self.shards[sid]
+                shard = self._read_target(sid, stamp)
                 nbytes = 64 + sum(32 + 48 * len(d[4]) for d in dels)
                 self.sim.send(self, shard, shard.deliver_prog_batch, dels,
                               nbytes=nbytes)
 
         self._serve(service, _go)
+
+    # -- replica read routing -------------------------------------------------
+    def on_settled(self, sid: int, stamp_key: Tuple, pos: int,
+                   inc: int) -> None:
+        """Primary broadcast: reads at ``stamp_key`` are covered by feed
+        prefix ``[0, pos)`` of shard ``sid``'s incarnation ``inc``."""
+        if not self.alive:
+            return
+        if len(self._settled) > 20_000:   # bounded; a lost token only
+            self._settled.clear()         # costs a primary-served window
+        self._settled[(sid, stamp_key)] = (pos, inc)
+
+    def on_replica_frontier(self, sid: int, rid: int, inc: int,
+                            pos: int) -> None:
+        """Replica advert: it has applied feed prefix ``[0, pos)`` of
+        its primary's incarnation ``inc``."""
+        if not self.alive:
+            return
+        self._replica_front[(sid, rid)] = (inc, pos)
+
+    def _read_target(self, sid: int, stamp: Stamp):
+        """Pick the server for one window's deliveries to shard ``sid``:
+        a replica iff the window stamp is settled there AND the
+        replica's advertised frontier (same incarnation) covers the
+        settlement position — the stamp-frontier gate that makes
+        replica reads bit-identical, not lucky.  Fresh-stamp windows
+        (no token yet) always go to the primary, which settles them."""
+        reps = self.replicas.get(sid)
+        if not reps:
+            return self.shards[sid]
+        tok = self._settled.get((sid, stamp.key()))
+        if tok is None:
+            return self.shards[sid]
+        pos, inc = tok
+        elig = []
+        for r in reps:
+            front = self._replica_front.get((sid, r.rid))
+            if (r.alive and front is not None
+                    and front[0] == inc and front[1] >= pos):
+                elig.append(r)
+        if not elig:
+            return self.shards[sid]
+        # the primary stays in the rotation: replicas ADD read capacity
+        # rather than move the bottleneck.  In a multi-pod deployment
+        # in-pod servers are preferred when any is eligible (a replica
+        # exists precisely so reads can dodge the cross-pod hop).
+        pool = [self.shards[sid]] + elig
+        if self.pod is not None:
+            inpod = [s for s in pool if s.pod == self.pod]
+            if inpod:
+                pool = inpod
+        self._rr_replica += 1
+        return pool[self._rr_replica % len(pool)]

@@ -498,7 +498,8 @@ class PartitionColumns:
     :class:`CompactionEvent`).
     """
 
-    def __init__(self, n_gk: int, intern: Optional[VidIntern] = None) -> None:
+    def __init__(self, n_gk: int, intern: Optional[VidIntern] = None,
+                 vals: Optional[PropIntern] = None) -> None:
         self.n_gk = n_gk
         self.c = n_gk + 1
         self.intern = intern if intern is not None else VidIntern()
@@ -519,9 +520,14 @@ class PartitionColumns:
         self.e_create_stamp: List[Optional[Stamp]] = []
         self.e_delete_stamp: List[Optional[Stamp]] = []
         self.e_slot: Dict[Tuple[int, int], int] = {}  # (src gid, eid) -> slot
-        # property version columns (per-partition intern tables)
+        # property version columns.  Keys are always interned
+        # per-partition; VALUES may share one deployment-wide table
+        # (Weaver passes it) so ragged replies can ship value IDS and
+        # let the client decode — per-partition ids would be meaningless
+        # off-shard and force eager value decode at the shard.
         self.keys = PropIntern()
-        self.vals = PropIntern()
+        self.vals = vals if vals is not None else PropIntern()
+        self.vals_shared = vals is not None
         self.v_props = _PropTable(self.c)
         self.e_props = _PropTable(self.c)
         # change log
@@ -824,19 +830,22 @@ class MVGraphPartition:
     """One shard's partition of the multi-version graph."""
 
     def __init__(self, n_gk: Optional[int] = None,
-                 intern: Optional[VidIntern] = None) -> None:
+                 intern: Optional[VidIntern] = None,
+                 prop_vals: Optional[PropIntern] = None) -> None:
         self.vertices: Dict[str, MVVertex] = {}
         self._eid = 0
         self._n_gk = n_gk
         self._intern = intern
+        self._prop_vals = prop_vals
         self.columns: Optional[PartitionColumns] = None
         if n_gk is not None:
-            self.columns = PartitionColumns(n_gk, intern)
+            self.columns = PartitionColumns(n_gk, intern, vals=prop_vals)
 
     def _cols(self, ts: Stamp) -> PartitionColumns:
         """Column mirror, created lazily when G is first observable."""
         if self.columns is None:
-            self.columns = PartitionColumns(len(ts.clock), self._intern)
+            self.columns = PartitionColumns(len(ts.clock), self._intern,
+                                            vals=self._prop_vals)
         return self.columns
 
     # ---- write path (called by shard at a transaction's stamp) ----------

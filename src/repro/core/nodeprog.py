@@ -585,15 +585,26 @@ def _get_edges_step(plan, fr, state, ctx) -> None:
     order = np.lexsort((eids, src_idx))   # canonical: eid asc per entry
     pos, eids = pos[order], eids[order]
     props = None
+    vals = None
     want = fr.meta.get("props")
     if want:
         props = {}
+        # deployment-wide value intern (Weaver shares one table across
+        # partitions): ship the packed id columns and let the client
+        # decode lazily; a per-partition table forces eager decode here
+        # because its ids are meaningless off-shard
+        shared = getattr(plan.cols, "vals_shared", False)
         for key in want:
             ids, _ = plan.edge_prop(key)
-            props[key] = [plan.value_of(int(i))
-                          for i in ids[pos].tolist()]
+            if shared:
+                props[key] = ids[pos].astype(np.int64)
+            else:
+                props[key] = [plan.value_of(int(i))
+                              for i in ids[pos].tolist()]
+        if shared:
+            vals = plan.cols.vals
     ctx.output(RaggedReply(ctx.intern, g, ragged_offsets(ln), eids,
-                           plan.edst[pos], props))
+                           plan.edst[pos], props, vals=vals))
 
 
 def _clustering_ok(params) -> bool:

@@ -557,10 +557,37 @@ def _strictly_before(a, b) -> bool:
     return all(x <= y for x, y in zip(av, bv)) and av != bv
 
 
+def check_replica_staleness(tracer: Tracer) -> List[str]:
+    """No read may be served by a replica at a stamp beyond the
+    replica's applied frontier.  Every ``replica_read`` span records the
+    stamp's settlement token (``settle_pos``, the primary feed position
+    that covers the stamp's visible writes) and the serving replica's
+    ``applied_pos`` at execution time; a read served with a missing
+    token or with ``applied_pos < settle_pos`` would be reading a state
+    older than the stamp requires — a staleness violation the
+    frontier-gating protocol exists to prevent."""
+    errs = []
+    for s in tracer.spans:
+        if s.stage != "replica_read":
+            continue
+        settle = s.attrs.get("settle_pos", -1)
+        applied = s.attrs.get("applied_pos", -1)
+        if settle is None or settle < 0:
+            errs.append(f"replica_read span {s.sid} on {s.actor}: "
+                        f"served without a settlement token "
+                        f"(stamp {s.attrs.get('stamp')})")
+        elif applied is None or applied < settle:
+            errs.append(f"replica_read span {s.sid} on {s.actor}: "
+                        f"applied_pos {applied} behind settle_pos "
+                        f"{settle} (stamp {s.attrs.get('stamp')})")
+    return errs
+
+
 def run_invariant_checks(tracer: Tracer) -> Dict[str, List[str]]:
     return {"completeness": check_completeness(tracer),
             "exactly_once": check_exactly_once(tracer),
-            "stamp_monotonic": check_stamp_monotonic(tracer)}
+            "stamp_monotonic": check_stamp_monotonic(tracer),
+            "replica_staleness": check_replica_staleness(tracer)}
 
 
 # ---------------------------------------------------------------------------

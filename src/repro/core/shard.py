@@ -109,7 +109,8 @@ class Shard:
                  plan_cache_entries: int = 4,
                  ack_applies: bool = False,
                  device_plane=None,
-                 incarnation: int = 0):
+                 incarnation: int = 0,
+                 prop_vals=None):
         self.sim = sim
         sim.register(self)
         self.sid = sid
@@ -127,7 +128,11 @@ class Shard:
         # vid intern table is deployment-wide so edge endpoints resolve
         # across partitions in the columnar snapshot path
         self.intern = intern if intern is not None else VidIntern()
-        self.partition = MVGraphPartition(n_gk, self.intern)
+        # optional deployment-wide property-VALUE intern (PropIntern):
+        # when Weaver shares one, ragged replies ship packed value ids
+        self.prop_vals = prop_vals
+        self.partition = MVGraphPartition(n_gk, self.intern,
+                                          prop_vals=prop_vals)
         self.use_frontier = use_frontier
         self.plan_delta = plan_delta     # ShardPlan delta refresh on/off
         self.coalesce = coalesce         # same-(prog, stamp) merge on/off
@@ -174,6 +179,25 @@ class Shard:
         self._shipped_rows: Dict[Tuple, set] = {}
         self._nbr_cache: Dict[Tuple, Dict] = {}
         self._last_plan_kind = "scalar"  # span attr: plan path per exec
+        # deployment pod (None = unplaced; Simulator.send charges a
+        # cross-pod surcharge only between two PLACED actors)
+        self.pod: Optional[int] = None
+        # ---- change-feed replication (see repro.core.replica) --------
+        # When replicas exist (Weaver sets ``replicated``), every fresh
+        # apply appends (stamp, ops) to a bounded feed log replicas pull
+        # (absolute position = feed_base + len(feed_log)), and the drain
+        # loop SETTLES each read stamp the first time a program at it
+        # becomes runnable: at that instant every gatekeeper queue head
+        # is (refined) after the stamp, so — per-gk stamp monotonicity +
+        # oracle commitment — no future write can ever be ordered before
+        # it here, and the current feed position permanently covers the
+        # stamp's visible prefix.  The (stamp -> position) token is
+        # broadcast to gatekeepers (routing) and rides feed responses
+        # (replica read gating).
+        self.replicated = False
+        self.feed_log: List[Tuple[Stamp, List[dict]]] = []
+        self.feed_base = 0
+        self.settled: Dict[Tuple, int] = {}
 
     def start(self, peers: List["Shard"]) -> None:
         self.peers = peers
@@ -404,6 +428,8 @@ class Shard:
         idx = self._runnable_prog_index()
         if idx is not None:
             prog = self.pending_progs.pop(idx)
+            if self.replicated:
+                self._settle_stamp(prog["stamp"])
             extra = self._coalesce_pending(prog) if self.coalesce else []
             service = self._exec_prog(
                 prog["prog_id"], prog["delivery_id"], prog["name"],
@@ -539,6 +565,8 @@ class Shard:
             self.partition.apply_op(op, ts)
         self._applied[ts.key()] = ts
         self._applied_at[ts.key()] = self.sim.now
+        if self.replicated:
+            self.feed_log.append((ts, list(ops)))
         self._ack_applied(gid, [ts])
         service = self.cost.shard_op * max(1, len(ops))
         if ctx is not None:
@@ -717,9 +745,11 @@ class Shard:
         if len(fresh) < len(items):
             self.sim.counters.shard_dedup_skips += len(items) - len(fresh)
         n = self.partition.apply_batch(fresh)
-        for s, _ in fresh:
+        for s, ops in fresh:
             self._applied[s.key()] = s
             self._applied_at[s.key()] = self.sim.now
+            if self.replicated:
+                self.feed_log.append((s, list(ops)))
         return n
 
     def _refine_batch(self, stamps: List[Stamp], at: Stamp) -> Dict:
@@ -1017,6 +1047,118 @@ class Shard:
         self._delivery_ctr = getattr(self, "_delivery_ctr", 0) + 1
         return self._delivery_ctr
 
+    # ------------------------------------------------------ change feed
+    FEED_RETAIN = 1024       # feed entries kept past GC; a replica whose
+    #                          cursor falls off the tail cold-resyncs
+
+    @property
+    def feed_pos(self) -> int:
+        """Absolute change-feed position (monotone per incarnation)."""
+        return self.feed_base + len(self.feed_log)
+
+    def _settle_stamp(self, stamp: Stamp) -> None:
+        """First runnable program at ``stamp``: bind it to the current
+        feed position and tell the gatekeepers — any replica whose
+        applied position reaches the token can serve reads at this stamp
+        bit-identically (no write ordered before the stamp can appear
+        after this instant; see the class-level feed comment)."""
+        k = stamp.key()
+        if k in self.settled:
+            return
+        if len(self.settled) > 10_000:    # size cap, like _prog_cleared;
+            self.settled.clear()          # lost tokens just re-settle
+        pos = self.feed_pos
+        self.settled[k] = pos
+        self.sim.counters.stamps_settled += 1
+        for gk in self.gatekeepers:
+            if getattr(gk, "alive", False):
+                self.sim.send(self, gk, gk.on_settled, self.sid, k, pos,
+                              self.incarnation, nbytes=48)
+
+    def feed_pull(self, replica, cursor: int, sub_inc: int,
+                  seq: int) -> None:
+        """Serve a replica's change-feed pull: entries from ``cursor``
+        plus the current settlement-token map.  A subscriber behind the
+        truncated log tail — or subscribed to a previous incarnation —
+        gets a full-state reset (redo-op walk of the live partition)."""
+        if not self.alive:
+            return
+        self.sim.counters.replica_feed_pulls += 1
+        tokens = dict(self.settled)
+        if sub_inc != self.incarnation or cursor < self.feed_base:
+            ops = self._walk_redo()
+            self.sim.send(self, replica, replica.feed_reset,
+                          self.incarnation, self.feed_pos, ops, tokens,
+                          seq, nbytes=64 + 48 * len(ops))
+            return
+        entries = self.feed_log[cursor - self.feed_base:]
+        self.sim.counters.replica_feed_entries += len(entries)
+        nbytes = (64 + sum(32 + 48 * len(ops) for _, ops in entries)
+                  + 24 * len(tokens))
+        self.sim.send(self, replica, replica.feed_apply, cursor,
+                      entries, tokens, self.incarnation, seq,
+                      nbytes=nbytes)
+
+    def _walk_redo(self) -> List[dict]:
+        """Redo-op stream equivalent to replaying this partition's full
+        history (the same multi-version rebuild contract as the store's
+        ``recover_shard_walk``): applying these ops in order onto a fresh
+        partition reproduces the current state bit-identically."""
+        ops: List[dict] = []
+        for vid in sorted(self.partition.vertices):
+            v = self.partition.vertices[vid]
+            ops.append({"op": "create_vertex", "vid": vid,
+                        "ts": v.create_ts})
+            for key, vers in sorted(v.props.items()):
+                for ver in vers:
+                    ops.append({"op": "set_vertex_prop", "vid": vid,
+                                "key": key, "value": ver.value,
+                                "ts": ver.ts})
+            for eid in sorted(v.out_edges):
+                e = v.out_edges[eid]
+                ops.append({"op": "create_edge", "src": vid, "dst": e.dst,
+                            "eid": eid, "ts": e.create_ts})
+                for key, vers in sorted(e.props.items()):
+                    for ver in vers:
+                        ops.append({"op": "set_edge_prop", "src": vid,
+                                    "eid": eid, "key": key,
+                                    "value": ver.value, "ts": ver.ts})
+                if e.delete_ts is not None:
+                    ops.append({"op": "delete_edge", "src": vid,
+                                "eid": eid, "ts": e.delete_ts})
+            if v.delete_ts is not None:
+                ops.append({"op": "delete_vertex", "vid": vid,
+                            "ts": v.delete_ts})
+        return ops
+
+    def adopt_replica(self, rep, ops: List[dict]) -> int:
+        """Failover fast path: promote a caught-up read replica by
+        adopting its partition + applied map, then top up from the
+        store's redo stream with only the ops the replica had not yet
+        pulled — MTTR proportional to replica lag, not partition size.
+        Returns the number of topped-up ops."""
+        self.partition = rep.partition
+        self._plans.clear()
+        self._applied = dict(rep._applied)
+        self._applied_at = dict(rep._applied_at)
+        missing = [op for op in ops
+                   if op["ts"].key() not in self._applied]
+        tr = self.sim.tracer
+        for op in missing:
+            ts = op["ts"]
+            self.partition.apply_op(op, ts)
+            self._applied[ts.key()] = ts
+            self._applied_at[ts.key()] = self.sim.now
+            if tr is not None:
+                ctx = tr.ctx_for_stamp(ts)
+                if ctx is not None:
+                    # same recovered-apply exemption as recover_from
+                    tr.span("shard_apply", self.sim.now, self.sim.now,
+                            actor=self.name, ctx=ctx, shard=self.sid,
+                            incarnation=self.incarnation, recovered=True,
+                            stamp=stamp_attr(ts))
+        return len(missing)
+
     # ------------------------------------------------------------------ GC / recovery
     def collect(self, horizon: Stamp) -> int:
         # past-horizon dedup entries stay until no client retry session
@@ -1041,6 +1183,12 @@ class Shard:
                   if compare(Stamp(k[1][0], k[1][1], k[1][2], 0),
                              horizon) is Order.BEFORE]:
             del self._nbr_cache[k]
+        # change-feed truncation: keep a bounded tail; a replica whose
+        # cursor falls behind feed_base rebuilds via the redo walk
+        if len(self.feed_log) > self.FEED_RETAIN:
+            cut = len(self.feed_log) - self.FEED_RETAIN
+            del self.feed_log[:cut]
+            self.feed_base += cut
         return self.partition.collect(horizon)
 
     def recover_from(self, ops: List[dict]) -> None:
@@ -1050,10 +1198,16 @@ class Shard:
         ``set_edge_prop`` — and its stamp is remembered, so slices of
         already-durable transactions re-forwarded by the exactly-once
         retry path are skipped, never double-applied."""
-        self.partition = MVGraphPartition(self.n_gk, self.intern)
+        self.partition = MVGraphPartition(self.n_gk, self.intern,
+                                          prop_vals=self.prop_vals)
         self._plans.clear()              # plans referenced the old columns
         self._applied = {}
         self._applied_at = {}
+        # fresh incarnation, fresh feed: subscribers detect the
+        # incarnation change on their next pull and cold-resync
+        self.feed_log = []
+        self.feed_base = 0
+        self.settled = {}
         for op in ops:
             ts = op["ts"]
             self.partition.apply_op(op, ts)

@@ -41,6 +41,10 @@ class NetworkModel:
     bandwidth: float = 125e6            # 1 Gb/s in bytes/sec
     jitter_frac: float = 0.05           # +-5% multiplicative jitter
     local_latency: float = 2e-6         # same-process handoff
+    cross_pod_latency: float = 1.5e-3   # extra one-way latency when the
+    #                                     sender and receiver sit in
+    #                                     different deployment pods (WAN
+    #                                     hop; see WeaverConfig.pods)
 
     def delay(self, nbytes: int, rng: np.random.Generator, local: bool = False) -> float:
         if local:
@@ -164,6 +168,28 @@ class Counters:
     #                                re-sending the packed values
     spans_recorded: int = 0        # [obs] trace spans recorded
     metrics_samples: int = 0       # [obs] metrics timeline rows sampled
+    cross_pod_msgs: int = 0        # messages that paid the cross-pod
+    #                                latency surcharge (sender and
+    #                                receiver in different pods)
+    stamps_settled: int = 0        # read stamps a primary shard marked
+    #                                settled (mapped to a change-feed
+    #                                position and broadcast to
+    #                                gatekeepers for replica routing)
+    replica_feed_pulls: int = 0    # change-feed pull requests received
+    #                                by primaries from replicas
+    replica_feed_entries: int = 0  # feed (stamp, ops) entries shipped
+    #                                to replicas in pull responses
+    replica_cold_resyncs: int = 0  # replica full-state rebuilds (feed
+    #                                truncated past the replica's cursor
+    #                                or primary incarnation changed)
+    replica_reads_served: int = 0  # read executions served by a replica
+    #                                instead of its primary
+    replica_read_handoffs: int = 0  # replica-routed reads forwarded
+    #                                 back to the primary (settlement
+    #                                 token unavailable at the replica)
+    replica_promotions: int = 0    # failovers that promoted a caught-up
+    #                                replica (partition adopted, WAL
+    #                                top-up instead of full replay)
 
     def snapshot(self) -> dict:
         return {k: (dict(v) if isinstance(v, dict) else v)
@@ -222,6 +248,15 @@ class Simulator:
         """
         self.counters.messages_sent += 1
         self.counters.bytes_sent += nbytes
+        # deployment pods: a message between actors placed in different
+        # pods pays a deterministic WAN surcharge (no extra RNG draw, so
+        # single-pod runs are bit-identical to pre-pod builds)
+        pod_extra = 0.0
+        sp = getattr(src, "pod", None)
+        dp = getattr(dst, "pod", None)
+        if sp is not None and dp is not None and sp != dp:
+            pod_extra = self.network.cross_pod_latency
+            self.counters.cross_pod_msgs += 1
         extra = 0.0
         if self.fault is not None:
             verdict, extra = self.fault.on_send(getattr(fn, "__name__", ""))
@@ -232,11 +267,11 @@ class Simulator:
                 self.counters.msgs_duplicated += 1
                 d2 = self.network.delay(nbytes, self.rng, local=local)
                 heapq.heappush(self._heap,
-                               (self.now + d2, next(self._seq), fn, args,
-                                self._ctx()))
+                               (self.now + d2 + pod_extra, next(self._seq),
+                                fn, args, self._ctx()))
             elif verdict == "delay":
                 self.counters.msgs_delayed += 1
-        d = self.network.delay(nbytes, self.rng, local=local) + extra
+        d = self.network.delay(nbytes, self.rng, local=local) + extra + pod_extra
         t = self.now + d
         key = (getattr(src, "_sim_id", -1), getattr(dst, "_sim_id", -1))
         prev = self._channel_clock.get(key, 0.0)

@@ -19,9 +19,10 @@ from .clock import Stamp, compare, Order, zero
 from .cluster import ClusterManager, HeartbeatSender
 from .faultinject import FaultInjector
 from .gatekeeper import CostModel, Gatekeeper, SHED_NACK
-from .mvgraph import VidIntern
+from .mvgraph import PropIntern, VidIntern
 from .nodeprog import REGISTRY
 from .oracle import OracleServer
+from .replica import ReplicaShard
 from .shard import Shard
 from .simulation import NetworkModel, PeriodicTimer, Simulator
 from .store import BackingStore
@@ -58,6 +59,10 @@ class ProgCoordinator:
         self.on_complete: Dict[int, Callable] = {}
         self.on_nack: Dict[int, Callable] = {}
         self.shards: List[Shard] = []
+        # {sid: [ReplicaShard, ...]} — finish/abandon broadcasts reach
+        # replicas too so their per-program state is GC'd (Weaver wires
+        # the live dict)
+        self.replicas: Dict[int, list] = {}
         self.weaver = None
         self.last_prog_stats: dict = {}
 
@@ -111,6 +116,9 @@ class ProgCoordinator:
             }
             for sh in self.shards:
                 sh.finish_prog(prog_id)
+            for reps in self.replicas.values():
+                for rep in reps:
+                    rep.finish_prog(prog_id)
             if self.weaver is not None:
                 self.weaver._prog_finished(prog_id)
             cb = self.on_complete.pop(prog_id, None)
@@ -143,6 +151,9 @@ class ProgCoordinator:
         self.on_nack.pop(prog_id, None)
         for sh in self.shards:
             sh.finish_prog(prog_id)
+        for reps in self.replicas.values():
+            for rep in reps:
+                rep.finish_prog(prog_id)
 
 
 @dataclass
@@ -233,6 +244,25 @@ class WeaverConfig:
     #                                 is unchanged (LastUpdateTable.mutations
     #                                 seqno): shard plan/refinement caches
     #                                 hit warm across windows
+    n_replicas: int = 0          # change-feed read replicas per shard
+    #                              (repro.core.replica): settled-stamp
+    #                              read windows route to caught-up
+    #                              replicas, everything else stays
+    #                              primary-served (0 = no replication)
+    replica_poll_period: float = 1e-3  # replica change-feed pull cadence
+    #                                    in simulated seconds
+    replica_promotion: bool = True  # failover promotes the most caught-
+    #                                 up replica (partition adopted, WAL
+    #                                 top-up of only the missing ops)
+    #                                 instead of a cold full replay
+    pods: int = 1                # deployment pods: gatekeepers/shards/
+    #                              replicas are round-robin assigned and
+    #                              cross-pod messages pay
+    #                              NetworkModel.cross_pod_latency extra
+    #                              (1 = single pod, no surcharge)
+    pod_map: Optional[dict] = None  # explicit {actor name: pod id}
+    #                                 overrides for the round-robin pod
+    #                                 assignment (e.g. {"shard0r0": 1})
     fault_plan: Optional[object] = None  # repro.core.faultinject.FaultPlan
     #                                      (None = no fault injection)
     seed: int = 0
@@ -251,6 +281,10 @@ class Weaver:
         if cfg.fault_plan is not None:
             self.sim.fault = FaultInjector(cfg.fault_plan, self.sim)
         self.intern = VidIntern()       # deployment-wide vid interning
+        # deployment-wide property-VALUE intern: ragged replies ship
+        # packed value ids and decode lazily at the client (per-
+        # partition tables would force eager decode at the shard)
+        self.prop_vals = PropIntern()
         self.store = BackingStore(self.sim, cfg.n_shards, intern=self.intern,
                                   wal_checkpoint_every=cfg.wal_checkpoint_every)
         self.oracle = OracleServer(self.sim)
@@ -283,7 +317,8 @@ class Weaver:
                   coalesce=cfg.frontier_coalesce,
                   plan_cache_entries=cfg.plan_cache_entries,
                   ack_applies=cfg.read_your_writes,
-                  device_plane=self.device_plane)
+                  device_plane=self.device_plane,
+                  prop_vals=self.prop_vals)
             for s in range(cfg.n_shards)
         ]
         for gk in self.gatekeepers:
@@ -293,8 +328,45 @@ class Weaver:
             # the LIST is shared (not copied) so gatekeeper promotions
             # propagate to every shard's ack routing automatically
             sh.gatekeepers = self.gatekeepers
+        # ---- read replicas (repro.core.replica) -----------------------
+        self.replicas: Dict[int, List[ReplicaShard]] = {}
+        if cfg.n_replicas > 0:
+            for sh in self.shards:
+                sh.replicated = True     # keep the change feed
+            for s in range(cfg.n_shards):
+                self.replicas[s] = [
+                    ReplicaShard(self.sim, s, r, cfg.n_gatekeepers,
+                                 self.oracle, cfg.cost, self.store.shard_of,
+                                 self.shards,
+                                 poll_period=cfg.replica_poll_period,
+                                 intern=self.intern,
+                                 use_frontier=cfg.frontier_progs,
+                                 plan_delta=cfg.frontier_plan_delta,
+                                 coalesce=cfg.frontier_coalesce,
+                                 plan_cache_entries=cfg.plan_cache_entries,
+                                 prop_vals=self.prop_vals)
+                    for r in range(cfg.n_replicas)]
+            for reps in self.replicas.values():
+                for rep in reps:
+                    rep.gatekeepers = self.gatekeepers
+            for gk in self.gatekeepers:
+                gk.replicas = self.replicas
+        # ---- pod topology ---------------------------------------------
+        if cfg.pods > 1 or cfg.pod_map:
+            pm = cfg.pod_map or {}
+            for g, gk in enumerate(self.gatekeepers):
+                gk.pod = pm.get(gk.name, g % cfg.pods)
+            for s, sh in enumerate(self.shards):
+                sh.pod = pm.get(sh.name, s % cfg.pods)
+            for s, reps in self.replicas.items():
+                for r, rep in enumerate(reps):
+                    # default placement spreads a shard's replicas over
+                    # the OTHER pods first (geo read locality: some pod
+                    # without the primary still gets an in-pod copy)
+                    rep.pod = pm.get(rep.name, (s + 1 + r) % cfg.pods)
         self.coordinator = ProgCoordinator(self.sim)
         self.coordinator.shards = self.shards
+        self.coordinator.replicas = self.replicas
         self.coordinator.weaver = self
         self._heartbeats = []
         for i, gk in enumerate(self.gatekeepers):
@@ -575,6 +647,14 @@ class Weaver:
                 depth = (sum(len(q) for q in sh.queues.values())
                          + len(sh.pending_progs))
                 m.gauge(f"shard_queue:{sh.sid}", float(depth), now)
+        for reps in self.replicas.values():
+            for rep in reps:
+                if rep.alive:
+                    p = self.shards[rep.sid]
+                    lag = (float(p.feed_pos - rep.applied_pos)
+                           if p.alive and p.incarnation == rep.sub_inc
+                           else -1.0)
+                    m.gauge(f"replica_lag:{rep.name}", lag, now)
         m.sample(now, {"progs_in_flight": len(self.coordinator.active)})
         self.sim.counters.metrics_samples += 1
 
@@ -625,6 +705,12 @@ class Weaver:
         for sh in self.shards:
             if sh.alive:
                 sh.collect(horizon)
+        # replicas GC at the same horizon (their collect also truncates
+        # nothing feed-side — only primaries keep feed logs)
+        for reps in self.replicas.values():
+            for rep in reps:
+                if rep.alive:
+                    rep.collect(horizon)
         self.oracle.oracle.collect(horizon)
         # store-side GC: bound the LastUpdateTable and drop long-deleted
         # StoredVertex records (see BackingStore.collect)
@@ -647,9 +733,26 @@ class Weaver:
                        plan_cache_entries=self.cfg.plan_cache_entries,
                        ack_applies=self.cfg.read_your_writes,
                        device_plane=self.device_plane,
-                       incarnation=inc)
-            nu.recover_from(self.store.recover_shard(
-                sid, use_wal=self.cfg.wal_replay))
+                       incarnation=inc,
+                       prop_vals=self.prop_vals)
+            nu.pod = old.pod
+            nu.replicated = old.replicated or self.cfg.n_replicas > 0
+            ops = self.store.recover_shard(sid, use_wal=self.cfg.wal_replay)
+            reps = [r for r in self.replicas.get(sid, []) if r.alive]
+            best = (max(reps, key=lambda r: r.applied_pos)
+                    if reps and self.cfg.replica_promotion else None)
+            if best is not None:
+                # replica promotion: adopt the most caught-up replica's
+                # partition and top up only the ops it had not pulled
+                best.stop()
+                self.replicas[sid] = [r for r in self.replicas[sid]
+                                      if r is not best]
+                nu.adopt_replica(best, ops)
+                self.sim.counters.replica_promotions += 1
+                for gk in self.gatekeepers:
+                    gk._replica_front.pop((sid, best.rid), None)
+            else:
+                nu.recover_from(ops)
             nu.gatekeepers = self.gatekeepers
             self.shards[sid] = nu
             for sh in self.shards:
@@ -657,6 +760,8 @@ class Weaver:
             for gk in self.gatekeepers:
                 gk.shards = self.shards
                 gk._seq[sid] = 0
+            # surviving replicas detect the new incarnation on their
+            # next pull and cold-resync from the promoted primary
             self.coordinator.shards = self.shards
             self.manager.register_member(name, nu)
             self._heartbeats.append(
@@ -678,6 +783,8 @@ class Weaver:
                             nack_shed=self.cfg.shed_nack,
                             shared_load_signal=self.cfg.shared_load_signal,
                             read_window_alias=self.cfg.read_window_alias)
+            nu.pod = old.pod
+            nu.replicas = self.replicas
             self.gatekeepers[gid] = nu
             nu.start(self.gatekeepers, self.shards)
             # refresh surviving gatekeepers' peer lists (no new timers)
@@ -690,7 +797,17 @@ class Weaver:
 
     def kill(self, name: str) -> None:
         """Test hook: crash a server now (heartbeats stop immediately)."""
-        actor = self.manager.members[name]
+        actor = self.manager.members.get(name)
+        if actor is None:
+            # replicas are not cluster-manager members (no failover for
+            # them); look them up by name directly
+            for reps in self.replicas.values():
+                for rep in reps:
+                    if rep.name == name:
+                        rep.alive = False
+                        rep.stop()
+                        return
+            raise KeyError(name)
         actor.alive = False
 
     # ---- introspection -------------------------------------------------------

@@ -1,0 +1,373 @@
+"""Change-feed read replicas: the replica-consistency battery (ISSUE 10).
+
+The contract under test: a replica-served read at stamp ``w`` is
+**bit-identical** to the primary-served read at ``w`` — not eventually,
+not approximately, but at the same stamp, because replicas only serve
+at stamps the primary has *settled* (bound to a feed position covering
+every write visible at ``w``) and only once their applied position
+reaches that token.  ``frontier.run_local`` — the synchronous primary-
+partition executor every equivalence test in this repo leans on — is
+the oracle: each simulated read's callback immediately re-executes the
+program locally at the SAME stamp and compares.  Verification has to be
+immediate (inside the callback): after a program completes, GC may
+prune the versions its stamp needs, so end-of-run re-execution at old
+stamps would be unsound.
+
+The battery covers the quiet path, randomized chaos (feed drop / dup /
+delay, replica lag bursts, actor crashes — across GC, compaction and
+write churn), primary kill + replica promotion, and the session
+guarantees (read-your-writes, monotonic reads) when consecutive reads
+of one session land on different replicas and pods.
+"""
+
+import pytest
+
+from repro.core import Weaver, WeaverConfig
+from repro.core import frontier as F
+from repro.core.faultinject import FaultAction, FaultPlan
+
+
+def make_weaver(plan=None, **kw):
+    kw.setdefault("n_gatekeepers", 2)
+    kw.setdefault("n_shards", 3)
+    kw.setdefault("n_replicas", 2)
+    kw.setdefault("seed", 7)
+    kw.setdefault("read_group_commit", 1e-3)
+    kw.setdefault("read_window_alias", True)
+    return Weaver(WeaverConfig(fault_plan=plan, **kw))
+
+
+def seed_graph(w, n=16):
+    """A little multi-shard web: a hub, a chain, some props."""
+    tx = w.begin_tx()
+    tx.create_vertex("hub")
+    for i in range(n):
+        tx.create_vertex(f"v{i}")
+    for i in range(n):
+        tx.create_edge(f"v{i}", "hub")
+        if i + 1 < n:
+            tx.create_edge(f"v{i}", f"v{i+1}")
+        tx.set_vertex_prop(f"v{i}", "score", float(i))
+    assert w.run_tx(tx).ok
+    w.settle(50e-3)          # let replicas cold-sync the seed state
+
+
+class BitIdentityChecker:
+    """Read callback factory: every completed read is IMMEDIATELY
+    re-executed on the primary partitions at the same stamp via
+    ``run_local`` and compared.  Collects mismatches instead of raising
+    so a failure reports every divergent read at once."""
+
+    def __init__(self, w):
+        self.w = w
+        self.checked = 0
+        self.unresolved = 0
+        self.mismatches = []
+
+    def cb(self, name, entries):
+        def _cb(r, s, l):
+            if r is None:          # surfaced retry-budget error: the
+                self.unresolved += 1   # session resolved, nothing to check
+                return
+            ref, _ = F.run_local(self.w, name, entries, s)
+            self.checked += 1
+            if r != ref:
+                self.mismatches.append((name, entries, s, r, ref))
+        return _cb
+
+    def assert_clean(self, min_checked):
+        assert not self.mismatches, self.mismatches[:3]
+        assert self.checked >= min_checked, \
+            (self.checked, self.unresolved)
+
+
+READS = [("count_edges", lambda i: [(f"v{i % 16}", None)]),
+         ("traverse", lambda i: [(f"v{i % 16}", {"depth": 0,
+                                                 "max_depth": 2})]),
+         ("get_node", lambda i: [(f"v{i % 16}", None)])]
+
+
+def churn_and_read(w, chk, rounds=8, reads_per_round=4):
+    """Interleave write churn with sequential read windows.  Sequential
+    quiescent reads alias onto one shared stamp: the first window is
+    primary-served (and settles the stamp), later ones are eligible for
+    replica serving — the hot path under test."""
+    for i in range(rounds):
+        tx = w.begin_tx()
+        tx.create_vertex(f"w{i}")
+        tx.create_edge(f"v{i % 16}", f"w{i}")
+        tx.set_vertex_prop(f"v{i % 16}", "score", 100.0 + i)
+        w.submit_tx(tx, lambda r: None)
+        w.settle(2e-3)
+        for j in range(reads_per_round):
+            name, mk = READS[(i + j) % len(READS)]
+            entries = mk(i + j)
+            w.run_program(name, entries, timeout=5.0)
+            # re-submit through the checker path too (async; verified
+            # in-callback whenever it completes)
+            w.submit_program(name, entries, chk.cb(name, entries))
+            w.settle(2e-3)
+    w.settle(0.2)
+
+
+class TestReplicaServing:
+    def test_quiescent_reads_hit_replicas_bit_identically(self):
+        w = make_weaver()
+        seed_graph(w)
+        chk = BitIdentityChecker(w)
+        for j in range(10):
+            name, mk = READS[j % len(READS)]
+            entries = mk(j)
+            w.submit_program(name, entries, chk.cb(name, entries))
+            w.settle(3e-3)
+        w.settle(0.1)
+        chk.assert_clean(min_checked=10)
+        c = w.sim.counters
+        assert c.replica_reads_served > 0, c.snapshot()
+        assert c.stamps_settled > 0
+
+    def test_replicas_off_is_bit_identical_noop(self):
+        """n_replicas=0 keeps the whole feed/settlement machinery cold:
+        zero replica counters, identical results."""
+        w = make_weaver(n_replicas=0)
+        seed_graph(w)
+        out = [w.run_program("count_edges", [("v0", None)])[0]
+               for _ in range(4)]
+        assert out == [out[0]] * 4
+        c = w.sim.counters
+        assert c.replica_feed_pulls == 0
+        assert c.stamps_settled == 0
+        assert c.replica_reads_served == 0
+
+    def test_feed_survives_gc_and_churn(self):
+        """Write churn + periodic GC truncate the feed tail; replicas
+        keep up (or cold-resync) and reads stay bit-identical."""
+        w = make_weaver(gc_period=10e-3)
+        seed_graph(w)
+        chk = BitIdentityChecker(w)
+        churn_and_read(w, chk, rounds=10)
+        chk.assert_clean(min_checked=30)
+        c = w.sim.counters
+        assert c.replica_feed_entries > 0     # incremental path exercised
+        assert c.replica_reads_served > 0
+
+
+class TestReplicaChaos:
+    """Randomized fault schedules over the change-feed channel (drop /
+    dup / delay, sustained lag bursts) plus actor crashes: every
+    resolved read must still be bit-identical to the primary at its
+    stamp — replicas may fall behind or hand reads back, but may never
+    serve a stale or divergent answer."""
+
+    @pytest.mark.parametrize("chaos_seed", [0, 1, 2, 3])
+    def test_chaos_bit_identity(self, chaos_seed):
+        plan = FaultPlan.random(chaos_seed, n_gk=2, n_shards=3,
+                                n_crashes=1, replica_faults=True)
+        w = make_weaver(plan, write_group_commit=0.5e-3,
+                        read_retry_timeout=20e-3,
+                        gc_period=20e-3)
+        w.sim.fault.disarm()
+        seed_graph(w)
+        w.sim.fault.arm()
+        chk = BitIdentityChecker(w)
+        churn_and_read(w, chk, rounds=8)
+        w.sim.fault.disarm()
+        w.settle(0.5)
+        chk.assert_clean(min_checked=16)
+        # the schedule actually hit the feed channel
+        c = w.sim.counters
+        assert (c.msgs_dropped + c.msgs_duplicated + c.msgs_delayed
+                + c.crashes_injected) > 0, c.snapshot()
+
+    def test_feed_faults_only_replicas_still_serve(self):
+        """Feed-channel-only faults (no crashes): strict cursor
+        matching absorbs drop/dup/delay, replicas catch back up and
+        keep serving bit-identically."""
+        plan = FaultPlan([
+            FaultAction("drop", target="feed_apply", after=2, count=3),
+            FaultAction("dup", target="feed_apply", after=6, count=3),
+            FaultAction("delay", target="feed_pull", after=1, count=4,
+                        delay=3e-3),
+            FaultAction("dup", target="feed_reset", after=0, count=2),
+        ])
+        w = make_weaver(plan)
+        w.sim.fault.disarm()
+        seed_graph(w)
+        w.sim.fault.arm()
+        chk = BitIdentityChecker(w)
+        churn_and_read(w, chk, rounds=8)
+        w.sim.fault.disarm()
+        w.settle(0.5)
+        chk.assert_clean(min_checked=24)
+        c = w.sim.counters
+        assert c.msgs_dropped + c.msgs_duplicated + c.msgs_delayed > 0
+        assert c.replica_reads_served > 0, c.snapshot()
+
+
+class TestReplicaPromotion:
+    def test_primary_kill_promotes_most_caught_up_replica(self):
+        w = make_weaver(heartbeat_period=2e-3)
+        seed_graph(w)
+        chk = BitIdentityChecker(w)
+        # pre-kill reads (and their settled stamps)
+        churn_and_read(w, chk, rounds=3)
+        pre = w.run_program("traverse", [("v0", {"depth": 0})])[0]
+        w.kill("shard0")
+        w.settle(0.3)           # heartbeat loss -> promote_backup
+        c = w.sim.counters
+        assert c.replica_promotions == 1, c.snapshot()
+        assert len(w.replicas[0]) == 1    # the promoted one left the pool
+        # bit-identity holds across the promotion: the adopted partition
+        # answers exactly like the dead primary did
+        post = w.run_program("traverse", [("v0", {"depth": 0})])[0]
+        assert post == pre
+        churn_and_read(w, chk, rounds=3)
+        chk.assert_clean(min_checked=12)
+        # survivors resubscribed to the new incarnation
+        assert c.replica_cold_resyncs > w.cfg.n_shards * w.cfg.n_replicas
+
+    def test_promotion_disabled_falls_back_to_wal_recovery(self):
+        w = make_weaver(heartbeat_period=2e-3, replica_promotion=False)
+        seed_graph(w)
+        before = w.run_program("count_edges", [("v0", None)])[0]
+        w.kill("shard0")
+        w.settle(0.3)
+        c = w.sim.counters
+        assert c.replica_promotions == 0
+        assert len(w.replicas[0]) == 2    # pool untouched
+        assert w.run_program("count_edges", [("v0", None)])[0] == before
+
+    def test_killing_a_replica_is_harmless(self):
+        w = make_weaver()
+        seed_graph(w)
+        w.kill("shard0r0")
+        out = [w.run_program("count_edges", [("v0", None)])[0]
+               for _ in range(6)]
+        assert out == [out[0]] * 6
+        assert not w.replicas[0][0].alive
+
+
+class TestSessionGuarantees:
+    """The session guarantees must hold by stamp-frontier gating — not
+    by luck of which server answered — so both tests run with replicas
+    serving, message-delay faults in flight, and assert the replica
+    path was actually taken."""
+
+    def test_read_your_writes_across_replicas(self):
+        """After an acked write, the very next read must see it even
+        when earlier reads were replica-served: the write bumps the
+        store's mutation seqno, so the next window gets a FRESH stamp
+        (never aliased onto a pre-write settled stamp)."""
+        plan = FaultPlan([
+            FaultAction("delay", target="feed_apply", after=0, count=20,
+                        delay=4e-3),
+        ])
+        w = make_weaver(plan, read_your_writes=True)
+        w.sim.fault.disarm()
+        tx = w.begin_tx()
+        tx.create_vertex("s")
+        assert w.run_tx(tx).ok
+        w.settle(50e-3)
+        w.sim.fault.arm()
+        for i in range(10):
+            # warm reads: eligible for replica serving
+            for _ in range(2):
+                assert w.run_program("count_edges", [("s", None)])[0] == i
+            tx = w.begin_tx()
+            tx.create_vertex(f"e{i}")
+            tx.create_edge("s", f"e{i}")
+            assert w.run_tx(tx).ok        # acked = applied (RYW config)
+            # read-your-write: immediately visible, laggy replicas
+            # cannot be chosen for the fresh (unsettled) stamp
+            assert w.run_program("count_edges", [("s", None)])[0] == i + 1
+        w.sim.fault.disarm()
+        assert w.sim.counters.replica_reads_served > 0, \
+            w.counters()
+        assert w.sim.counters.msgs_delayed > 0
+
+    def test_monotonic_reads_across_pods(self):
+        """One session's consecutive reads land on different servers in
+        different pods (round-robin over eligible replicas + primary
+        fallback); the observed counter must never step backwards —
+        per-gatekeeper stamp monotonicity plus frontier gating, not
+        server stickiness."""
+        plan = FaultPlan([
+            FaultAction("delay", target="feed_apply", after=3, count=12,
+                        delay=3e-3),
+            FaultAction("delay", target="feed_pull", after=5, count=8,
+                        delay=2e-3),
+        ])
+        w = make_weaver(plan, pods=2, read_your_writes=True)
+        w.sim.fault.disarm()
+        tx = w.begin_tx()
+        tx.create_vertex("s")
+        assert w.run_tx(tx).ok
+        w.settle(50e-3)
+        w.sim.fault.arm()
+        seen = []
+        done = []
+        for i in range(8):
+            tx = w.begin_tx()
+            tx.create_vertex(f"m{i}")
+            tx.create_edge("s", f"m{i}")
+            w.submit_tx(tx, done.append)
+            # several reads pinned to gk0 while the write settles: some
+            # windows alias (replica-eligible), some are fresh (primary)
+            for _ in range(3):
+                box = []
+                w.submit_program("count_edges", [("s", None)],
+                                 lambda r, s, l: box.append(r),
+                                 gatekeeper=0)
+                while not box and w.sim.pending():
+                    w.sim.run(until=w.sim.now + 2e-3)
+                seen.append(box[0])
+        w.sim.fault.disarm()
+        w.settle(0.3)
+        assert all(b <= a for b, a in zip(seen, seen[1:])), seen
+        assert sum(r.ok for r in done) == 8
+        c = w.sim.counters
+        assert c.replica_reads_served > 0, c.snapshot()
+        assert c.cross_pod_msgs > 0
+
+
+class TestPodTopology:
+    def test_cross_pod_surcharge_only_between_pods(self):
+        """Single-pod deployments never pay the surcharge; multi-pod
+        ones tally every cross-pod hop."""
+        w1 = make_weaver(pods=1)
+        seed_graph(w1, n=4)
+        assert w1.sim.counters.cross_pod_msgs == 0
+        w2 = make_weaver(pods=2)
+        seed_graph(w2, n=4)
+        assert w2.sim.counters.cross_pod_msgs > 0
+
+    def test_pod_map_overrides_round_robin(self):
+        pm = {"gk0": 0, "gk1": 0, "shard0": 0, "shard1": 0, "shard2": 0}
+        for s in range(3):
+            for r in range(2):
+                pm[f"shard{s}r{r}"] = 1
+        w = make_weaver(pods=2, pod_map=pm)
+        assert all(gk.pod == 0 for gk in w.gatekeepers)
+        assert all(sh.pod == 0 for sh in w.shards)
+        assert all(rep.pod == 1 for reps in w.replicas.values()
+                   for rep in reps)
+
+    def test_in_pod_replica_preferred(self):
+        """With one replica co-located with the gatekeepers and one
+        remote, the router prefers the in-pod replica — visible in the
+        ``replica_read`` spans' replica ids."""
+        pm = {"gk0": 0, "gk1": 0}
+        for s in range(3):
+            pm[f"shard{s}"] = 1
+            pm[f"shard{s}r0"] = 0     # in-pod with the gatekeepers
+            pm[f"shard{s}r1"] = 1
+        w = make_weaver(pods=2, pod_map=pm, trace_sample_rate=1.0)
+        seed_graph(w)
+        for j in range(10):
+            w.run_program("count_edges", [("v0", None)])
+            w.settle(2e-3)
+        served = [s for s in w.sim.tracer.spans
+                  if s.stage == "replica_read"]
+        assert served, "no replica-served reads recorded"
+        assert all(s.attrs["replica"] == 0 for s in served), \
+            [(s.attrs["shard"], s.attrs["replica"]) for s in served]
